@@ -1,0 +1,57 @@
+"""Fig. 2 reproduction: per-layer latency + resource under each strategy."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import (
+    FoldingConfig,
+    TPU_V5E,
+    balanced_folding_baseline,
+    network_estimate,
+    run_dse,
+)
+from repro.models.lenet import lenet_layer_specs
+
+HW = TPU_V5E
+BUDGET = 8e6
+
+DENSITIES = {
+    "conv1": (0.5, 0.25), "conv2": (0.5, 0.2),
+    "fc1": (0.6, 0.08), "fc2": (0.6, 0.12), "fc3": (0.6, 0.3),
+}
+
+
+def run() -> List[Dict]:
+    specs = lenet_layer_specs(batch=1, densities=DENSITIES)
+    strategies = {}
+    strategies["fully_folded"] = [FoldingConfig() for _ in specs]
+    strategies["auto_folding"] = balanced_folding_baseline(specs, HW, BUDGET)
+    strategies["unfold"] = [FoldingConfig(parallelism=HW.lanes, unroll="factor")
+                            for _ in specs]
+    res = run_dse(specs, resource_budget=BUDGET)
+    strategies["proposed"] = res.configs
+
+    rows = []
+    for name, cfgs in strategies.items():
+        est = network_estimate(specs, cfgs, HW)
+        for layer in est.per_layer:
+            rows.append({
+                "strategy": name,
+                "layer": layer["name"],
+                "latency_us": layer["total"] * 1e6,
+                "resource_bytes": layer["resource"],
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("strategy,layer,latency_us,resource_bytes")
+    for r in rows:
+        print(f"{r['strategy']},{r['layer']},{r['latency_us']:.6f},"
+              f"{r['resource_bytes']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

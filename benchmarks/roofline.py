@@ -1,0 +1,70 @@
+"""Roofline table: aggregate the dry-run JSON cache into the per-cell
+three-term analysis for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+HBM_PER_CHIP = 16 * 2**30
+
+
+def load_cells(pod: str = "pod1") -> List[Dict]:
+    cells = []
+    for f in sorted(RESULTS.glob(f"*__{pod}.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def rows(pod: str = "pod1") -> List[Dict]:
+    out = []
+    for c in load_cells(pod):
+        row = {"arch": c["arch"], "shape": c["shape"], "status": c["status"]}
+        if c["status"] == "ok":
+            r = c["roofline"]
+            row.update({
+                "compute_s": r["compute"],
+                "memory_s": r["memory"],
+                "collective_s": r["collective"],
+                "bound": r["bound"],
+                "total_s": r["total"],
+                "roofline_frac": (r["compute"] / r["total"]) if r["total"] else 0,
+                "model_flops_ratio": c.get("model_flops_ratio"),
+                "temp_gib": (c["memory_analysis"]["temp_size_in_bytes"] or 0)
+                / 2**30,
+                "fits_hbm": ((c["memory_analysis"]["temp_size_in_bytes"] or 0)
+                             + (c["memory_analysis"]["argument_size_in_bytes"]
+                                or 0)) < HBM_PER_CHIP,
+            })
+        elif c["status"] == "skipped":
+            row["reason"] = c.get("reason", "")
+        else:
+            row["error"] = c.get("error", "")[:120]
+        out.append(row)
+    return out
+
+
+def main():
+    for pod in ("pod1", "pod2"):
+        rs = rows(pod)
+        if not rs:
+            continue
+        print(f"# mesh {'16x16 (256 chips)' if pod == 'pod1' else '2x16x16 (512 chips)'}")
+        print("arch,shape,status,bound,compute_s,memory_s,collective_s,"
+              "roofline_frac,model_flops_ratio,temp_gib,fits_hbm")
+        for r in rs:
+            if r["status"] != "ok":
+                print(f"{r['arch']},{r['shape']},{r['status']},,,,,,,,")
+                continue
+            print(f"{r['arch']},{r['shape']},ok,{r['bound']},"
+                  f"{r['compute_s']:.4g},{r['memory_s']:.4g},"
+                  f"{r['collective_s']:.4g},{r['roofline_frac']:.3f},"
+                  f"{(r['model_flops_ratio'] or 0):.3f},{r['temp_gib']:.1f},"
+                  f"{r['fits_hbm']}")
+    return rows("pod1")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+  table1   — LeNet-5 strategies (Table I): accuracy / latency / throughput /
+             resource / compression + measured CPU speedup
+  fig2     — per-layer latency & resource under 4 strategies (Fig. 2)
+  kernels  — Pallas kernel micro-bench (interpret-mode relative timings +
+             oracle agreement)
+  roofline — 40-cell dry-run roofline table (reads results/dryrun)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _kernel_bench():
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import block_aware_prune, compress, quantize
+    from repro.kernels.sparse_matmul.ops import sparse_linear
+    from repro.kernels.quant_matmul.ops import quant_linear
+
+    rng = np.random.default_rng(0)
+    K = N = 512
+    M = 256
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    mask = block_aware_prune(w, (128, 128), block_density=0.25,
+                             in_block_density=0.5)
+    cl = compress(w, mask, (128, 128), dtype=jnp.float32)
+    q = quantize(w, 8, axis=1)
+
+    rows = []
+
+    def t(name, fn, n=5):
+        fn()  # warm
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append((name, us))
+
+    t("sparse_linear_oracle", lambda: sparse_linear(
+        x, cl, use_kernel=False).block_until_ready())
+    t("quant_linear_oracle", lambda: quant_linear(
+        x, q, use_kernel=False).block_until_ready())
+    dense_w = jnp.asarray(w)
+    t("dense_matmul", lambda: (x @ dense_w).block_until_ready())
+    for name, us in rows:
+        print(f"kernels/{name},{us:.1f},")
+    return rows
+
+
+def main() -> None:
+    sections = sys.argv[1:] or ["table1", "fig2", "kernels", "roofline"]
+    print("name,us_per_call,derived")
+    if "table1" in sections:
+        from . import table1_lenet
+        rows = table1_lenet.run()
+        base = next(r for r in rows if r["strategy"] == "unfold")
+        for r in rows:
+            if r["strategy"] == "measured_cpu":
+                print(f"table1/measured_cpu,{r['compacted_us_per_batch']:.1f},"
+                      f"speedup_vs_dense={r['speedup']:.2f}")
+                continue
+            derived = (f"acc={r['accuracy']};fps={r['throughput_fps']:.0f};"
+                       f"res={r['resource_bytes']:.3g};"
+                       f"comp={r['compression']:.1f}x")
+            if r["strategy"] == "proposed":
+                derived += (f";fps_vs_unfold="
+                            f"{r['throughput_fps']/base['throughput_fps']:.2f}x"
+                            f";lut_vs_unfold="
+                            f"{r['resource_bytes']/base['resource_bytes']:.4f}")
+            print(f"table1/{r['strategy']},{r['latency_us']:.2f},{derived}")
+    if "fig2" in sections:
+        from . import fig2_layerwise
+        for r in fig2_layerwise.run():
+            print(f"fig2/{r['strategy']}/{r['layer']},{r['latency_us']:.3f},"
+                  f"res={r['resource_bytes']:.3g}")
+    if "kernels" in sections:
+        _kernel_bench()
+    if "roofline" in sections:
+        from . import roofline
+        for r in roofline.rows("pod1"):
+            if r["status"] == "ok":
+                print(f"roofline/{r['arch']}/{r['shape']},"
+                      f"{r['total_s']*1e6:.1f},"
+                      f"bound={r['bound']};frac={r['roofline_frac']:.3f}")
+            else:
+                print(f"roofline/{r['arch']}/{r['shape']},,{r['status']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,230 @@
+"""Table I reproduction: LeNet-5 accelerator design strategies.
+
+Strategies (matching the paper's rows):
+  auto_folding    — balanced folding baseline (dense), the FINN-style DSE
+  auto_pruning    — balanced folding + global magnitude pruning (quantised)
+  unfold          — fully unrolled dense
+  unfold_pruning  — fully unrolled + global pruning
+  proposed        — the full LogicSparse DSE (Fig. 1 workflow)
+
+For each: estimated latency (pipeline fill), throughput (1/II), resource
+(VMEM-byte LUT-analogue) from the cost model; accuracy measured on the
+synthetic digit task; compression from the stored-bits accounting; plus a
+*measured* CPU throughput ratio between the masked-dense and the
+engine-free compacted execution paths.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    FoldingConfig,
+    TPU_V5E,
+    balanced_folding_baseline,
+    block_aware_prune,
+    compress,
+    compression_ratio,
+    global_magnitude_prune,
+    network_estimate,
+    quantize,
+    run_dse,
+    sparsity_of,
+)
+from repro.core.cost_model import layer_resource
+from repro.data.synthetic import synthetic_digits
+from repro.models.lenet import (
+    LAYERS,
+    init_lenet,
+    lenet_forward,
+    lenet_layer_specs,
+    lenet_loss,
+)
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+BUDGET = 8e6  # resource budget (bytes-equivalent VMEM fabric)
+PRUNE_SPARSITY = 0.92
+BLOCK = {"fc1": (8, 4), "fc2": (8, 4), "fc3": (4, 2)}
+# operating point matching the paper's 51.6x @ -1.13pt: two-level block
+# pruning on FCs (50% blocks x 25% in-block), 45% magnitude on convs,
+# int4 QAT everywhere (mixed-precision QNN datapath)
+FC_IN_BLOCK_DENSITY = 0.25
+CONV_SPARSITY = 0.45
+QAT_BITS = {"fc1": 4, "fc2": 4, "fc3": 4, "conv1": 4, "conv2": 4}
+FINETUNE_STEPS = 200
+HW = TPU_V5E
+
+
+def train_lenet(steps=80, masks=None, params=None, seed0=0, lr=2e-3,
+                qat=None):
+    # noise high enough that accuracy is non-trivial and pruning deltas show
+    task = synthetic_digits(seed=0, noise=1.1)
+    if params is None:
+        params = init_lenet(jax.random.PRNGKey(0))
+    cfg = AdamWConfig(lr=lr, weight_decay=0.0, warmup_steps=5, total_steps=steps)
+    opt = adamw_init(params, cfg)
+    wmasks = None
+    if masks:
+        wmasks = {k: (jnp.asarray(masks[k[:-2]])
+                      if k.endswith("_w") and k[:-2] in masks else None)
+                  for k in params}
+
+    @jax.jit
+    def step_fn(p, o, x, y):
+        loss, g = jax.value_and_grad(lenet_loss)(p, x, y, masks, qat)
+        p, o, _ = adamw_update(g, o, p, cfg, masks=wmasks)
+        return p, o, loss
+
+    for s in range(steps):
+        x, y = task.batch(seed0 + s, 64)
+        params, opt, _ = step_fn(params, opt, jnp.asarray(x), jnp.asarray(y))
+    return params, task
+
+
+def accuracy(params, task, masks=None, compressed=None, qat=None):
+    x, y = task.batch(77_777, 1024, split="test")
+    logits = lenet_forward(params, jnp.asarray(x), masks=masks,
+                           compressed=compressed, qat_bits=qat)
+    return float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean())
+
+
+def stored_bits(params, masks=None, quant_bits=32, pruned_bits=None) -> float:
+    """Total stored weight bits: pruned layers count nnz × per-layer QAT
+    bits, dense layers count elems × quant_bits (the engine-free format has
+    no per-nnz index cost; block bitmaps are counted)."""
+    total = 0.0
+    for name, kind, shape in LAYERS:
+        n = int(np.prod(shape))
+        if masks and name in masks:
+            nnz = int(np.asarray(masks[name]).sum())
+            b = pruned_bits or QAT_BITS.get(name, 8)
+            total += nnz * b + n / 64  # bitmap overhead
+        else:
+            total += n * quant_bits
+    return total
+
+
+def run() -> List[Dict]:
+    params, task = train_lenet(80)
+    dense_acc = accuracy(params, task)
+
+    # reference global magnitude pruning over FC layers (the paper prunes
+    # the layers its DSE sparse-unfolds; convs stay dense for accuracy)
+    weights = {n: np.asarray(params[n + "_w"]) for n in ("fc1", "fc2", "fc3")}
+    ref = global_magnitude_prune(
+        {k: v.reshape(-1, v.shape[-1]) for k, v in weights.items()},
+        PRUNE_SPARSITY)
+    dens = {n: (0.6, max(0.02, 1 - sparsity_of(ref[n]))) for n in ref}
+    specs = lenet_layer_specs(batch=1, densities={
+        "conv1": (0.5, 0.25), "conv2": (0.5, 0.2), **dens})
+
+    rows = []
+
+    def add(name, cfgs, acc, masks=None, pruned=False):
+        est = network_estimate(specs, cfgs, HW)
+        bits = stored_bits(params, masks if pruned else None,
+                           quant_bits=8 if pruned else 32)
+        rows.append({
+            "strategy": name,
+            "accuracy": round(acc, 4),
+            "latency_us": est.latency * 1e6,
+            "throughput_fps": est.throughput,
+            "resource_bytes": est.resource,
+            "compression": stored_bits(params) / bits if pruned else 1.0,
+            "bottleneck": est.bottleneck,
+        })
+        return est
+
+    # -- auto folding (dense balanced baseline) ----------------------------
+    base_cfgs = balanced_folding_baseline(specs, HW, BUDGET)
+    add("auto_folding", base_cfgs, dense_acc)
+
+    # -- hardware-aware pruning + re-sparse fine-tuning ---------------------
+    # FCs: two-level block-aware pruning (sparse-unfold targets); convs:
+    # global magnitude pruning (they stay folded — in-block unstructured)
+    from repro.core import layer_magnitude_prune
+    masks = {n: block_aware_prune(np.asarray(params[n + "_w"]), BLOCK[n],
+                                  block_density=0.5,
+                                  in_block_density=FC_IN_BLOCK_DENSITY)
+             for n in ("fc1", "fc2", "fc3")}
+    for n in ("conv1", "conv2"):
+        masks[n] = np.asarray(layer_magnitude_prune(
+            np.asarray(params[n + "_w"]), CONV_SPARSITY))
+    pruned_params = dict(params)
+    for n, m in masks.items():
+        pruned_params[n + "_w"] = params[n + "_w"] * m
+    pruned_params, _ = train_lenet(FINETUNE_STEPS, masks=masks,
+                                   params=pruned_params, seed0=2000,
+                                   lr=1.5e-3, qat=QAT_BITS)
+    pruned_acc = accuracy(pruned_params, task, masks=masks, qat=QAT_BITS)
+
+    # -- auto folding + pruning --------------------------------------------
+    prune_cfgs = [c.replace(quant_bits=8) for c in base_cfgs]
+    add("auto_pruning", prune_cfgs, pruned_acc, masks, pruned=True)
+
+    # -- fully unrolled dense ----------------------------------------------
+    unfold_cfgs = [FoldingConfig(parallelism=HW.lanes, unroll="factor")
+                   for _ in specs]
+    add("unfold", unfold_cfgs, dense_acc)
+
+    # -- fully unrolled + pruning (sparse unroll everywhere) ---------------
+    up_cfgs = [FoldingConfig(parallelism=HW.lanes, unroll="sparse",
+                             block_density=s.max_block_density,
+                             element_density=s.max_element_density,
+                             quant_bits=8) for s in specs]
+    add("unfold_pruning", up_cfgs, pruned_acc, masks, pruned=True)
+
+    # -- proposed: full DSE --------------------------------------------------
+    res = run_dse(specs, resource_budget=BUDGET)
+    add("proposed", res.configs, pruned_acc, masks, pruned=True)
+    rows[-1]["dse_moves"] = len(res.trace) - 1
+    rows[-1]["sparse_layers"] = ",".join(res.sparse_layers)
+
+    # -- measured CPU relative throughput (masked dense vs compacted) ------
+    compressed = {}
+    for n in ("fc1", "fc2", "fc3"):
+        w = np.asarray(pruned_params[n + "_w"])
+        q = quantize(w, 8, axis=1)
+        compressed[n] = compress(w, masks[n], BLOCK[n],
+                                 quant_scales=np.asarray(q.scales),
+                                 quant_bits=8)
+    x, _ = task.batch(0, 256)
+    x = jnp.asarray(x)
+    f_dense = jax.jit(lambda p, xx: lenet_forward(p, xx, masks=None))
+    f_comp = jax.jit(lambda p, xx: lenet_forward(p, xx, compressed=compressed))
+    for f, p in ((f_dense, params), (f_comp, pruned_params)):
+        f(p, x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        f_dense(params, x).block_until_ready()
+    t_dense = (time.perf_counter() - t0) / 20
+    t0 = time.perf_counter()
+    for _ in range(20):
+        f_comp(pruned_params, x).block_until_ready()
+    t_comp = (time.perf_counter() - t0) / 20
+    rows.append({
+        "strategy": "measured_cpu",
+        "dense_us_per_batch": t_dense * 1e6,
+        "compacted_us_per_batch": t_comp * 1e6,
+        "speedup": t_dense / t_comp,
+    })
+    return rows
+
+
+def main():
+    rows = run()
+    cols = ["strategy", "accuracy", "latency_us", "throughput_fps",
+            "resource_bytes", "compression", "bottleneck"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(round(r.get(c), 6) if isinstance(r.get(c), float)
+                           else r.get(c, "")) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serve a small LM with continuous batching: requests of different prompt
+lengths and budgets share decode steps through slot reuse.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_config("llama3.2-1b"), n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=4096, head_dim=64,
+        param_dtype="float32", remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch_slots=3, max_len=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(1, 4096, size=n).astype(np.int32),
+                    max_new_tokens=m)
+            for i, (n, m) in enumerate([(5, 12), (9, 8), (3, 20), (7, 6),
+                                        (4, 10)])]
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.perf_counter()
+    engine.run()
+    dt = time.perf_counter() - t0
+    total_new = sum(len(r.out) for r in reqs)
+    print(f"served {len(reqs)} requests / {total_new} tokens in "
+          f"{engine.steps_run} batched steps ({dt:.2f}s, "
+          f"{total_new/dt:.1f} tok/s on CPU)")
+    for r in reqs:
+        print(f"  req{r.uid}: prompt[{len(r.prompt)}] -> {r.out}")
+    assert all(len(r.out) == r.max_new_tokens for r in reqs)
+    # batching actually shared steps:
+    assert engine.steps_run < sum(len(r.prompt) + r.max_new_tokens for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""LogicSparse core: engine-free static sparsity + hardware-aware DSE."""
+from .sparsity import (
+    BlockSparsePattern,
+    CompressedLinear,
+    compress,
+    decompress,
+    compression_ratio,
+    pattern_from_mask,
+)
+from .pruning import (
+    global_magnitude_prune,
+    layer_magnitude_prune,
+    block_aware_prune,
+    apply_masks,
+    masked_update,
+    sparsity_of,
+)
+from .quant import QuantizedTensor, quantize, dequantize, fake_quant, qmax
+from .folding import FoldingConfig, UNROLL_LEVELS
+from .cost_model import (
+    HWSpec,
+    TPU_V5E,
+    LayerSpec,
+    layer_latency,
+    layer_resource,
+    network_estimate,
+    NetworkEstimate,
+)
+from .dse import DSEResult, run_dse, balanced_folding_baseline

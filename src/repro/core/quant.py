@@ -1,0 +1,63 @@
+"""Quantisation for the QNN datapath: symmetric per-channel int8/int4.
+
+* ``quantize`` / ``dequantize`` — storage conversion (host or device).
+* ``fake_quant``                — straight-through-estimator fake quant for
+  QAT / the paper's re-sparse fine-tuning (prune -> fine-tune with the
+  quantised datapath in the loss).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QuantizedTensor", "quantize", "dequantize", "fake_quant", "qmax"]
+
+
+def qmax(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    values: jnp.ndarray  # int8 (int4 packed as int8 range [-7, 7])
+    scales: jnp.ndarray  # f32, per-channel along `axis`
+    axis: int
+    bits: int
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.values.shape
+
+
+def quantize(w, bits: int = 8, axis: int = -1) -> QuantizedTensor:
+    """Symmetric per-channel quantisation along ``axis`` (out-channels)."""
+    w = jnp.asarray(w, dtype=jnp.float32)
+    axis = axis % w.ndim
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+    amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax / qmax(bits), 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -qmax(bits), qmax(bits)).astype(jnp.int8)
+    return QuantizedTensor(values=q, scales=scale.squeeze(), axis=axis, bits=bits)
+
+
+def dequantize(qt: QuantizedTensor) -> jnp.ndarray:
+    shape = [1] * qt.values.ndim
+    shape[qt.axis] = qt.values.shape[qt.axis]
+    return qt.values.astype(jnp.float32) * qt.scales.reshape(shape)
+
+
+def fake_quant(w: jnp.ndarray, bits: int = 8, axis: int = -1) -> jnp.ndarray:
+    """Quantise-dequantise with a straight-through gradient.
+
+    forward:  round(w / s).clip * s       backward:  identity
+    """
+    axis = axis % w.ndim
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis)
+    amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax / qmax(bits), 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -qmax(bits), qmax(bits)) * scale
+    return w + jax.lax.stop_gradient(q - w)

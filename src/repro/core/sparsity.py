@@ -1,0 +1,236 @@
+"""Static two-level sparse weight format — the "engine-free" core.
+
+LogicSparse's FPGA insight: when the sparsity pattern is fixed at compile
+time, the circuit simply omits the pruned multipliers — no sparse engine,
+no runtime scheduling.  The TPU analogue implemented here:
+
+* **Block level** — a boolean bitmap over (bm, bn) weight tiles.  Blocks
+  whose bitmap entry is False are *dropped from the static schedule*: the
+  Pallas kernel grid enumerates only present blocks, and the index maps
+  are Python-level constants baked in at trace time.  Zero blocks cost
+  zero FLOPs, zero HBM traffic, zero VMEM.
+* **Element level** — an unstructured mask *inside* surviving blocks.
+  The MXU computes those blocks densely, so the in-block pattern is free
+  at runtime; it still contributes compression (nnz accounting) and the
+  accuracy flexibility of unstructured pruning.
+
+Both levels are compile-time constants (host numpy), never traced values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "BlockSparsePattern",
+    "CompressedLinear",
+    "compress",
+    "decompress",
+    "compression_ratio",
+    "pattern_from_mask",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSparsePattern:
+    """Static description of a two-level sparse (K, N) weight matrix.
+
+    Attributes
+    ----------
+    shape:        (K, N) logical dense shape.
+    block:        (bm, bn) tile shape; K % bm == 0 and N % bn == 0.
+    bitmap:       bool ndarray (K//bm, N//bn); True = block present.
+    block_rows/block_cols: int32 ndarrays of length n_present — coordinates
+                  of present blocks in row-major order.  These are the
+                  *static schedule*: kernels iterate exactly this list.
+    nnz:          element-level nonzero count (for compression accounting).
+    """
+
+    shape: Tuple[int, int]
+    block: Tuple[int, int]
+    bitmap: np.ndarray
+    block_rows: np.ndarray
+    block_cols: np.ndarray
+    nnz: int
+
+    @property
+    def n_blocks_total(self) -> int:
+        return int(self.bitmap.size)
+
+    @property
+    def n_blocks_present(self) -> int:
+        return int(self.block_rows.size)
+
+    @property
+    def block_density(self) -> float:
+        return self.n_blocks_present / max(1, self.n_blocks_total)
+
+    @property
+    def element_density(self) -> float:
+        return self.nnz / max(1, self.shape[0] * self.shape[1])
+
+    def validate(self) -> None:
+        K, N = self.shape
+        bm, bn = self.block
+        assert K % bm == 0 and N % bn == 0, (self.shape, self.block)
+        assert self.bitmap.shape == (K // bm, N // bn)
+        assert self.block_rows.shape == self.block_cols.shape
+        assert int(self.bitmap.sum()) == self.n_blocks_present
+
+
+def pattern_from_mask(mask: np.ndarray, block: Tuple[int, int]) -> BlockSparsePattern:
+    """Derive the static pattern from an element-level boolean mask."""
+    mask = np.asarray(mask, dtype=bool)
+    K, N = mask.shape
+    bm, bn = block
+    if K % bm or N % bn:
+        raise ValueError(f"mask shape {mask.shape} not divisible by block {block}")
+    blocked = mask.reshape(K // bm, bm, N // bn, bn)
+    bitmap = blocked.any(axis=(1, 3))
+    rows, cols = np.nonzero(bitmap)
+    return BlockSparsePattern(
+        shape=(K, N),
+        block=(bm, bn),
+        bitmap=bitmap,
+        block_rows=rows.astype(np.int32),
+        block_cols=cols.astype(np.int32),
+        nnz=int(mask.sum()),
+    )
+
+
+@dataclasses.dataclass
+class CompressedLinear:
+    """Compile-time-compacted sparse (optionally quantised) weight.
+
+    ``blocks`` holds only the *present* tiles, packed along axis 0 in the
+    order given by ``pattern.block_rows/cols`` — this is the on-HBM layout
+    the kernels consume (gather-free: index maps are static).
+
+    If ``scales`` is not None the blocks are stored as int8 and
+    ``scales[n]`` is the per-output-channel dequant scale (shape (N,)).
+    """
+
+    pattern: BlockSparsePattern
+    blocks: jnp.ndarray  # (n_present, bm, bn)  bf16/f32 or int8
+    scales: Optional[jnp.ndarray] = None  # (N,) f32 per-out-channel
+    bits: int = 16  # storage bits per element (for compression accounting)
+
+    @property
+    def storage_bytes(self) -> int:
+        b = self.blocks.size * self.blocks.dtype.itemsize
+        if self.scales is not None:
+            b += self.scales.size * self.scales.dtype.itemsize
+        # static metadata (bitmap + block coords) lives in the compiled
+        # program, but we account for it honestly:
+        b += int(np.ceil(self.pattern.n_blocks_total / 8))
+        b += self.pattern.block_rows.nbytes + self.pattern.block_cols.nbytes
+        return int(b)
+
+
+def compress(
+    weight: np.ndarray,
+    mask: np.ndarray,
+    block: Tuple[int, int],
+    *,
+    quant_scales: Optional[np.ndarray] = None,
+    quant_bits: int = 8,
+    dtype=jnp.bfloat16,
+) -> CompressedLinear:
+    """Pack a masked dense weight into the static block-compacted format.
+
+    ``quant_scales`` (shape (N,)) switches storage to int8 with fused
+    dequant at matmul time (the QNN datapath of the paper).
+    """
+    weight = np.asarray(weight)
+    mask = np.asarray(mask, dtype=bool)
+    assert weight.shape == mask.shape
+    pattern = pattern_from_mask(mask, block)
+    K, N = pattern.shape
+    bm, bn = block
+    w = (weight * mask).reshape(K // bm, bm, N // bn, bn).transpose(0, 2, 1, 3)
+    packed = w[pattern.block_rows, pattern.block_cols]  # (n_present, bm, bn)
+    if quant_scales is not None:
+        scales = np.asarray(quant_scales, dtype=np.float32)
+        assert scales.shape == (N,)
+        qmax = 2 ** (quant_bits - 1) - 1
+        col_scale = scales[None, None, :].reshape(1, 1, N)
+        col_scale = col_scale.reshape(N // bn, 1, bn)[pattern.block_cols]
+        q = np.clip(np.rint(packed / np.maximum(col_scale, 1e-12)), -qmax, qmax)
+        return CompressedLinear(
+            pattern=pattern,
+            blocks=jnp.asarray(q.astype(np.int8)),
+            scales=jnp.asarray(scales),
+            bits=quant_bits,
+        )
+    return CompressedLinear(
+        pattern=pattern, blocks=jnp.asarray(packed, dtype=dtype), bits=16
+    )
+
+
+def decompress(cl: CompressedLinear) -> jnp.ndarray:
+    """Reconstruct the dense (K, N) weight (oracle / testing path)."""
+    K, N = cl.pattern.shape
+    bm, bn = cl.pattern.block
+    blocks = cl.blocks
+    if cl.scales is not None:
+        col_scale = cl.scales.reshape(N // bn, bn)[cl.pattern.block_cols]  # (P, bn)
+        blocks = blocks.astype(jnp.float32) * col_scale[:, None, :]
+    grid = jnp.zeros((K // bm, N // bn, bm, bn), dtype=blocks.dtype)
+    grid = grid.at[cl.pattern.block_rows, cl.pattern.block_cols].set(blocks)
+    return grid.transpose(0, 2, 1, 3).reshape(K, N)
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def shared_pattern(K: int, N: int, block: Tuple[int, int],
+                   density: float) -> BlockSparsePattern:
+    """Deterministic block bitmap at ~``density``, identical for every
+    layer of a class — identical patterns keep stacked layer parameters
+    scannable (one While body for 126 layers instead of unrolled HLO),
+    which is the TPU-scale analogue of the paper's per-layer static
+    schedule.  Diagonal-striped so every block row and column is covered.
+
+    Real deployments derive the pattern from magnitude pruning
+    (``block_aware_prune``); this synthetic pattern is for perf modelling
+    (dry-run/hillclimb), where only the schedule shape matters.
+    """
+    bm, bn = block
+    nR, nC = K // bm, N // bn
+    stride = max(1, round(1.0 / max(density, 1e-6)))
+    bitmap = np.zeros((nR, nC), dtype=bool)
+    for i in range(nR):
+        for j in range(nC):
+            if (i + j) % stride == 0:
+                bitmap[i, j] = True
+    rows, cols = np.nonzero(bitmap)
+    nnz = int(bitmap.sum()) * bm * bn
+    return BlockSparsePattern(
+        shape=(K, N), block=block, bitmap=bitmap,
+        block_rows=rows.astype(np.int32), block_cols=cols.astype(np.int32),
+        nnz=nnz,
+    )
+
+
+def compression_ratio(
+    shape: Tuple[int, int],
+    nnz: int,
+    *,
+    bits: int = 8,
+    dense_bits: int = 32,
+    index_bits_per_nnz: float = 0.0,
+    block_meta_bits: int = 0,
+) -> float:
+    """Paper's compression metric: dense fp32 bits / compressed bits.
+
+    For the engine-free format the per-nnz index cost is ~0 (the pattern is
+    compiled into the program, mirroring the paper's "weights become wires");
+    we still expose ``block_meta_bits`` to account the bitmap honestly.
+    """
+    dense = shape[0] * shape[1] * dense_bits
+    comp = nnz * (bits + index_bits_per_nnz) + block_meta_bits
+    return dense / max(comp, 1)

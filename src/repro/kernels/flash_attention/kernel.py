@@ -1,0 +1,119 @@
+"""Flash attention (forward) — Pallas TPU kernel with GQA + causal masking.
+
+Why it exists in a LogicSparse repro: the dry-run roofline shows attention
+*score* tensors (Q·Kᵀ, softmax, P·V) dominating HBM traffic for the 4k/32k
+shapes — XLA materialises them, a fused kernel keeps them in VMEM.  This
+kernel is the memory-term hillclimb for the train/prefill cells; the
+analytic "flash adjustment" in the dry-run roofline is backed by this
+implementation (validated in interpret mode against the jnp oracle).
+
+Grid: (B·H, Tq/bq, Tk/bk) with ik innermost; online-softmax state
+(m, l, acc) lives in VMEM scratch; the output tile is emitted once at the
+final k-block.  GQA is handled in the kv index maps (kv head = h // G).
+Fully-masked (future) k-blocks are skipped with ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, n_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        # k-block strictly in the future of every q row -> skip entirely
+        run = (ik * bk) <= (iq * bq + bq - 1)
+
+    @pl.when(run if causal else True)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, Dh)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, Dh)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, Dh)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Tq, H, Dh)
+    k: jnp.ndarray,  # (B, Tk, Hkv, Dh)
+    v: jnp.ndarray,  # (B, Tk, Hkv, Dh)
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Tq, H, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0 and Tq % bq == 0 and Tk % bk == 0
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, Dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, Dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Tk, Dh)
+    n_k = Tk // bk
+
+    def kv_idx(bh, iq, ik):
+        return ((bh // H) * Hkv + (bh % H) // G, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+                          n_k=n_k),
+        grid=(B * H, Tq // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, Dh), kv_idx),
+            pl.BlockSpec((1, bk, Dh), kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda bh, iq, ik: (bh, iq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq, Dh), q.dtype),
+        interpret=interpret,
+        name="logicsparse_flash_attention_fwd",
+    )(qr, kr, vr)
+    return out.reshape(B, H, Tq, Dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,38 @@
+"""Public op: flash attention with XLA-chunked backward.
+
+Forward runs the Pallas kernel (VMEM-fused, no score tensors in HBM);
+backward differentiates the chunked-XLA oracle under remat (the usual
+recompute-in-backward pattern — the fwd kernel's savings carry the fwd and
+the recompute inside bwd; a fused bwd kernel is future work, noted in
+EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...models.layers import chunked_attention
+from .kernel import flash_attention as _fwd_kernel
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = False):
+    return _fwd_kernel(q, k, v, causal=causal, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, interpret):
+    return flash_attention(q, k, v, causal, interpret), (q, k, v)
+
+
+def _bwd(causal, interpret, res, g):
+    q, k, v = res
+
+    def f(q, k, v):
+        return chunked_attention(q, k, v, causal=causal)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,22 @@
+"""jnp oracle for the flash attention kernel (naive softmax attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    B, Tq, H, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kq = jnp.repeat(k, G, axis=2)
+    vq = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) / np.sqrt(Dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((Tq, Tk), bool), k=Tk - Tq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", p, vq.astype(jnp.float32))
+    return o.astype(q.dtype)

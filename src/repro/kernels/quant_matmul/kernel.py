@@ -1,0 +1,73 @@
+"""Quantised dense matmul: int8 weights × f32/bf16 activations, fused dequant.
+
+The QNN datapath for layers the DSE keeps *dense* (folded): weights stream
+from HBM as int8 (halving/quartering memory traffic vs bf16/f32 — these
+layers are memory-bound by construction, so the paper's quantisation is a
+direct roofline win), dequantised in-register against the per-output-channel
+scale, accumulated in f32 on the MXU.
+
+Grid: (m, n, k) with k innermost; the (bm, bn) f32 accumulator lives in
+VMEM scratch and is emitted once at k == n_k - 1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["quant_matmul"]
+
+
+def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _emit():
+        scale = s_ref[0].astype(jnp.float32)  # (bn,) per-out-channel
+        o_ref[...] = (acc_ref[...] * scale[None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def quant_matmul(
+    x: jnp.ndarray,      # (M, K) f32/bf16
+    w_q: jnp.ndarray,    # (K, N) int8
+    scales: jnp.ndarray, # (N,)   f32
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    M, K = x.shape
+    K2, N = w_q.shape
+    assert K == K2 and scales.shape == (N,)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        interpret=interpret,
+        name="logicsparse_quant_matmul",
+    )(x, w_q, scales.reshape(1, N))

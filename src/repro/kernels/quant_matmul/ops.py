@@ -1,0 +1,38 @@
+"""Public op: quantised linear over a QuantizedTensor weight."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.quant import QuantizedTensor
+from .kernel import quant_matmul
+from .ref import quant_matmul_ref
+
+
+def quant_linear(
+    x: jnp.ndarray,
+    qt: QuantizedTensor,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """y = x @ dequant(W). x may be (..., K)."""
+    K, N = qt.values.shape
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, K)
+    scales = qt.scales.reshape(N)
+    if use_kernel:
+        M = xm.shape[0]
+        pad = (-M) % bm
+        if pad:
+            xm = jnp.pad(xm, ((0, pad), (0, 0)))
+        y = quant_matmul(xm, qt.values, scales, bm=bm, bn=bn, bk=bk,
+                         out_dtype=out_dtype, interpret=interpret)
+        if pad:
+            y = y[:M]
+    else:
+        y = quant_matmul_ref(xm, qt.values, scales, out_dtype=out_dtype)
+    return y.reshape(*lead, N)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the quantised matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x, w_q, scales, out_dtype=jnp.float32):
+    w = w_q.astype(jnp.float32) * scales.astype(jnp.float32)[None, :]
+    return jnp.dot(x.astype(jnp.float32), w).astype(out_dtype)

@@ -1,0 +1,175 @@
+"""Engine-free static block-sparse matmul — the LogicSparse datapath on TPU.
+
+``y[M, N] = x[M, K] @ W`` where W is stored block-compacted
+(:class:`repro.core.sparsity.CompressedLinear`): only present (bk, bn)
+blocks exist in HBM, enumerated by static ``block_rows``/``block_cols``.
+
+Engine-free property: the grid, the block coordinate tables and the
+"first block of this output column" flags are **compile-time constants**
+(delivered via TPU scalar prefetch, so index maps read them before the
+grid body runs — exactly the static-schedule analogue of the paper's
+unrolled circuit).  There is no runtime decoding, sorting or load
+balancing: zero blocks simply do not appear in the schedule.
+
+Grid: ``(m_tiles, n_present_blocks)`` with present blocks pre-sorted by
+(output column block, input row block) so every output tile is produced by
+a contiguous run of grid steps — the output BlockSpec revisits the same
+(m, col) tile across that run and accumulates in-place (f32).
+
+Optionally the blocks may be int8 with a per-output-channel dequant scale
+(the paper's quantised datapath); dequant is fused into the accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["block_sparse_matmul"]
+
+
+def _kernel(meta_ref, x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n_steps: int):
+    """meta_ref rows: [row, col, packed_idx, is_first, is_last] per step."""
+    p = pl.program_id(1)
+    is_first = meta_ref[3, p]
+    is_last = meta_ref[4, p]
+
+    @pl.when(is_first == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = w_ref[0]
+    if w.dtype == jnp.int8:
+        # fused dequant: scale is per output channel (bn,)
+        w = w.astype(jnp.float32) * scale_ref[0].astype(jnp.float32)[None, :]
+    acc_ref[...] += jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(is_last == 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _schedule(block_rows: np.ndarray, block_cols: np.ndarray):
+    """Sort present blocks by (col, row); mark first/last of each col run.
+
+    Returns the static schedule: x-row-block, out-col-block, index into the
+    *packed* blocks array, and run boundary flags, per grid step."""
+    order = np.lexsort((block_rows, block_cols))
+    rows = block_rows[order].astype(np.int32)
+    cols = block_cols[order].astype(np.int32)
+    first = np.ones_like(cols)
+    last = np.ones_like(cols)
+    first[1:] = (cols[1:] != cols[:-1]).astype(np.int32)
+    last[:-1] = (cols[1:] != cols[:-1]).astype(np.int32)
+    return rows, cols, order.astype(np.int32), first, last
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_rows", "block_cols", "block", "n_cols", "bm", "interpret", "out_dtype"),
+)
+def _call(
+    x: jnp.ndarray,
+    blocks: jnp.ndarray,
+    scales: Optional[jnp.ndarray],
+    *,
+    block_rows: Tuple[int, ...],
+    block_cols: Tuple[int, ...],
+    block: Tuple[int, int],
+    n_cols: int,
+    bm: int,
+    interpret: bool,
+    out_dtype,
+):
+    M, K = x.shape
+    bk, bn = block
+    N = n_cols * bn
+    rows, cols, packed, first, last = _schedule(
+        np.asarray(block_rows, np.int32), np.asarray(block_cols, np.int32)
+    )
+    P = rows.size
+    meta = jnp.asarray(np.stack([rows, cols, packed, first, last]))  # (5, P)
+
+    if scales is None:
+        scales = jnp.ones((n_cols, bn), jnp.float32)  # unused for float blocks
+    else:
+        scales = scales.reshape(n_cols, bn).astype(jnp.float32)
+
+    grid = (M // bm, P)
+    kernel = functools.partial(_kernel, n_steps=P)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda m, p, meta: (m, meta[0, p])),
+                pl.BlockSpec((1, bk, bn), lambda m, p, meta: (meta[2, p], 0, 0)),
+                pl.BlockSpec((1, bn), lambda m, p, meta: (meta[1, p], 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda m, p, meta: (m, meta[1, p])),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        interpret=interpret,
+        name="logicsparse_block_sparse_matmul",
+    )(meta, x, blocks, scales)
+    return out
+
+
+def block_sparse_matmul(
+    x: jnp.ndarray,
+    blocks: jnp.ndarray,
+    block_rows,
+    block_cols,
+    *,
+    n_row_blocks: int,
+    n_col_blocks: int,
+    scales: Optional[jnp.ndarray] = None,
+    bm: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y = x @ W for a block-compacted W. See module docstring.
+
+    Output columns whose block-column is entirely absent are zero.
+    """
+    bk, bn = int(blocks.shape[1]), int(blocks.shape[2])
+    M, K = x.shape
+    if K != n_row_blocks * bk:
+        raise ValueError(f"K={K} != n_row_blocks*bk={n_row_blocks*bk}")
+    if M % bm:
+        raise ValueError(f"M={M} not divisible by bm={bm}")
+
+    block_cols = np.asarray(block_cols, np.int32)
+    block_rows = np.asarray(block_rows, np.int32)
+    present_cols = np.unique(block_cols)
+    y = block_cols_matmul = _call(
+        x,
+        blocks,
+        scales,
+        block_rows=tuple(int(r) for r in block_rows),
+        block_cols=tuple(int(c) for c in block_cols),
+        block=(bk, bn),
+        n_cols=n_col_blocks,
+        bm=bm,
+        interpret=interpret,
+        out_dtype=out_dtype,
+    )
+    if present_cols.size != n_col_blocks:
+        # columns never visited by the grid hold uninitialised memory (which
+        # may be NaN — where(), not multiply) — zero them with a static mask
+        colmask = np.zeros((n_col_blocks,), bool)
+        colmask[present_cols] = True
+        m = jnp.repeat(jnp.asarray(colmask), bn)
+        y = jnp.where(m[None, :], y, jnp.zeros((), y.dtype))
+    return y

@@ -1,0 +1,47 @@
+"""Public op: sparse linear layer over a CompressedLinear weight."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.sparsity import CompressedLinear
+from .kernel import block_sparse_matmul
+from .ref import block_sparse_matmul_ref
+
+
+def sparse_linear(
+    x: jnp.ndarray,
+    cl: CompressedLinear,
+    *,
+    bm: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """y = x @ W for compile-time-compacted W (optionally int8+scales).
+
+    ``x`` may be (..., K); leading dims are flattened to M for the kernel.
+    ``use_kernel=False`` falls back to the jnp oracle (CPU prod path).
+    """
+    pat = cl.pattern
+    K, N = pat.shape
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, K)
+    kwargs = dict(
+        block_rows=pat.block_rows,
+        block_cols=pat.block_cols,
+        n_row_blocks=pat.bitmap.shape[0],
+        n_col_blocks=pat.bitmap.shape[1],
+        scales=cl.scales,
+        out_dtype=out_dtype,
+    )
+    if use_kernel:
+        M = xm.shape[0]
+        pad = (-M) % bm
+        if pad:
+            xm = jnp.pad(xm, ((0, pad), (0, 0)))
+        y = block_sparse_matmul(xm, cl.blocks, bm=bm, interpret=interpret, **kwargs)
+        if pad:
+            y = y[:M]
+    else:
+        y = block_sparse_matmul_ref(xm, cl.blocks, **kwargs)
+    return y.reshape(*lead, N)

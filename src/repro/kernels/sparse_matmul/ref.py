@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the block-sparse matmul kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def block_sparse_matmul_ref(
+    x: jnp.ndarray,
+    blocks: jnp.ndarray,
+    block_rows,
+    block_cols,
+    *,
+    n_row_blocks: int,
+    n_col_blocks: int,
+    scales: Optional[jnp.ndarray] = None,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Scatter blocks back to dense and matmul in f32."""
+    P, bk, bn = blocks.shape
+    K, N = n_row_blocks * bk, n_col_blocks * bn
+    w = blocks.astype(jnp.float32)
+    if scales is not None:
+        s = scales.reshape(n_col_blocks, bn).astype(jnp.float32)
+        w = w * s[np.asarray(block_cols)][:, None, :]
+    dense = jnp.zeros((n_row_blocks, n_col_blocks, bk, bn), jnp.float32)
+    dense = dense.at[np.asarray(block_rows), np.asarray(block_cols)].set(w)
+    dense = dense.transpose(0, 2, 1, 3).reshape(K, N)
+    return jnp.dot(x.astype(jnp.float32), dense).astype(out_dtype)

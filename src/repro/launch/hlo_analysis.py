@@ -1,0 +1,396 @@
+"""While-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body **once**,
+so a scan-over-layers model under-reports FLOPs/bytes/collectives by the
+trip count (~n_layers × n_microbatches × chunk counts).  Verified in this
+environment: a 10-iteration scan of a matmul reports exactly 1 matmul of
+FLOPs.
+
+This module re-derives the three roofline inputs from the *optimized,
+per-partition* HLO text (``compiled.as_text()``):
+
+* ``flops``        — dot/convolution FLOPs (2 × M × N × K from the dot's
+  shapes and contracting dims);
+* ``coll_bytes``   — per-kind output bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute;
+* ``traffic_bytes``— a *fusion-optimal* HBM traffic estimate: operand +
+  output bytes of dot/convolution ops, output bytes of gather / scatter /
+  dynamic-update-slice (KV-cache writes, embedding reads) and collectives.
+  Elementwise chains are assumed fused (they are, on TPU), so this is the
+  floor of achievable traffic — the honest roofline denominator.  The raw
+  Σ-all-op-outputs proxy is also reported (``traffic_upper_bytes``) as the
+  no-fusion upper bound;
+
+with every computation's cost multiplied by the trip count of the while
+loops that call it (trip counts parsed from the canonical
+``compare(iv, constant), direction=LT`` in loop conditions).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\/ ]+?)\s+"
+    r"([\w\-]+)(?:\.\d+)?\(")
+_CALLED_RE = re.compile(r"(?:body|condition|to_apply|called_computations=\{|calls)=%?([\w\.\-]+)")
+_FUSION_CALL_RE = re.compile(r"calls=%?([\w\.\-]+)")
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + list of (dtype, dims) for every tensor in a type str."""
+    total, shapes = 0, []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",")] if dims_s else []
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, dims))
+    return total, shapes
+
+
+def _operand_names(line: str, opname: str) -> List[str]:
+    """Operand instruction names from 'op(%a, %b, ...)' (optimized HLO has
+    bare names, no inline types)."""
+    m = re.search(rf"{opname}(?:\.\d+)?\(([^)]*)\)", line)
+    if not m:
+        return []
+    out = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        # tokens may be 'f32[...] %name' (unoptimized) or '%name'
+        mm = re.search(r"%([\w\.\-]+)\s*$", tok)
+        if mm:
+            out.append(mm.group(1))
+    return out
+
+
+def _dot_flops(line: str, symtab: Dict[str, List[int]]) -> float:
+    """2 * out_elems * K; K = product of lhs contracting dims (looked up
+    from the per-computation symbol table)."""
+    m = _OP_RE.match(line)
+    if not m:
+        return 0.0
+    _, out_shapes = _shape_info(m.group(2))
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    ops = _operand_names(line, "dot")
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    k = 1
+    if cd and ops and ops[0] in symtab:
+        dims = symtab[ops[0]]
+        for i in cd.group(1).split(","):
+            if i != "" and int(i) < len(dims):
+                k *= dims[int(i)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(line: str, symtab: Dict[str, List[int]]) -> float:
+    """2 * out_elems * (kernel elems / out_features) — standard conv MACs."""
+    m = _OP_RE.match(line)
+    if not m:
+        return 0.0
+    _, out_shapes = _shape_info(m.group(2))
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    ops = _operand_names(line, "convolution")
+    k = 1
+    if len(ops) >= 2 and ops[1] in symtab:
+        dims = symtab[ops[1]]
+        if dims:
+            kernel_elems = 1
+            for d in dims:
+                kernel_elems *= d
+            # MACs per output element = kernel_elems / out_features; the
+            # out-features count appears as one of the out-shape dims.
+            out_feat = out_shapes[0][1][-1] if out_shapes[0][1] else 1
+            k = max(1, kernel_elems // max(1, out_feat))
+    return 2.0 * out_elems * k
+
+
+_SKIP_OUTPUT_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
+    "iota",
+}
+
+
+_SCOPES = ("chunked_attention", "decode_attention", "moe_apply",
+           "mlstm", "mamba", "slstm")
+
+
+def _scope_of(line: str) -> str:
+    m = re.search(r'op_name="([^"]*)"', line)
+    if not m:
+        return "other"
+    nm = m.group(1)
+    for s in _SCOPES:
+        if s in nm:
+            return s
+    return "other"
+
+
+class _Computation:
+    __slots__ = ("name", "flops", "coll", "traffic", "traffic_upper",
+                 "traffic_scope", "whiles", "calls", "trip_hint")
+
+    def __init__(self, name):
+        self.name = name
+        self.flops = 0.0
+        self.coll = {k: 0.0 for k in _COLLECTIVES}
+        self.traffic = 0.0        # fusion-optimal estimate
+        self.traffic_upper = 0.0  # sum of all op outputs (no-fusion bound)
+        self.traffic_scope: Dict[str, float] = {}  # jax-scope attribution
+        self.whiles: List[Tuple[str, str, Optional[int]]] = []  # (body, cond, known_trip)
+        self.calls: List[str] = []               # fusions / to_apply etc.
+        self.trip_hint: Optional[int] = None     # parsed from condition
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    """Group instruction lines by enclosing computation."""
+    blocks: Dict[str, List[str]] = {}
+    cur: Optional[List[str]] = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if not s:
+            continue
+        # computation header: '%name (args) -> type {' or 'ENTRY %name ...{'
+        if s.endswith("{") and ("(" in s) and ("=" not in s.split("(")[0]):
+            name = s.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+            cur = blocks.setdefault(name, [])
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and "=" in s:
+            cur.append(raw)
+    return blocks
+
+
+def parse_hlo(text: str) -> Dict[str, "_Computation"]:
+    comps: Dict[str, _Computation] = {}
+    for name, lines in _split_computations(text).items():
+        c = comps.setdefault(name, _Computation(name))
+        # pass 1: symbol table  %name -> dims / bytes, scalar constants
+        symtab: Dict[str, List[int]] = {}
+        symbytes: Dict[str, int] = {}
+        const_val: Dict[str, int] = {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            b, shapes = _shape_info(m.group(2))
+            if shapes:
+                symtab[m.group(1)] = shapes[0][1]
+                symbytes[m.group(1)] = b
+            if m.group(3) == "constant":
+                cm = re.search(r"constant\((\d+)\)", line)
+                if cm and re.search(r"=\s*[su]\d+\[\]", line):
+                    const_val[m.group(1)] = int(cm.group(1))
+        # pass 2: costs
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            opname = m.group(3)
+            out_bytes, _ = _shape_info(m.group(2))
+            if opname in ("dot", "convolution"):
+                if opname == "dot":
+                    c.flops += _dot_flops(line, symtab)
+                else:
+                    c.flops += _conv_flops(line, symtab)
+                # fusion-optimal traffic: operands (weights/activations
+                # stream from HBM) + output
+                tb = out_bytes
+                for op in _operand_names(line, opname):
+                    tb += symbytes.get(op, 0)
+                c.traffic += tb
+                sc = _scope_of(line)
+                c.traffic_scope[sc] = c.traffic_scope.get(sc, 0.0) + tb
+            elif opname in _COLLECTIVES:
+                c.coll[opname] += out_bytes
+                c.traffic += out_bytes
+            elif opname == "dynamic-update-slice":
+                # in-place via buffer aliasing on TPU: traffic = the update
+                # operand (operand 1), not the whole aliased buffer
+                ops = _operand_names(line, opname)
+                c.traffic += symbytes.get(ops[1], 0) if len(ops) > 1 else 0
+            elif opname == "scatter":
+                ops = _operand_names(line, opname)
+                c.traffic += symbytes.get(ops[-1], out_bytes) if ops else out_bytes
+            elif opname in ("gather", "dynamic-slice", "sort"):
+                c.traffic += out_bytes
+            elif opname == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", line)
+                cond = re.search(r"condition=%?([\w\.\-]+)", line)
+                # XLA annotates statically-known trip counts on the op:
+                # backend_config={"known_trip_count":{"n":"10"},...}
+                ktc = re.search(r"known_trip_count[^\d]*(\d+)", line)
+                if body and cond:
+                    c.whiles.append(
+                        (body.group(1), cond.group(1),
+                         int(ktc.group(1)) if ktc else None))
+            elif opname in ("fusion", "call", "conditional", "custom-call",
+                            "reduce", "sort", "scatter", "map",
+                            "reduce-window", "select-and-scatter",
+                            "async-start"):
+                for mm in _CALLED_RE.finditer(line):
+                    c.calls.append(mm.group(1))
+                for mm in re.finditer(r"called_computations=\{([^}]*)\}", line):
+                    for nm in mm.group(1).split(","):
+                        c.calls.append(nm.strip().lstrip("%"))
+            if opname == "compare" and "direction=LT" in line:
+                ops = _operand_names(line, "compare")
+                if len(ops) == 2 and ops[1] in const_val:
+                    c.trip_hint = const_val[ops[1]]
+                else:
+                    cm = re.search(r"constant\((\d+)\)", line)
+                    if cm:
+                        c.trip_hint = int(cm.group(1))
+            if opname not in _SKIP_OUTPUT_OPS:
+                c.traffic_upper += out_bytes
+    return comps
+
+
+def _trip_count(comps, cond_name: str, default: int = 1) -> Optional[int]:
+    """Trip count from the condition computation (searching through any
+    fused callees). Returns None when unknown."""
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        nm = stack.pop()
+        if nm in seen:
+            continue
+        seen.add(nm)
+        cond = comps.get(nm)
+        if cond is None:
+            continue
+        if cond.trip_hint:
+            return max(1, cond.trip_hint)
+        stack.extend(cond.calls)
+    return None
+
+
+def aggregate(comps: Dict[str, "_Computation"], entry: str) -> Dict[str, float]:
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def total(name: str, depth=0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        zero = {"flops": 0.0, "traffic": 0.0, "traffic_upper": 0.0,
+                "count_unknown_trip": 0.0,
+                **{f"coll:{k}": 0.0 for k in _COLLECTIVES}}
+        if c is None or depth > 64:
+            return zero
+        memo[name] = dict(zero)  # cycle guard
+        out = dict(zero)
+        out["flops"] += c.flops
+        out["traffic"] += c.traffic
+        out["traffic_upper"] += c.traffic_upper
+        for sc, v in c.traffic_scope.items():
+            out[f"scope:{sc}"] = out.get(f"scope:{sc}", 0.0) + v
+        for k in _COLLECTIVES:
+            out[f"coll:{k}"] += c.coll[k]
+        for callee in c.calls:
+            sub = total(callee, depth + 1)
+            for k in set(out) | set(sub):
+                out[k] = out.get(k, 0.0) + sub.get(k, 0.0)
+        for body, cond, ktc in c.whiles:
+            trips = ktc if ktc else _trip_count(comps, cond)
+            if trips is None:
+                trips = 1
+                out["count_unknown_trip"] += 1
+            subb = total(body, depth + 1)
+            subc = total(cond, depth + 1)
+            for k in set(out) | set(subb) | set(subc):
+                out[k] = out.get(k, 0.0) + trips * (
+                    subb.get(k, 0.0) + subc.get(k, 0.0))
+        memo[name] = out
+        return out
+
+    return total(entry)
+
+
+def find_entry(comps: Dict[str, "_Computation"], text: str) -> str:
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", text)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: computation with most whiles/flops
+    return max(comps, key=lambda n: comps[n].flops + comps[n].traffic)
+
+
+def analyse_hlo(text: str) -> Dict[str, float]:
+    comps = parse_hlo(text)
+    entry = find_entry(comps, text)
+    agg = aggregate(comps, entry)
+    coll_total = sum(agg[f"coll:{k}"] for k in _COLLECTIVES)
+    return {
+        "flops": agg["flops"],
+        "traffic_bytes": agg["traffic"],
+        "traffic_upper_bytes": agg["traffic_upper"],
+        "traffic_by_scope": {k[len("scope:"):]: v for k, v in agg.items()
+                             if k.startswith("scope:")},
+        "collective_bytes": coll_total,
+        "collectives": {k: agg[f"coll:{k}"] for k in _COLLECTIVES},
+        "unknown_trip_whiles": agg["count_unknown_trip"],
+        "entry": entry,
+        "n_computations": len(comps),
+    }
+
+
+# ------------------------------------------------------------------ roofline
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    *,
+    n_chips: int,
+    per_device: bool = True,
+    peak_flops: float = 197e12,
+    hbm_bw: float = 819e9,
+    ici_bw: float = 50e9,
+) -> Dict[str, float]:
+    """Three roofline terms in seconds (inputs are per-device — optimized
+    HLO is per-partition after SPMD)."""
+    div = 1.0 if per_device else float(n_chips)
+    compute = flops / div / peak_flops
+    memory = hbm_bytes / div / hbm_bw
+    collective = coll_bytes / ici_bw
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    terms["bound"] = max(("compute", "memory", "collective"),
+                         key=lambda k: terms[k])
+    terms["total"] = max(compute, memory, collective)
+    return terms
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Back-compat helper: while-aware collective byte totals."""
+    r = analyse_hlo(hlo_text)
+    out = dict(r["collectives"])
+    out["total"] = r["collective_bytes"]
+    return out

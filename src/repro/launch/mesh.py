@@ -1,0 +1,36 @@
+"""Production mesh builders.
+
+Kept as functions so importing this module never touches jax device state
+(device count is locked at first jax init — dryrun.py sets XLA_FLAGS before
+anything else).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "data_axes", "mesh_size"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Single-device mesh with the production axis names (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The axes batch data is sharded over (pod folds into data)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def mesh_size(mesh, axis: str) -> int:
+    names = mesh.axis_names
+    if axis not in names:
+        return 1
+    return mesh.devices.shape[names.index(axis)]

@@ -1,0 +1,204 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+The DSE's *folding over chips* materialises here: tensor-parallel (TP)
+shardings for every projection class, FSDP extension over the data axes for
+weight residency, ZeRO-sharded optimizer moments, and shape-dependent KV
+cache layouts (head-sharded when n_kv_heads divides the model axis,
+sequence-sharded otherwise — the long-context serving trick).
+
+Rules are name-based over the parameter tree paths, so every architecture
+family gets consistent treatment without per-model boilerplate.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig
+from .mesh import data_axes, mesh_size
+
+PyTree = Any
+
+# (path-substring, spec for the *trailing* dims of the unstacked param)
+# first match wins; stacked layer dims are padded with None on the left.
+_TP_RULES = [
+    ("w_blk", P("model", None, None)),    # sparse: packed block axis over TP
+    ("embed", P("model", None)),          # vocab-sharded embedding
+    ("head", P(None, "model")),           # vocab-sharded unembedding
+    ("frontend_proj", P(None, None)),
+    ("router", P(None, None)),
+    ("slstm", P(None)),                   # sLSTM fully replicated (see DESIGN)
+    ("eg", P(None, None, "model")),       # MoE experts: TP over expert FFN dim
+    ("eu", P(None, None, "model")),
+    ("ed", P(None, "model", None)),
+    ("wq", P(None, "model")),             # column-parallel in
+    ("wk", P(None, "model")),
+    ("wv", P(None, "model")),
+    ("wg", P(None, "model")),
+    ("wu", P(None, "model")),
+    ("win", P(None, "model")),
+    ("wif", P(None, "model")),
+    ("wog", P(None, "model")),
+    ("wx", P(None, "model")),
+    ("wo", P("model", None)),             # row-parallel out
+    ("wd", P("model", None)),
+    ("wout", P("model", None)),
+    ("conv", P(None, "model")),           # mamba conv kernel: channel-sharded
+]
+
+_FSDP_MIN_ELEMS = 1 << 20
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _tp_spec(pstr: str, ndim: int) -> Tuple:
+    for frag, spec in _TP_RULES:
+        if frag in pstr.split("/"):
+            tail = tuple(spec)
+            if len(tail) > ndim:
+                tail = tail[-ndim:]
+            return (None,) * (ndim - len(tail)) + tail
+    return (None,) * ndim
+
+
+def _fsdp_extend(spec: Tuple, shape: Tuple[int, ...], dp: Tuple[str, ...],
+                 dp_size: int) -> Tuple:
+    """Shard the largest still-replicated dim over the data axes (FSDP/ZeRO).
+    Only when divisible; biggest dim first."""
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and shape[i] % dp_size == 0 and shape[i] >= dp_size:
+            return spec[:i] + (dp if len(dp) > 1 else dp[0],) + spec[i + 1:]
+    return spec
+
+
+def param_specs(params: PyTree, cfg: ArchConfig, mesh, *, fsdp: bool = True,
+                zero: bool = False) -> PyTree:
+    """PartitionSpec tree for params (``zero=True`` for optimizer moments —
+    always FSDP-extended, mirroring ZeRO-1)."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh_size(mesh, a) for a in dp]))
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        spec = _tp_spec(pstr, leaf.ndim)
+        if (fsdp or zero) and leaf.size >= _FSDP_MIN_ELEMS and dp_size > 1:
+            spec = _fsdp_extend(spec, leaf.shape, dp, dp_size)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_specs(opt_state: PyTree, pspecs: PyTree) -> PyTree:
+    return {
+        "m": pspecs,
+        "v": pspecs,
+        "step": P(),
+    }
+
+
+def batch_specs(cfg: ArchConfig, mesh) -> PyTree:
+    dp = data_axes(mesh)
+    b = dp if len(dp) > 1 else dp[0]
+    specs = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.frontend == "patch":
+        specs["prefix_embeds"] = P(b, None, None)
+    if cfg.frontend == "frame":
+        specs = {"frame_embeds": P(b, None, None), "labels": P(b, None)}
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, mesh, *, batch: int = 0) -> PyTree:
+    """KV / state cache shardings for decode.
+
+    Attention caches (L, B, T, Hkv, Dh): batch over data when divisible,
+    otherwise the *sequence* dim carries the data axes (long-context
+    B=1 serving); heads over 'model' when divisible, else T takes model
+    too (partial-KV attention; GSPMD inserts the reduction)."""
+    dp = data_axes(mesh)
+    b = dp if len(dp) > 1 else dp[0]
+    mdl = mesh_size(mesh, "model")
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh_size(mesh, a)
+    b_ok = batch == 0 or batch % dp_size == 0
+
+    def attn_spec():
+        kv_heads_ok = cfg.n_kv_heads % mdl == 0
+        bdim = b if b_ok else None
+        if kv_heads_ok:
+            tdim = None if b_ok else b
+            kv = P(None, bdim, tdim, "model", None)
+        else:
+            tdim = "model" if b_ok else (b + ("model",) if isinstance(b, tuple)
+                                         else (b, "model"))
+            kv = P(None, bdim, tdim, None, None)  # sequence-sharded KV
+        return {"k": kv, "v": kv, "length": P(None, bdim)}
+
+    bdim = b if b_ok else None
+    if cfg.family in ("dense", "vlm", "moe"):
+        return attn_spec()
+    if cfg.family == "ssm":
+        P_head = cfg.d_inner // cfg.n_heads
+        m_ok = P_head % mdl == 0
+        mspec = {
+            "S": P(None, None, bdim, None, "model" if m_ok else None, None),
+            "n": P(None, None, bdim, None, "model" if m_ok else None),
+        }
+        return {
+            "slstm": {"h": P(None, bdim, None), "c": P(None, bdim, None),
+                      "n": P(None, bdim, None)},
+            "mlstm": mspec,
+        }
+    if cfg.family == "hybrid":
+        H = cfg.d_inner // 64  # MAMBA_HEADDIM
+        m_ok = H % mdl == 0
+        return {
+            "attn": attn_spec(),
+            "mamba": {
+                "S": P(None, None, bdim, "model" if m_ok else None, None, None),
+                "conv": P(None, None, bdim, None, "model"),
+            },
+        }
+    raise ValueError(cfg.family)
+
+
+def sanitize_specs(spec_tree: PyTree, shape_tree: PyTree, mesh) -> PyTree:
+    """Final safety net: drop any sharding axis that does not evenly divide
+    its dimension (e.g. a 504-entry vocab over a 16-way model axis)."""
+    sizes = {a: mesh_size(mesh, a) for a in mesh.axis_names}
+
+    def ax_size(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, (tuple, list)):
+            n = 1
+            for a in ax:
+                n *= sizes.get(a, 1)
+            return n
+        return sizes.get(ax, 1)
+
+    def one(spec, leaf):
+        shape = leaf.shape
+        axes = tuple(spec)
+        if len(axes) < len(shape):
+            axes = (None,) * (len(shape) - len(axes)) + axes
+        fixed = []
+        for dim, ax in zip(shape, axes[:len(shape)]):
+            n = ax_size(ax)
+            fixed.append(ax if (n > 1 and dim % n == 0) or n == 1 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map(
+        one, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings(tree_specs: PyTree, mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

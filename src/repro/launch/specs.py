@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run never
+allocates device memory; weak-type-correct specs are enough to lower,
+compile, and read memory/cost analyses."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig, SHAPES, ShapeSpec
+from ..models.model import init_cache, init_params
+from ..train.optimizer import AdamWConfig, adamw_init
+
+PyTree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Batch input specs for one (arch × input-shape) cell."""
+    B, T = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    if shape.kind == "train":
+        if cfg.frontend == "frame":
+            return {"frame_embeds": _sds((B, T, cfg.d_model), dt),
+                    "labels": _sds((B, T), jnp.int32)}
+        batch = {"tokens": _sds((B, T), jnp.int32),
+                 "labels": _sds((B, T), jnp.int32)}
+        if cfg.frontend == "patch":
+            batch["prefix_embeds"] = _sds((B, cfg.n_prefix_tokens, cfg.d_model), dt)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.frontend == "frame":
+            return {"frame_embeds": _sds((B, T, cfg.d_model), dt)}
+        batch = {"tokens": _sds((B, T), jnp.int32)}
+        if cfg.frontend == "patch":
+            batch["prefix_embeds"] = _sds((B, cfg.n_prefix_tokens, cfg.d_model), dt)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def param_shapes(cfg: ArchConfig) -> PyTree:
+    return jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                          jax.random.PRNGKey(0))
+
+
+def opt_shapes(cfg: ArchConfig, params: PyTree, opt_cfg: AdamWConfig) -> PyTree:
+    return jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg), params)
+
+
+def cache_shapes(cfg: ArchConfig, shape: ShapeSpec) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))

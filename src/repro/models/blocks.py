@@ -1,0 +1,247 @@
+"""Transformer blocks: GQA attention, MLP, MoE — all linears via the
+LogicSparse datapath dispatch (``layers.linear_init/linear_apply``)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from .layers import (
+    Params,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    layernorm,
+    layernorm_init,
+    linear_apply,
+    linear_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+# ------------------------------------------------------------------- helpers
+
+
+def _norm_init(cfg: ArchConfig):
+    return rmsnorm_init(cfg.d_model) if cfg.norm == "rms" else layernorm_init(cfg.d_model)
+
+
+def norm_apply(cfg: ArchConfig, p: Params, x):
+    return rmsnorm(p, x) if cfg.norm == "rms" else layernorm(p, x)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def _pattern(cfg: ArchConfig, K: int, N: int):
+    """Shared static pattern for sparse linear modes.
+
+    gsparse*: returns the group count s (the feature-interleaved diagonal
+    pattern factorises into s dense matmuls — see layers._gsparse_apply).
+    sparse*: returns a BlockSparsePattern (identical across layers =>
+    scannable), executed by the Pallas kernel / static gather path."""
+    mode = cfg.linear_mode
+    if mode.startswith("gsparse"):
+        s = max(1, round(1.0 / max(cfg.sparse_density, 1e-6)))
+        if K % s or N % s or (K // s) % 8 or (N // s) % 8:
+            return None
+        return s
+    if not mode.startswith("sparse"):
+        return None
+    from ..core.sparsity import shared_pattern
+    bk = min(cfg.sparse_block[0], K)
+    bn = min(cfg.sparse_block[1], N)
+    if K % bk or N % bn:
+        return None  # fall back to dense for awkward shapes
+    return shared_pattern(K, N, (bk, bn), cfg.sparse_density)
+
+
+def lin_init(key, cfg: ArchConfig, K: int, N: int, *, bias: bool = False,
+             mode: str = None):
+    mode = mode if mode is not None else cfg.linear_mode
+    sparse = mode.startswith("sparse") or mode.startswith("gsparse")
+    pat = _pattern(cfg, K, N) if sparse else None
+    if sparse and pat is None:
+        mode = "dense"
+    return linear_init(key, K, N, dtype=_dtype(cfg), mode=mode, bias=bias,
+                       pattern=pat)
+
+
+def lin_apply(cfg: ArchConfig, p: Params, x, K: int, N: int):
+    pat = _pattern(cfg, K, N) if "w_blk" in p else None
+    return linear_apply(p, x, pattern=pat)
+
+
+# ----------------------------------------------------------------- attention
+
+
+def attn_init(key, cfg: ArchConfig) -> Params:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": lin_init(ks[0], cfg, D, H * Dh, bias=cfg.qkv_bias),
+        "wk": lin_init(ks[1], cfg, D, Hkv * Dh, bias=cfg.qkv_bias),
+        "wv": lin_init(ks[2], cfg, D, Hkv * Dh, bias=cfg.qkv_bias),
+        "wo": lin_init(ks[3], cfg, H * Dh, D),
+    }
+
+
+def attn_apply(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,                    # (B, T, D)
+    positions: jnp.ndarray,            # (B, T)
+    cache: Optional[Dict] = None,      # decode: {"k","v","length"}
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, T, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = lin_apply(cfg, p["wq"], x, D, H * Dh).reshape(B, T, H, Dh)
+    k = lin_apply(cfg, p["wk"], x, D, Hkv * Dh).reshape(B, T, Hkv, Dh)
+    v = lin_apply(cfg, p["wv"], x, D, Hkv * Dh).reshape(B, T, Hkv, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        from jax.sharding import PartitionSpec as P
+        from .shard_hints import hint
+        if cfg.seq_shard:
+            # context parallelism: q sharded over T on 'model'; kv (small
+            # under GQA) replicated — avoids GSPMD's full-activation
+            # rematerialisation when n_heads doesn't divide the TP axis
+            q = hint(q, P(None, "model", None, None))
+            k = hint(k, P(None, None, None, None))
+            v = hint(v, P(None, None, None, None))
+        # (a head-sharding hint on q was tried and refuted — GSPMD
+        # round-trips it under remat+scan; see EXPERIMENTS.md §Perf)
+        o = chunked_attention(q, k, v, causal=cfg.causal)
+        new_cache = None
+    else:
+        # decode: T == 1; insert at position `length`
+        idx = cache["length"]  # (B,)
+        k_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))(cache["k"], k, idx)
+        v_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u, (i, 0, 0)))(cache["v"], v, idx)
+        o = decode_attention(q, k_cache, v_cache, idx + 1)
+        new_cache = {"k": k_cache, "v": v_cache, "length": idx + 1}
+    o = o.reshape(B, T, H * Dh)
+    return lin_apply(cfg, p["wo"], o, H * Dh, D), new_cache
+
+
+def attn_cache_init(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, Hkv, Dh), _dtype(cfg)),
+        "v": jnp.zeros((batch, max_len, Hkv, Dh), _dtype(cfg)),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------------- mlp
+
+
+def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "wg": lin_init(ks[0], cfg, D, F),
+            "wu": lin_init(ks[1], cfg, D, F),
+            "wd": lin_init(ks[2], cfg, F, D),
+        }
+    return {
+        "wu": lin_init(ks[0], cfg, D, F),
+        "wd": lin_init(ks[1], cfg, F, D),
+    }
+
+
+def mlp_apply(p: Params, cfg: ArchConfig, x, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    if "wg" in p:
+        g = jax.nn.silu(lin_apply(cfg, p["wg"], x, D, F).astype(jnp.float32))
+        u = lin_apply(cfg, p["wu"], x, D, F).astype(jnp.float32)
+        return lin_apply(cfg, p["wd"], (g * u).astype(x.dtype), F, D)
+    h = jax.nn.gelu(lin_apply(cfg, p["wu"], x, D, F).astype(jnp.float32))
+    return lin_apply(cfg, p["wd"], h.astype(x.dtype), F, D)
+
+
+# ----------------------------------------------------------------------- moe
+
+
+def moe_init(key, cfg: ArchConfig) -> Params:
+    D, Fe, E = cfg.d_model, cfg.d_expert, cfg.n_experts
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "router": linear_init(ks[0], D, E, dtype=jnp.float32),
+        # stacked expert FFNs (E, D, Fe)/(E, Fe, D) — swiglu
+        "eg": _stack_init(ks[1], E, D, Fe, dt),
+        "eu": _stack_init(ks[2], E, D, Fe, dt),
+        "ed": _stack_init(ks[3], E, Fe, D, dt),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.d_expert * cfg.n_shared_experts
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=Fs)
+    return p
+
+
+def _stack_init(key, E, K, N, dt):
+    return {"w": (jax.random.normal(key, (E, K, N)) / np.sqrt(K)).astype(dt)}
+
+
+def moe_apply(p, cfg, x):
+    with jax.named_scope("moe_apply"):
+        return _moe_apply(p, cfg, x)
+
+
+def _moe_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Sort-based top-k dispatch with static capacity (drop policy).
+
+    Gather/scatter indices are data-dependent but shapes are static, so the
+    step compiles to fixed-size ops (EP-shardable; GSPMD lowers the
+    expert-parallel exchange to all-to-all when E is mesh-sharded).
+    """
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    S = B * T
+    xt = x.reshape(S, D)
+    logits = linear_apply(p["router"], xt.astype(jnp.float32))  # (S, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    gate_k, ids_k = jax.lax.top_k(gates, K)                     # (S, K)
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    C = int(np.ceil(S * K / E * cfg.capacity_factor))
+    C = max(8, min(C, S))
+    flat_ids = ids_k.reshape(-1)                                # (S*K,)
+    order = jnp.argsort(flat_ids)                               # stable
+    sorted_ids = flat_ids[order]
+    # rank of each entry within its expert run
+    seg_start = jnp.searchsorted(sorted_ids, jnp.arange(E))     # (E,)
+    rank = jnp.arange(S * K) - seg_start[sorted_ids]
+    keep = rank < C
+    dest = jnp.where(keep, sorted_ids * C + rank, E * C)        # E*C = drop slot
+    src_tok = order // K
+
+    buf = jnp.zeros((E * C + 1, D), xt.dtype)
+    buf = buf.at[dest].add(xt[src_tok])
+    eb = buf[: E * C].reshape(E, C, D)
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb.astype(jnp.float32),
+                               p["eg"]["w"].astype(jnp.float32)))
+    u = jnp.einsum("ecd,edf->ecf", eb.astype(jnp.float32),
+                   p["eu"]["w"].astype(jnp.float32))
+    yo = jnp.einsum("ecf,efd->ecd", (g * u).astype(xt.dtype),
+                    p["ed"]["w"]).reshape(E * C, D)
+
+    gathered = jnp.where(keep[:, None], yo[jnp.minimum(dest, E * C - 1)], 0.0)
+    w = gate_k.reshape(-1)[order]
+    y = jnp.zeros((S, D), xt.dtype).at[src_tok].add(
+        (gathered * w[:, None]).astype(xt.dtype))
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], cfg, xt,
+                          d_ff=cfg.d_expert * cfg.n_shared_experts)
+    return y.reshape(B, T, D)

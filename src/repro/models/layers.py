@@ -1,0 +1,303 @@
+"""Shared building blocks for the model zoo.
+
+Every projection in every architecture routes through the *sparse-quant
+linear* dispatch below — the paper's datapath (dense | int8-quantised |
+statically block-sparse) is a first-class property of the parameter tree,
+selected per layer class by the DSE, not a bolt-on.
+
+Param-leaf conventions (all functional, pytree-of-arrays):
+  dense linear:   {"w": (K, N) dtype}
+  quantised:      {"w_q": (K, N) int8, "w_s": (N,) f32}
+  block-sparse:   {"w_blk": (P, bk, bn), ["w_s": (N,) f32]}  + static pattern
+                  carried in the enclosing module's config (compile-time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.sparsity import BlockSparsePattern
+
+Params = Dict[str, Any]
+
+# --------------------------------------------------------------------- init
+
+
+def _he(key, shape, dtype, fan_in):
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def linear_init(
+    key,
+    K: int,
+    N: int,
+    *,
+    dtype=jnp.bfloat16,
+    mode: str = "dense",
+    bias: bool = False,
+    pattern: Optional[BlockSparsePattern] = None,
+) -> Params:
+    """mode: dense | int8 | sparse (sparse also implies int8 if pattern set
+    with quantised storage — decided by caller)."""
+    p: Params = {}
+    if mode == "dense":
+        p["w"] = _he(key, (K, N), dtype, K)
+    elif mode == "int8":
+        # initialised near-zero-symmetric; scales learn via recalibration
+        p["w_q"] = jax.random.randint(key, (K, N), -127, 128, dtype=jnp.int8)
+        p["w_s"] = jnp.full((N,), 1.0 / (127 * np.sqrt(K)), jnp.float32)
+    elif mode in ("gsparse", "gsparse_int8"):
+        # group-diagonal engine-free form: the shared diagonal pattern
+        # (block (i,j) present iff (i+j) % s == 0) factorises into s dense
+        # (K/s, N/s) matmuls — zero gather/scatter overhead under XLA,
+        # exactly 1/s of the dense FLOPs and bytes.  `pattern` here is the
+        # group count s encoded via block_density = 1/s.
+        assert pattern is not None
+        s = pattern  # int group count
+        Kg, Ng = K // s, N // s
+        if mode == "gsparse_int8":
+            p["w_grp"] = jax.random.randint(key, (s, Kg, Ng), -127, 128,
+                                            dtype=jnp.int8)
+            p["w_s"] = jnp.full((N,), 1.0 / (127 * np.sqrt(Kg)), jnp.float32)
+        else:
+            p["w_grp"] = _he(key, (s, Kg, Ng), dtype, Kg)
+    elif mode in ("sparse", "sparse_int8"):
+        assert pattern is not None
+        P = pattern.n_blocks_present
+        bk, bn = pattern.block
+        if mode == "sparse_int8":
+            p["w_blk"] = jax.random.randint(key, (P, bk, bn), -127, 128,
+                                            dtype=jnp.int8)
+            p["w_s"] = jnp.full((N,), 1.0 / (127 * np.sqrt(K)), jnp.float32)
+        else:
+            p["w_blk"] = _he(key, (P, bk, bn), dtype,
+                             K * pattern.block_density)
+    else:
+        raise ValueError(mode)
+    if bias:
+        p["b"] = jnp.zeros((N,), dtype)
+    return p
+
+
+def linear_apply(
+    p: Params,
+    x: jnp.ndarray,
+    *,
+    pattern: Optional[BlockSparsePattern] = None,
+    compute_dtype=None,
+) -> jnp.ndarray:
+    """Dispatch on the parameter leaves (see module docstring)."""
+    if compute_dtype is None:
+        compute_dtype = x.dtype
+    if "w" in p:
+        y = jnp.dot(x.astype(compute_dtype), p["w"].astype(compute_dtype))
+    elif "w_q" in p:
+        # int8 storage; dequant fused into the matmul by XLA (or by the
+        # quant_matmul Pallas kernel on the serving path).
+        w = p["w_q"].astype(compute_dtype) * p["w_s"].astype(compute_dtype)[None, :]
+        y = jnp.dot(x.astype(compute_dtype), w)
+    elif "w_grp" in p:
+        y = _gsparse_apply(p, x, compute_dtype)
+    elif "w_blk" in p:
+        assert pattern is not None, "sparse linear needs its static pattern"
+        y = _sparse_apply(p, x, pattern, compute_dtype)
+    else:
+        raise ValueError(f"unknown linear leaves {list(p)}")
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def _gsparse_apply(p, x, compute_dtype):
+    """Group-diagonal static sparsity as s dense matmuls (engine-free for
+    XLA): output column-group c reads input row-group (s - c) % s.
+
+    Feature -> group mapping is at *block* granularity implicitly: with the
+    whole (K/s, N/s) group dense, block size folds away and groups can be
+    taken directly on contiguous strides of the feature axes.
+    """
+    w = p["w_grp"]  # (s, Kg, Ng)
+    s, Kg, Ng = w.shape
+    K, N = s * Kg, s * Ng
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, Kg, s).astype(compute_dtype)   # feature f=(q, g)
+    wf = w.astype(compute_dtype)
+    if "w_s" in p:
+        wf = wf * p["w_s"].reshape(s, 1, Ng).astype(compute_dtype)
+    # row group used by column group c: g = (s - c) % s  -> static roll
+    order = [(s - c) % s for c in range(s)]
+    xg = jnp.stack([xm[:, :, g] for g in order], axis=0)  # (s, M, Kg)
+    yg = jnp.einsum("smk,skn->smn", xg, wf)               # (s, M, Ng)
+    y = yg.transpose(1, 2, 0).reshape(-1, N)              # j=(r, c)
+    return y.reshape(*lead, N)
+
+
+def _sparse_apply(p, x, pattern: BlockSparsePattern, compute_dtype):
+    """Engine-free static block-sparse matmul, jnp path (XLA prod path).
+
+    The gather below uses *static* indices (numpy constants), so XLA sees a
+    fixed schedule — collapsing at compile time exactly like the Pallas
+    kernel's prefetch tables. K-blocks absent from a column contribute 0.
+    """
+    K, N = pattern.shape
+    bk, bn = pattern.block
+    nR, nC = pattern.bitmap.shape
+    blocks = p["w_blk"].astype(compute_dtype)
+    if "w_s" in p:
+        s = p["w_s"].reshape(nC, bn)[np.asarray(pattern.block_cols)]
+        blocks = blocks * s[:, None, :].astype(compute_dtype)
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, K).astype(compute_dtype)
+    xb = xm.reshape(-1, nR, bk)
+    # per present block: (M, bk) x (bk, bn) -> scatter-add into (M, nC, bn)
+    xg = xb[:, np.asarray(pattern.block_rows)]           # (M, P, bk) static gather
+    yb = jnp.einsum("mpk,pkn->mpn", xg, blocks)          # (M, P, bn)
+    y = jnp.zeros((xm.shape[0], nC, bn), yb.dtype)
+    y = y.at[:, np.asarray(pattern.block_cols)].add(yb)  # static scatter-add
+    return y.reshape(*lead, N)
+
+
+# --------------------------------------------------------------------- norms
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * r).astype(x.dtype) * p["g"].astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16) -> Params:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["g"].astype(x.dtype) + p["b"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, Dh); positions: (..., T)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,T,1,Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+
+def chunked_attention(*args, **kwargs):
+    """Scoped wrapper — HLO metadata carries this name for the per-module
+    traffic attribution in launch/hlo_analysis."""
+    with jax.named_scope("chunked_attention"):
+        return _chunked_attention(*args, **kwargs)
+
+
+def _chunked_attention(
+    q: jnp.ndarray,  # (B, Tq, H, Dh)
+    k: jnp.ndarray,  # (B, Tk, Hkv, Dh)
+    v: jnp.ndarray,  # (B, Tk, Hkv, Dh)
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Memory-efficient (online-softmax) attention: scan over KV chunks.
+
+    Peak temp is (B, H, Tq, kv_chunk) instead of (B, H, Tq, Tk).  GQA is
+    handled by head-group broadcasting.  ``q_offset`` is the absolute
+    position of q[0] (for decode / sliced prefill).
+    """
+    B, Tq, H, Dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    assert H % Hkv == 0
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    nchunks = max(1, -(-Tk // kv_chunk))
+    Tk_pad = nchunks * kv_chunk
+    if Tk_pad != Tk:
+        k = jnp.pad(k, ((0, 0), (0, Tk_pad - Tk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tk_pad - Tk), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, kv_chunk, Hkv, Dh)
+    vc = v.reshape(B, nchunks, kv_chunk, Hkv, Dh)
+
+    qf = (q * scale).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(Tq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, c = inp  # (B, kv_chunk, Hkv, Dh) x2, chunk index
+        kb = kb.astype(jnp.float32)
+        # head h uses kv head h // G: layout (Hkv, G). scores (B,Hkv,G,Tq,C)
+        s = jnp.einsum("bqHgd,bcHd->bHgqc", qf.reshape(B, Tq, Hkv, G, Dh), kb)
+        k_pos = c * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.broadcast_to((k_pos < Tk)[None, :], (Tq, kv_chunk))
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bHgqc,bcHd->bHgqd", p, vb.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Tq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), jnp.arange(nchunks)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # (B,Hkv,G,Tq,Dh) -> (B,Tq,Hkv,G,Dh) -> (B,Tq,H,Dh)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, Dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(*args, **kwargs):
+    with jax.named_scope("decode_attention"):
+        return _decode_attention(*args, **kwargs)
+
+
+def _decode_attention(
+    q: jnp.ndarray,        # (B, 1, H, Dh)
+    k_cache: jnp.ndarray,  # (B, T, Hkv, Dh)
+    v_cache: jnp.ndarray,  # (B, T, Hkv, Dh)
+    length: jnp.ndarray,   # (B,) valid lengths
+) -> jnp.ndarray:
+    B, _, H, Dh = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    qf = (q * scale).astype(jnp.float32).reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bHgd,btHd->bHgt", qf, k_cache.astype(jnp.float32))
+    mask = jnp.arange(T)[None, :] < length[:, None]  # (B, T)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bHgt,btHd->bHgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)

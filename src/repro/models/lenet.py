@@ -1,0 +1,135 @@
+"""LeNet-5 — the paper's evaluation network (MNIST, Table I / Fig 2).
+
+Standard LeNet-5: conv(1→6,5×5) → avgpool → conv(6→16,5×5) → avgpool →
+fc(400→120) → fc(120→84) → fc(84→10).  Convs are expressible as matmuls
+(im2col) so the LogicSparse datapath (masked / compressed / quantised)
+applies to every layer; the per-layer mode is selected by the DSE result.
+
+``apply_fn`` modes per layer: 'dense' (masked dense — training & accuracy
+eval) or 'compressed' (static block-compacted via the engine-free kernel
+path — deployment form).  Compression/throughput accounting for Table I
+uses :mod:`repro.core`.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cost_model import LayerSpec
+from ..core.sparsity import CompressedLinear
+from ..kernels.sparse_matmul.ops import sparse_linear
+
+Params = Dict[str, jnp.ndarray]
+
+# (name, kind, shape info) — canonical LeNet-5 on 28x28 MNIST
+# conv shapes: (kh, kw, cin, cout); fc shapes: (K, N)
+LAYERS = [
+    ("conv1", "conv", (5, 5, 1, 6)),    # out 24x24x6 -> pool 12x12x6
+    ("conv2", "conv", (5, 5, 6, 16)),   # out 8x8x16  -> pool 4x4x16
+    ("fc1", "linear", (256, 120)),
+    ("fc2", "linear", (120, 84)),
+    ("fc3", "linear", (84, 10)),
+]
+
+
+def init_lenet(key) -> Params:
+    params = {}
+    for (name, kind, shape), k in zip(LAYERS, jax.random.split(key, len(LAYERS))):
+        fan_in = int(np.prod(shape[:-1]))
+        params[name + "_w"] = (jax.random.normal(k, shape) / np.sqrt(fan_in)
+                               ).astype(jnp.float32)
+        params[name + "_b"] = jnp.zeros((shape[-1],), jnp.float32)
+    return params
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+
+
+def lenet_forward(
+    params: Params,
+    images: jnp.ndarray,                       # (B, 28, 28, 1)
+    masks: Optional[Dict[str, jnp.ndarray]] = None,
+    compressed: Optional[Dict[str, CompressedLinear]] = None,
+    qat_bits: Optional[Dict[str, int]] = None,
+    interpret_kernels: bool = False,
+) -> jnp.ndarray:
+    """Forward pass. ``masks`` applies static pruning (training / eval);
+    ``qat_bits`` applies straight-through fake quantisation per layer (the
+    paper's mixed-precision QNN datapath during re-sparse fine-tuning);
+    ``compressed`` switches named FC layers to the engine-free compacted
+    execution path (deployment form, validates against the masked path)."""
+    from ..core.quant import fake_quant
+
+    def w(name):
+        ww = params[name + "_w"]
+        if masks is not None and name in masks:
+            ww = ww * masks[name].astype(ww.dtype)
+        if qat_bits and name in qat_bits:
+            ww = fake_quant(ww, qat_bits[name], axis=-1)
+        return ww
+
+    x = images
+    x = jax.nn.relu(_conv(x, w("conv1"), params["conv1_b"]))
+    x = _pool(x)
+    x = jax.nn.relu(_conv(x, w("conv2"), params["conv2_b"]))
+    x = _pool(x)
+    x = x.reshape(x.shape[0], -1)  # (B, 256)
+    for name in ("fc1", "fc2", "fc3"):
+        if compressed is not None and name in compressed:
+            y = sparse_linear(x, compressed[name], use_kernel=interpret_kernels,
+                              interpret=interpret_kernels)
+            y = y.astype(jnp.float32) + params[name + "_b"]
+        else:
+            y = x @ w(name) + params[name + "_b"]
+        x = jax.nn.relu(y) if name != "fc3" else y
+    return x
+
+
+def lenet_loss(params, images, labels, masks=None, qat_bits=None):
+    logits = lenet_forward(params, images, masks=masks, qat_bits=qat_bits)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def lenet_layer_specs(
+    batch: int = 1,
+    densities: Optional[Dict[str, Tuple[float, float]]] = None,
+) -> List[LayerSpec]:
+    """Layer IR for the DSE / Fig 2 estimation (per-invocation numbers).
+
+    densities: {layer: (max_block_density, max_element_density)} from the
+    reference global-magnitude pruning pass.
+    """
+    densities = densities or {}
+    # spatial output sizes for conv MAC counts on 28x28 input
+    out_hw = {"conv1": 24 * 24, "conv2": 8 * 8}
+    act_in = {"conv1": 28 * 28 * 1, "conv2": 12 * 12 * 6,
+              "fc1": 256, "fc2": 120, "fc3": 84}
+    act_out = {"conv1": 24 * 24 * 6, "conv2": 8 * 8 * 16,
+               "fc1": 120, "fc2": 84, "fc3": 10}
+    specs = []
+    for name, kind, shape in LAYERS:
+        wel = int(np.prod(shape))
+        if kind == "conv":
+            flops = 2.0 * wel * out_hw[name] * batch
+        else:
+            flops = 2.0 * wel * batch
+        bd, ed = densities.get(name, (1.0, 1.0))
+        specs.append(LayerSpec(
+            name=name, kind=kind, flops=flops, weight_elems=wel,
+            act_bytes=4.0 * batch * (act_in[name] + act_out[name]),
+            max_block_density=bd, max_element_density=ed,
+        ))
+    return specs

@@ -1,0 +1,330 @@
+"""Sub-quadratic sequence blocks: mLSTM / sLSTM (xLSTM) and Mamba2 (SSD).
+
+Training/prefill uses the **chunkwise-parallel** forms (O(T·L) with chunk
+L — sub-quadratic end-to-end), decode uses the O(1)-per-token recurrent
+forms with explicit state caches.  Gate simplifications vs the original
+papers (sigmoid input gates instead of exp+stabiliser) are recorded in
+DESIGN.md — this repo reproduces LogicSparse, not xLSTM/Mamba2 numerics.
+
+All projections route through the LogicSparse linear dispatch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from .layers import Params, linear_apply, linear_init
+
+CHUNK = 256
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def _pad_chunks(x, L):
+    T = x.shape[1]
+    pad = (-T) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x, T
+
+
+# ======================================================================= mLSTM
+
+
+def mlstm_init(key, cfg: ArchConfig) -> Params:
+    D, di = cfg.d_model, cfg.d_inner
+    H = cfg.n_heads
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    # SSM projections support dense/int8 (sparse patterns are plumbed only
+    # through attention/MLP — see DESIGN.md §Arch-applicability)
+    m = "int8" if cfg.linear_mode in ("int8", "sparse_int8") else "dense"
+    return {
+        "wq": linear_init(ks[0], D, di, dtype=dt, mode=m),
+        "wk": linear_init(ks[1], D, di, dtype=dt, mode=m),
+        "wv": linear_init(ks[2], D, di, dtype=dt, mode=m),
+        "wif": linear_init(ks[3], D, 2 * H, dtype=dt),   # input+forget gates
+        "wo": linear_init(ks[4], di, D, dtype=dt, mode=m),
+        "wog": linear_init(ks[5], D, di, dtype=dt),       # output gate
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf):
+    """One chunk of the chunkwise mLSTM, vmapped over (batch, head).
+
+    q,k,v: (L, P);  li: (L,) log input gate;  lf: (L,) log forget gate.
+    Returns (y_intra, state_contrib, n_contrib, decay_all, cum_lf).
+    """
+    L, P = q.shape
+    cum = jnp.cumsum(lf)                         # log prod_{u<=t} f_u
+    # intra-chunk: A[t,s] = exp(cum_t - cum_s + li_s) for s <= t
+    diff = cum[:, None] - cum[None, :] + li[None, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    A = jnp.where(causal, jnp.exp(diff), 0.0)
+    s = (q @ k.T) * A                            # (L, L)
+    y_intra = s @ v                              # (L, P)
+    n_intra = s @ jnp.ones((L, 1))               # (L, 1) normaliser part
+    # contribution of this chunk to the carried state
+    w = jnp.exp(cum[-1] - cum + li)              # (L,)
+    S_c = (k * w[:, None]).T @ v                 # (P, P)
+    n_c = (k * w[:, None]).sum(0)                # (P,)
+    return y_intra, n_intra[:, 0], S_c, n_c, cum
+
+
+def mlstm_apply(
+    p: Params, cfg: ArchConfig, x: jnp.ndarray,
+    cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, T, D = x.shape
+    H, di = cfg.n_heads, cfg.d_inner
+    P = di // H
+    q = linear_apply(p["wq"], x).reshape(B, T, H, P).astype(jnp.float32) / np.sqrt(P)
+    k = linear_apply(p["wk"], x).reshape(B, T, H, P).astype(jnp.float32)
+    v = linear_apply(p["wv"], x).reshape(B, T, H, P).astype(jnp.float32)
+    gif = linear_apply(p["wif"], x).astype(jnp.float32).reshape(B, T, 2, H)
+    li = jax.nn.log_sigmoid(gif[:, :, 0])        # (B, T, H)
+    lf = jax.nn.log_sigmoid(gif[:, :, 1])
+    og = jax.nn.sigmoid(linear_apply(p["wog"], x).astype(jnp.float32))
+
+    if cache is not None:
+        # single-step recurrence (decode)
+        S, n = cache["S"], cache["n"]            # (B,H,P,P), (B,H,P)
+        f = jnp.exp(lf[:, 0])[..., None, None]   # (B,H,1,1)
+        i = jnp.exp(li[:, 0])[..., None, None]
+        kv = jnp.einsum("bhp,bhr->bhpr", k[:, 0], v[:, 0])
+        S = f * S + i * kv
+        n = f[..., 0] * n + i[..., 0] * k[:, 0]
+        num = jnp.einsum("bhp,bhpr->bhr", q[:, 0], S)
+        den = jnp.abs(jnp.einsum("bhp,bhp->bh", q[:, 0], n))[..., None]
+        y = num / jnp.maximum(den, 1.0)
+        y = y.reshape(B, 1, di) * og
+        out = linear_apply(p["wo"], y.astype(x.dtype))
+        return out, {"S": S, "n": n}
+
+    # chunkwise-parallel training/prefill
+    L = min(CHUNK, T)
+    qp, _ = _pad_chunks(q, L); kp, _ = _pad_chunks(k, L); vp, _ = _pad_chunks(v, L)
+    lip, _ = _pad_chunks(li, L)
+    lfp, _ = _pad_chunks(lf, L)  # padded steps never reach the train output
+    NC = qp.shape[1] // L
+    def resh(a):  # (B, NC, L, H, P) -> (NC, B, H, L, P)
+        return a.reshape(B, NC, L, *a.shape[2:]).transpose(1, 0, 3, 2, 4)
+    qc, kc, vc = resh(qp), resh(kp), resh(vp)
+    lic = lip.reshape(B, NC, L, H).transpose(1, 0, 3, 2)   # (NC,B,H,L)
+    lfc = lfp.reshape(B, NC, L, H).transpose(1, 0, 3, 2)
+
+    chunk_fn = jax.vmap(jax.vmap(_mlstm_chunk))            # over B, H
+
+    def body(carry, inp):
+        S, n = carry                                        # (B,H,P,P),(B,H,P)
+        qb, kb, vb, lib, lfb = inp
+        y_in, n_in, S_c, n_c, cum = chunk_fn(qb, kb, vb, lib, lfb)
+        dec = jnp.exp(cum)                                  # (B,H,L)
+        y_inter = jnp.einsum("bhlp,bhpr->bhlr", qb * dec[..., None], S)
+        n_inter = jnp.einsum("bhlp,bhp->bhl", qb * dec[..., None], n)
+        y = y_in + y_inter
+        den = jnp.abs(n_in + n_inter)
+        y = y / jnp.maximum(den, 1.0)[..., None]
+        d_all = jnp.exp(cum[..., -1])                       # (B,H)
+        S = d_all[..., None, None] * S + S_c
+        n = d_all[..., None] * n + n_c
+        return (S, n), y
+
+    S0 = jnp.zeros((B, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B, H, P), jnp.float32)
+    (_, _), ys = jax.lax.scan(body, (S0, n0), (qc, kc, vc, lic, lfc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, NC * L, di)[:, :T]
+    y = y * og
+    return linear_apply(p["wo"], y.astype(x.dtype)), None
+
+
+def mlstm_cache_init(cfg: ArchConfig, batch: int) -> Dict:
+    H, P = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    return {
+        "S": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+    }
+
+
+# ======================================================================= sLSTM
+
+
+def slstm_init(key, cfg: ArchConfig) -> Params:
+    D = cfg.d_model
+    H = cfg.n_heads
+    P = D // H
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "wx": linear_init(ks[0], D, 4 * D, dtype=dt),
+        # recurrent weights, block-diagonal per head: (H, P, 4P)
+        "r": (jax.random.normal(ks[1], (H, P, 4 * P)) / np.sqrt(P)).astype(dt),
+        "b": jnp.zeros((4 * D,), dt),
+    }
+
+
+def _slstm_step(p, cfg, xw, state):
+    """xw: (B, 4D) precomputed W x_t; state: h,c,n each (B, D)."""
+    h, c, n = state
+    B, D = h.shape
+    H = cfg.n_heads
+    P = D // H
+    rh = jnp.einsum("bhp,hpq->bhq", h.reshape(B, H, P).astype(jnp.float32),
+                    p["r"].astype(jnp.float32)).reshape(B, 4 * D)
+    g = xw.astype(jnp.float32) + rh + p["b"].astype(jnp.float32)
+    i, f, z, o = jnp.split(g, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    z = jnp.tanh(z)
+    c = f * c + i * z
+    n = f * n + i
+    h = o * (c / jnp.maximum(n, 1.0))
+    return h, c, n
+
+
+def slstm_apply(p, cfg: ArchConfig, x, cache: Optional[Dict] = None):
+    B, T, D = x.shape
+    xw = linear_apply(p["wx"], x)  # (B, T, 4D)
+    if cache is not None:
+        h, c, n = _slstm_step(p, cfg, xw[:, 0], (cache["h"], cache["c"], cache["n"]))
+        return h[:, None].astype(x.dtype), {"h": h, "c": c, "n": n}
+
+    def body(state, xw_t):
+        h, c, n = _slstm_step(p, cfg, xw_t, state)
+        return (h, c, n), h
+
+    z = jnp.zeros((B, D), jnp.float32)
+    (_, _, _), hs = jax.lax.scan(body, (z, z, z), xw.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2).astype(x.dtype), None
+
+
+def slstm_cache_init(cfg: ArchConfig, batch: int) -> Dict:
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"h": z, "c": z, "n": z}
+
+
+# ====================================================================== Mamba2
+
+MAMBA_HEADDIM = 64
+MAMBA_CONV = 4
+
+
+def mamba2_init(key, cfg: ArchConfig) -> Params:
+    D, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = di // MAMBA_HEADDIM
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    m = "int8" if cfg.linear_mode in ("int8", "sparse_int8") else "dense"
+    d_xbc = di + 2 * N
+    return {
+        "win": linear_init(ks[0], D, di + d_xbc + H, dtype=dt, mode=m),  # z,xBC,dt
+        "conv": (jax.random.normal(ks[1], (MAMBA_CONV, d_xbc)) * 0.1).astype(dt),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "wout": linear_init(ks[2], di, D, dtype=dt, mode=m),
+    }
+
+
+def _mamba_proj(p, cfg, x, conv_state=None):
+    """Shared projection + causal conv. Returns z, xs, Bm, Cm, dt, new conv state."""
+    B, T, D = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    H = di // MAMBA_HEADDIM
+    zxd = linear_apply(p["win"], x)
+    # split points: z: di, xBC: di + 2N, dt: H
+    z = zxd[..., :di]
+    xBC = zxd[..., di: 2 * di + 2 * N]
+    dt_raw = zxd[..., 2 * di + 2 * N:]
+    kern = p["conv"].astype(jnp.float32)  # (W, d_xbc)
+    xf = xBC.astype(jnp.float32)
+    if conv_state is None:
+        pad = jnp.pad(xf, ((0, 0), (MAMBA_CONV - 1, 0), (0, 0)))
+        conv = sum(pad[:, i: i + T] * kern[i] for i in range(MAMBA_CONV))
+        new_state = pad[:, -(MAMBA_CONV - 1):] if T >= MAMBA_CONV - 1 else None
+    else:
+        window = jnp.concatenate([conv_state, xf], axis=1)  # (B, W-1+T, d)
+        conv = sum(window[:, i: i + T] * kern[i] for i in range(MAMBA_CONV))
+        new_state = window[:, -(MAMBA_CONV - 1):]
+    conv = jax.nn.silu(conv)
+    xs = conv[..., :di].reshape(B, T, H, MAMBA_HEADDIM)
+    Bm = conv[..., di: di + N]
+    Cm = conv[..., di + N:]
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    return z, xs, Bm, Cm, dtv, new_state
+
+
+def mamba2_apply(p, cfg: ArchConfig, x, cache: Optional[Dict] = None):
+    B, T, D = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    H = di // MAMBA_HEADDIM
+    P = MAMBA_HEADDIM
+    A = -jnp.exp(p["a_log"])  # (H,) negative
+
+    if cache is not None:
+        z, xs, Bm, Cm, dtv, conv_state = _mamba_proj(
+            p, cfg, x, conv_state=cache["conv"])
+        S = cache["S"]                       # (B,H,P,N)
+        dec = jnp.exp(A * dtv[:, 0])         # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtv[:, 0], Bm[:, 0], xs[:, 0])
+        S = dec[..., None, None] * S + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], S)
+        y = y + p["d_skip"][None, :, None] * xs[:, 0]
+        y = y.reshape(B, 1, di) * jax.nn.silu(z.astype(jnp.float32))
+        return linear_apply(p["wout"], y.astype(x.dtype)), {"S": S, "conv": conv_state}
+
+    z, xs, Bm, Cm, dtv, _ = _mamba_proj(p, cfg, x)
+    L = min(CHUNK, T)
+    pad = (-T) % L
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+    NC = xs.shape[1] // L
+
+    xc = xs.reshape(B, NC, L, H, P).transpose(1, 0, 3, 2, 4)   # (NC,B,H,L,P)
+    Bc = Bm.reshape(B, NC, L, N).transpose(1, 0, 2, 3)         # (NC,B,L,N)
+    Cc = Cm.reshape(B, NC, L, N).transpose(1, 0, 2, 3)
+    dc = dtv.reshape(B, NC, L, H).transpose(1, 0, 3, 2)        # (NC,B,H,L)
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(S, inp):
+        xb, Bb, Cb, db = inp
+        la = jnp.cumsum(A[None, :, None] * db, axis=-1)        # (B,H,L) <= 0
+        # intra-chunk
+        diff = la[..., :, None] - la[..., None, :]             # (B,H,L,L)
+        M = jnp.where(causal[None, None], jnp.exp(diff) * db[..., None, :], 0.0)
+        cb = jnp.einsum("bln,bsn->bls", Cb, Bb)                # (B,L,L)
+        y_in = jnp.einsum("bhls,bls,bhsp->bhlp", M, cb, xb)
+        # inter-chunk
+        y_x = jnp.einsum("bln,bhpn->bhlp", Cb, S)
+        y_out = y_in + jnp.exp(la)[..., None] * y_x
+        # state update
+        w = jnp.exp(la[..., -1:] - la) * db                    # (B,H,L)
+        dBx = jnp.einsum("bhl,bln,bhlp->bhpn", w, Bb, xb)
+        S = jnp.exp(la[..., -1])[..., None, None] * S + dBx
+        return S, y_out
+
+    S0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(body, S0, (xc, Bc, Cc, dc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, NC * L, di)[:, :T]
+    y = y + (p["d_skip"][None, None, :, None] * xs[:, :T].reshape(B, T, H, P)
+             ).reshape(B, T, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return linear_apply(p["wout"], y.astype(x.dtype)), None
+
+
+def mamba2_cache_init(cfg: ArchConfig, batch: int) -> Dict:
+    di, N = cfg.d_inner, cfg.ssm_state
+    H = di // MAMBA_HEADDIM
+    return {
+        "S": jnp.zeros((batch, H, MAMBA_HEADDIM, N), jnp.float32),
+        "conv": jnp.zeros((batch, MAMBA_CONV - 1, di + 2 * N), jnp.float32),
+    }

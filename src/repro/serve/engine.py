@@ -1,0 +1,113 @@
+"""Batched serving engine: continuous batching over the decode step.
+
+Every engine step feeds **exactly one token per active slot** into the
+jitted ``decode_step``: a pending prompt token if the request is still
+prefilling, else the token generated last step.  Requests join whenever a
+slot is free (continuous batching) and leave when their budget is done —
+the cache stays consistent because every slot advances by exactly one
+position per step.  Idle slots are fed a pad token and their outputs are
+ignored (their cache slot is reset on admission — slot reuse is free
+because admission rewrites ``length`` only through real tokens... see
+``_reset_slot``).
+
+This is the same ``decode_step`` the dry run lowers for the 256-chip mesh;
+here it runs on CPU for examples/tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ArchConfig
+from ..models.model import decode_step, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (T,) int32
+    max_new_tokens: int = 16
+    out: Optional[List[int]] = None  # generated tokens
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, *, batch_slots: int = 4,
+                 max_len: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, batch_slots, max_len)
+        self._fresh = init_cache(cfg, batch_slots, max_len)
+        self.active: Dict[int, Request] = {}
+        self.prompt_pos: Dict[int, int] = {}
+        self.remaining: Dict[int, int] = {}
+        self.last_tok = np.zeros((batch_slots, 1), np.int32)
+        self.queue: List[Request] = []
+        self.steps_run = 0
+        self._step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    def _reset_slot(self, slot: int):
+        """Zero one slot's cache (batch axis differs per leaf family —
+        match against the fresh cache's same-shaped leaf)."""
+        def reset(cur, fresh):
+            # batch axis = the axis whose size == self.slots; reset that
+            # slot by splicing in the fresh (zero) values.
+            for ax in range(1, cur.ndim):  # axis 0 is always the layer stack
+                if cur.shape[ax] == self.slots:
+                    idx = [slice(None)] * cur.ndim
+                    idx[ax] = slot
+                    return cur.at[tuple(idx)].set(fresh[tuple(idx)])
+            return cur
+        self.cache = jax.tree_util.tree_map(reset, self.cache, self._fresh)
+
+    def _admit(self):
+        free = [s for s in range(self.slots) if s not in self.active]
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            self._reset_slot(slot)
+            self.active[slot] = req
+            self.prompt_pos[slot] = 0
+            self.remaining[slot] = req.max_new_tokens
+            self.last_tok[slot, 0] = int(req.prompt[0])
+            self.prompt_pos[slot] = 1
+
+    def step(self) -> int:
+        self._admit()
+        if not self.active:
+            return 0
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(self.last_tok))
+        self.steps_run += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        done = []
+        for slot, req in self.active.items():
+            pos = self.prompt_pos[slot]
+            if pos < len(req.prompt):
+                # still prefilling: feed the next prompt token
+                self.last_tok[slot, 0] = int(req.prompt[pos])
+                self.prompt_pos[slot] = pos + 1
+            else:
+                self.last_tok[slot, 0] = int(nxt[slot])
+                req.out.append(int(nxt[slot]))
+                self.remaining[slot] -= 1
+                if self.remaining[slot] <= 0:
+                    done.append(slot)
+        for slot in done:
+            del self.active[slot], self.remaining[slot], self.prompt_pos[slot]
+        return len(self.active)
+
+    def run(self) -> List[Request]:
+        submitted = list(self.queue)
+        while self.queue or self.active:
+            self.step()
+        return submitted

@@ -1,0 +1,114 @@
+"""Train/serve step builders — the jit entry points the launcher lowers.
+
+``make_train_step``: microbatched gradient accumulation (scan), AdamW,
+frozen-sparsity masks, f32 accumulation; activations live at microbatch
+granularity so the 405B × 1M-token step fits per-chip HBM with remat.
+
+``make_prefill_step`` / ``make_serve_step``: inference entry points —
+prefill returns last-position logits (the full (B, 32k, V) logits tensor is
+never materialised); serve consumes/updates the sharded KV or state cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from ..models.model import decode_step, forward, loss_fn
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+PyTree = Any
+
+
+def pick_n_micro(cfg: ArchConfig, global_batch: int, dp_size: int,
+                 *, seqs_per_shard: int = 2) -> int:
+    """Microbatching policy, activation-budget driven: target
+    ``seqs_per_shard`` sequences per data shard per microbatch (remat keeps
+    the per-layer working set at one microbatch; the f32 grad-accum buffer
+    is fully sharded, so accumulation is cheap relative to activations)."""
+    per_shard = max(1, global_batch // max(dp_size, 1))
+    n = max(1, per_shard // seqs_per_shard)
+    n = min(n, global_batch)
+    while global_batch % n or (global_batch // n) % dp_size:
+        n -= 1
+    return max(n, 1)
+
+
+def _split_trainable(params):
+    """Partition params into (trainable float leaves, frozen int leaves) —
+    int8-stored weights train via fake-quant masters elsewhere; here they
+    are simply frozen (differentiating an int8 leaf is a type error)."""
+    import jax.numpy as jnp
+
+    def is_float(x):
+        return jnp.issubdtype(x.dtype, jnp.inexact)
+
+    trainable = jax.tree_util.tree_map(lambda x: x if is_float(x) else None,
+                                       params)
+    frozen = jax.tree_util.tree_map(lambda x: None if is_float(x) else x,
+                                    params)
+    return trainable, frozen
+
+
+def _merge(trainable, frozen):
+    return jax.tree_util.tree_map(
+        lambda a, b: a if a is not None else b, trainable, frozen,
+        is_leaf=lambda x: x is None)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, n_micro: int = 1,
+                    masks: Optional[PyTree] = None):
+    def loss_trainable(trainable, frozen, batch):
+        return loss_fn(_merge(trainable, frozen), cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        trainable, frozen = _split_trainable(params)
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_trainable)(
+                trainable, frozen, batch)
+            losses = loss
+        else:
+            def reshape(x):
+                return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+            micro = jax.tree_util.tree_map(reshape, batch)
+
+            def body(gacc, mb):
+                loss, g = jax.value_and_grad(loss_trainable)(
+                    trainable, frozen, mb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return gacc, loss
+
+            gz = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), trainable)
+            grads, losses = jax.lax.scan(body, gz, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        # frozen (integer) leaves get scalar-zero placeholders so the
+        # optimizer tree matches; adamw skips non-inexact params.
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g if g is not None else jnp.zeros((), jnp.float32),
+            grads, params, is_leaf=lambda x: x is None)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, opt_cfg, masks=masks)
+        metrics["loss"] = jnp.mean(losses)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits = forward(params, cfg, batch)
+        return logits[:, -1]  # (B, V): next-token distribution only
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens):
+        return decode_step(params, cfg, cache, tokens)
+
+    return serve_step

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Smoke tests and benches must see the single real CPU device (the 512-way
+# host-device override belongs to dryrun.py ONLY).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,79 @@
+"""DSE (Fig. 1 workflow) invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FoldingConfig,
+    LayerSpec,
+    TPU_V5E,
+    balanced_folding_baseline,
+    network_estimate,
+    run_dse,
+)
+
+
+def _lenet_like():
+    return [
+        LayerSpec("conv1", "conv", flops=2 * 4.7e6, weight_elems=2400,
+                  act_bytes=8e4, max_block_density=0.3, max_element_density=0.1),
+        LayerSpec("conv2", "conv", flops=2 * 24e6, weight_elems=48000,
+                  act_bytes=5e4, max_block_density=0.3, max_element_density=0.1),
+        LayerSpec("fc1", "linear", flops=2 * 4.8e5, weight_elems=480000,
+                  act_bytes=2e3, max_block_density=0.25, max_element_density=0.08),
+        LayerSpec("fc2", "linear", flops=2 * 1e4, weight_elems=10080,
+                  act_bytes=500, max_block_density=0.4, max_element_density=0.15),
+        LayerSpec("fc3", "linear", flops=2 * 840, weight_elems=840,
+                  act_bytes=100, max_block_density=0.5, max_element_density=0.3),
+    ]
+
+
+def test_dse_final_ii_never_worse_than_baseline():
+    res = run_dse(_lenet_like(), resource_budget=8e6)
+    assert res.estimate.ii <= res.baseline.ii + 1e-18
+
+
+def test_dse_trace_ii_monotone_nonincreasing():
+    res = run_dse(_lenet_like(), resource_budget=8e6)
+    iis = [t["ii"] for t in res.trace]
+    assert all(b <= a + 1e-18 for a, b in zip(iis, iis[1:]))
+
+
+def test_dse_respects_budget():
+    budget = 8e6
+    res = run_dse(_lenet_like(), resource_budget=budget)
+    assert res.estimate.resource <= budget
+
+
+@settings(max_examples=10, deadline=None)
+@given(b1=st.floats(2e6, 3e7), b2=st.floats(2e6, 3e7))
+def test_dse_more_budget_never_hurts(b1, b2):
+    lo, hi = min(b1, b2), max(b1, b2)
+    r_lo = run_dse(_lenet_like(), resource_budget=lo)
+    r_hi = run_dse(_lenet_like(), resource_budget=hi)
+    assert r_hi.estimate.ii <= r_lo.estimate.ii * 1.10 + 1e-18
+
+
+def test_sparse_layers_are_prunable():
+    specs = _lenet_like()
+    specs[0].prunable = False
+    res = run_dse(specs, resource_budget=8e6)
+    assert "conv1" not in res.sparse_layers
+
+
+def test_balanced_baseline_fits_budget():
+    specs = _lenet_like()
+    budget = 1e7
+    cfgs = balanced_folding_baseline(specs, TPU_V5E, budget)
+    est = network_estimate(specs, cfgs, TPU_V5E)
+    assert est.resource <= budget
+
+
+def test_network_estimate_dataflow_semantics():
+    specs = _lenet_like()
+    cfgs = [FoldingConfig() for _ in specs]
+    est = network_estimate(specs, cfgs, TPU_V5E)
+    per = [r["total"] for r in est.per_layer]
+    assert abs(est.latency - sum(per)) < 1e-12         # fill = sum
+    assert abs(est.ii - max(per)) < 1e-18              # II = bottleneck
+    assert abs(est.throughput - 1.0 / max(per)) < 1e-6
+    assert est.bottleneck == specs[int(np.argmax(per))].name

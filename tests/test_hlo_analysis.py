@@ -1,0 +1,69 @@
+"""The while-aware HLO analyzer must recover scan trip counts exactly
+(XLA's cost_analysis counts while bodies once — the reason this exists)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyse_hlo, roofline_terms
+
+
+def _scan_model(x, w):
+    def body(h, wi):
+        return jnp.tanh(h @ wi), None
+    h, _ = jax.lax.scan(body, x, w)
+    return h
+
+
+X = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+W = jax.ShapeDtypeStruct((10, 256, 256), jnp.float32)
+ONE_LAYER_FLOPS = 2 * 128 * 256 * 256
+
+
+def test_scan_flops_trip_multiplied():
+    c = jax.jit(_scan_model).lower(X, W).compile()
+    r = analyse_hlo(c.as_text())
+    assert abs(r["flops"] / (ONE_LAYER_FLOPS * 10) - 1.0) < 0.05
+    assert r["unknown_trip_whiles"] == 0
+
+
+def test_nested_scan_flops():
+    def g(x, w):
+        def outer(h, wi):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ wi), None
+            h2, _ = jax.lax.scan(inner, h, None, length=3)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, w)
+        return h
+    c = jax.jit(g).lower(X, W).compile()
+    r = analyse_hlo(c.as_text())
+    assert abs(r["flops"] / (ONE_LAYER_FLOPS * 30) - 1.0) < 0.05
+
+
+def test_grad_flops_three_x_forward():
+    def loss(x, w):
+        return jnp.sum(_scan_model(x, w) ** 2)
+    c = jax.jit(jax.grad(loss, argnums=1)).lower(X, W).compile()
+    r = analyse_hlo(c.as_text())
+    assert 2.5 < r["flops"] / (ONE_LAYER_FLOPS * 10) < 3.6
+
+
+def test_conv_flops_exact():
+    def cv(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    cx = jax.ShapeDtypeStruct((8, 28, 28, 3), jnp.float32)
+    cw = jax.ShapeDtypeStruct((5, 5, 3, 16), jnp.float32)
+    c = jax.jit(cv).lower(cx, cw).compile()
+    r = analyse_hlo(c.as_text())
+    expect = 2 * 8 * 24 * 24 * 16 * (5 * 5 * 3)
+    assert abs(r["flops"] / expect - 1.0) < 0.05
+
+
+def test_roofline_terms_bound_selection():
+    t = roofline_terms(1e15, 1e9, 0.0, n_chips=1)
+    assert t["bound"] == "compute"
+    t = roofline_terms(1e9, 1e12, 0.0, n_chips=1)
+    assert t["bound"] == "memory"
+    t = roofline_terms(1e9, 1e9, 1e12, n_chips=1)
+    assert t["bound"] == "collective"

@@ -1,0 +1,29 @@
+"""DSE over the LM layer IR (the Fig. 1 engine at LM scale)."""
+from repro.configs import ARCH_IDS, get_config
+from repro.core import run_dse
+from repro.core.lm_ir import lm_layer_specs
+from repro.models.config import SHAPES
+
+
+def test_lm_ir_covers_all_archs_and_shapes():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in cfg.applicable_shapes():
+            specs = lm_layer_specs(cfg, shape)
+            assert len(specs) >= cfg.n_layers
+            assert all(s.flops > 0 and s.weight_elems > 0 for s in specs)
+            # embeddings stay dense (accuracy policy)
+            assert not specs[-1].prunable
+
+
+def test_dse_sparse_unfolds_prunable_lm_layers():
+    """On a weight-dominated training cell the DSE should statically
+    sparsify the transformer layers (the decision the §Perf hillclimb made
+    by hand) while leaving the non-prunable embedding dense."""
+    cfg = get_config("llama3.2-1b")
+    specs = lm_layer_specs(cfg, SHAPES["train_4k"])
+    res = run_dse(specs, resource_budget=12 * 2**30)
+    assert len(res.sparse_layers) >= cfg.n_layers  # attn+mlp per layer
+    assert "embed_unembed" not in res.sparse_layers
+    assert res.estimate.resource <= 12 * 2**30
+    assert res.estimate.ii <= res.baseline.ii

@@ -1,0 +1,69 @@
+"""Pruning invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    block_aware_prune,
+    global_magnitude_prune,
+    layer_magnitude_prune,
+    pattern_from_mask,
+    sparsity_of,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparsity=st.floats(0.0, 0.95), seed=st.integers(0, 2**31 - 1))
+def test_layer_magnitude_sparsity_close(sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(40, 50))
+    mask = layer_magnitude_prune(w, sparsity)
+    achieved = sparsity_of(mask)
+    assert abs(achieved - sparsity) < 0.02
+    # kept weights dominate pruned ones in magnitude
+    if mask.any() and (~mask).any():
+        assert np.abs(w[mask]).min() >= np.abs(w[~mask]).max() - 1e-12
+
+
+def test_global_magnitude_single_threshold():
+    rng = np.random.default_rng(0)
+    weights = {"a": rng.normal(size=(20, 20)), "b": rng.normal(size=(30, 10))}
+    masks = global_magnitude_prune(weights, 0.5)
+    kept = np.concatenate([np.abs(weights[k][masks[k]]) for k in weights])
+    dropped = np.concatenate([np.abs(weights[k][~masks[k]]) for k in weights])
+    assert kept.min() >= dropped.max() - 1e-12
+
+
+def test_global_magnitude_respects_prunable():
+    rng = np.random.default_rng(0)
+    weights = {"a": rng.normal(size=(20, 20)), "norm": rng.normal(size=(20,))}
+    masks = global_magnitude_prune(weights, 0.9, prunable=lambda n: n != "norm")
+    assert masks["norm"].all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bd=st.floats(0.1, 1.0), ed=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_aware_block_density_exact(bd, ed, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(32, 48))
+    mask = block_aware_prune(w, (8, 8), block_density=bd, in_block_density=ed)
+    pat = pattern_from_mask(mask, (8, 8))
+    n_total = pat.n_blocks_total
+    expect = int(np.ceil(bd * n_total))
+    assert pat.n_blocks_present <= expect
+    # element density inside kept blocks >= requested (ties may add a few)
+    if pat.n_blocks_present:
+        per_block = pat.nnz / (pat.n_blocks_present * 64)
+        assert per_block >= min(ed, 1.0) - 0.02
+
+
+def test_block_aware_keeps_heaviest_blocks():
+    w = np.zeros((16, 16))
+    w[:8, :8] = 10.0   # block (0,0) is heaviest
+    w[8:, 8:] = 0.1
+    mask = block_aware_prune(w, (8, 8), block_density=0.25)
+    pat = pattern_from_mask(mask, (8, 8))
+    assert pat.n_blocks_present == 1
+    assert pat.block_rows[0] == 0 and pat.block_cols[0] == 0

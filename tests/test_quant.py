@@ -1,0 +1,33 @@
+"""Quantisation unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dequantize, fake_quant, qmax, quantize
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_quant_roundtrip_error_bound(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(24, 36)).astype(np.float32)
+    q = quantize(w, bits, axis=1)
+    back = np.asarray(dequantize(q))
+    step = np.asarray(q.scales)
+    assert (np.abs(back - w) <= 0.5 * step[None, :] + 1e-7).all()
+    assert q.values.dtype == jnp.int8
+    assert np.abs(np.asarray(q.values)).max() <= qmax(bits)
+
+
+def test_fake_quant_straight_through_gradient():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)), jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, 8) * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones((8, 8)), atol=1e-6)
+
+
+def test_fake_quant_forward_matches_quantize():
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(16, 16)), jnp.float32)
+    fq = np.asarray(fake_quant(w, 8, axis=1))
+    dq = np.asarray(dequantize(quantize(w, 8, axis=1)))
+    np.testing.assert_allclose(fq, dq, atol=1e-6)

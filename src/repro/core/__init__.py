@@ -27,3 +27,12 @@ from .cost_model import (
     NetworkEstimate,
 )
 from .dse import DSEResult, run_dse, balanced_folding_baseline
+from .compile_sparse import (
+    CompileRules,
+    CompressedModel,
+    LayerReport,
+    choose_policy,
+    compile_lenet,
+    compile_model,
+    decompress_model,
+)

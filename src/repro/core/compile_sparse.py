@@ -1,0 +1,728 @@
+"""Whole-model compression pass — one canonical compressed representation.
+
+``compile_model`` (transformer pytrees) and ``compile_lenet`` (the paper's
+Table-1 workload) take trained params + per-layer masks (from
+:func:`repro.core.pruning.block_aware_prune`) + quant scales (from
+:mod:`repro.core.quant`) and lower every eligible (K, N) linear onto the
+engine-free datapath:
+
+* ``dense``  — weight kept as-is (small / awkward shapes);
+* ``quant``  — int8 storage with per-output-channel scales, executed by the
+  fused-dequant matmul (``{"w_q", "w_s"}`` leaves / :class:`QuantizedTensor`);
+* ``sparse`` — compile-time block-compacted, optionally int8, executed by
+  the static-schedule Pallas kernel or its XLA static-gather twin
+  (``{"w_blk"[, "w_s"]}`` leaves / :class:`CompressedLinear`).
+
+The per-layer policy is chosen by a roofline heuristic over
+:mod:`repro.core.cost_model` (decode-shaped by default: weight streaming
+dominates, so eliminated blocks pay off immediately).
+
+Representation invariant (what makes this pass composable with scan /
+sharding): **one BlockSparsePattern per (K, N) linear shape**, shared by
+every layer of the stack.  Stacked parameter leaves stay stackable —
+``w_blk`` is (L, P, bk, bn) — so the 126-layer While-loop lowering and the
+serving engine's jitted ``decode_step`` consume the compacted format
+directly.  The shared bitmap is scored by block L1 mass *summed across the
+stack*; inside surviving blocks each layer keeps its own unstructured
+element mask (free at runtime, counted in nnz).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .cost_model import HWSpec, LayerSpec, TPU_V5E, layer_latency
+from .folding import FoldingConfig
+from .quant import QuantizedTensor, dequantize, quantize
+from .sparsity import (
+    BlockSparsePattern,
+    CompressedLinear,
+    compress,
+    decompress,
+    pattern_from_bitmap,
+    pattern_from_mask,
+)
+
+__all__ = [
+    "CompileRules",
+    "LayerReport",
+    "CompressedModel",
+    "choose_policy",
+    "compile_model",
+    "compile_lenet",
+    "decompress_model",
+]
+
+POLICIES = ("dense", "quant", "sparse")
+
+# Stacked transformer linear leaves the pass may rewrite.  SSM/Mamba blocks
+# reuse some of these names but apply them without a pattern table, so the
+# walk below only descends into attention/MLP subtrees (see _iter_linears).
+_LINEAR_KEYS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+_LINEAR_SUBTREES = ("attn", "mlp", "shared")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileRules:
+    """Knobs of the compression pass (all compile-time)."""
+
+    block: Tuple[int, int] = (128, 128)   # clipped per-shape to (K, N)
+    quant_bits: int = 8
+    block_density: float = 0.25           # target when deriving masks
+    in_block_density: float = 1.0         # unstructured level inside blocks
+    batch_tokens: int = 1                 # cost-model shape (decode default)
+    hw: HWSpec = TPU_V5E
+    min_weight_elems: int = 4096          # below this: always dense
+    quantize_sparse: bool = True          # sparse blocks stored int8
+    dtype: Any = jnp.float32              # float storage dtype (non-quant)
+    policies: Optional[Dict[str, str]] = None  # per-leaf-name override
+
+
+@dataclasses.dataclass
+class LayerReport:
+    name: str
+    policy: str
+    shape: Tuple[int, int]
+    n_layers: int
+    dense_bytes: int
+    compressed_bytes: int
+    block_density: float
+    element_density: float
+
+
+@dataclasses.dataclass
+class CompressedModel:
+    """The canonical compressed-parameter representation.
+
+    ``params`` is consumed directly by ``models.model.forward`` /
+    ``decode_step`` (transformers) or ``models.lenet.lenet_forward`` via
+    ``layers`` (LeNet-style per-name payloads).  ``patterns`` is the static
+    side-table: (K, N) -> BlockSparsePattern, passed to the model at trace
+    time (compile-time constants, never traced).
+    """
+
+    params: Any
+    patterns: Dict[Tuple[int, int], BlockSparsePattern]
+    report: List[LayerReport]
+    layers: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def storage_bytes(self) -> int:
+        """Payload bytes of every layer plus each shared schedule's static
+        metadata exactly once — patterns are shared across same-shape
+        leaves, so their bitmap/coord bytes are model-level, not
+        per-leaf (LayerReport.compressed_bytes is payload-only for
+        sparse layers)."""
+        return sum(r.compressed_bytes for r in self.report) \
+            + sum(p.meta_bytes for p in self.patterns.values())
+
+    @property
+    def dense_bytes(self) -> int:
+        return sum(r.dense_bytes for r in self.report)
+
+    @property
+    def compression(self) -> float:
+        return self.dense_bytes / max(1, self.storage_bytes)
+
+    def policy_of(self, name: str) -> str:
+        for r in self.report:
+            if r.name == name:
+                return r.policy
+        raise KeyError(name)
+
+
+# ------------------------------------------------------------------ policy
+
+
+def choose_policy(
+    K: int,
+    N: int,
+    *,
+    rules: CompileRules,
+    block_density: float,
+    element_density: float,
+    sparse_eligible: bool,
+) -> str:
+    """Roofline-based per-layer policy pick (cost_model heuristic).
+
+    Builds a decode-shaped LayerSpec and compares the three datapaths'
+    latencies; storage-floor gates keep tiny layers dense (metadata and
+    kernel launch overheads dominate real wins there).
+    """
+    if K * N < rules.min_weight_elems:
+        return "dense"
+    spec = LayerSpec(
+        name="_", kind="linear",
+        flops=2.0 * K * N * rules.batch_tokens,
+        weight_elems=K * N,
+        act_bytes=4.0 * rules.batch_tokens * (K + N),
+    )
+    hw = rules.hw
+    lat = {
+        "dense": layer_latency(
+            spec, FoldingConfig(parallelism=hw.lanes, unroll="factor",
+                                quant_bits=16), hw)["total"],
+        "quant": layer_latency(
+            spec, FoldingConfig(parallelism=hw.lanes, unroll="factor",
+                                quant_bits=rules.quant_bits), hw)["total"],
+    }
+    if sparse_eligible:
+        lat["sparse"] = layer_latency(
+            spec, FoldingConfig(parallelism=hw.lanes, unroll="sparse",
+                                block_density=block_density,
+                                element_density=element_density,
+                                quant_bits=rules.quant_bits), hw)["total"]
+    return min(lat, key=lat.get)
+
+
+def _fit_block(K: int, N: int, block: Tuple[int, int]) -> Optional[Tuple[int, int]]:
+    """Clip the rule block to the shape; None if it cannot tile (K, N)."""
+    bk, bn = min(block[0], K), min(block[1], N)
+    if bk < 1 or bn < 1 or K % bk or N % bn:
+        return None
+    return bk, bn
+
+
+# ----------------------------------------------------- shared mask helpers
+
+
+def _shared_bitmap(stack: np.ndarray, block: Tuple[int, int],
+                   block_density: float) -> np.ndarray:
+    """One block bitmap for a whole (L, K, N) stack: score by summed |w|."""
+    L, K, N = stack.shape
+    bk, bn = block
+    score = np.abs(stack).reshape(L, K // bk, bk, N // bn, bn).sum(axis=(0, 2, 4))
+    n_total = score.size
+    n_keep = max(1, int(np.ceil(block_density * n_total)))
+    flat = score.ravel()
+    keep = np.argpartition(flat, n_total - n_keep)[n_total - n_keep:]
+    bitmap = np.zeros(n_total, dtype=bool)
+    bitmap[keep] = True
+    return bitmap.reshape(score.shape)
+
+
+def _element_mask(w: np.ndarray, bitmap: np.ndarray, block: Tuple[int, int],
+                  in_block_density: float) -> np.ndarray:
+    """Per-layer element mask under a fixed bitmap; >= 1 element survives in
+    every present block so pattern_from_mask reproduces the shared bitmap."""
+    K, N = w.shape
+    bk, bn = block
+    gb = w.reshape(K // bk, bk, N // bn, bn)
+    if in_block_density >= 1.0:
+        em = np.broadcast_to(bitmap[:, None, :, None], gb.shape)
+        return em.reshape(K, N).copy()
+    k_in = max(1, int(np.ceil(in_block_density * bk * bn)))
+    m4 = np.zeros(gb.shape, dtype=bool)
+    for r, c in zip(*np.nonzero(bitmap)):
+        blk = np.abs(gb[r, :, c, :])
+        thr = np.partition(blk.ravel(), blk.size - k_in)[blk.size - k_in]
+        m4[r, :, c, :] = blk >= thr
+    return m4.reshape(K, N)
+
+
+def _mask_bitmap(mask: np.ndarray, block: Tuple[int, int]) -> np.ndarray:
+    return pattern_from_mask(mask, block).bitmap
+
+
+def _decide_policy(
+    name: str,
+    override: Optional[str],
+    K: int,
+    N: int,
+    rules: CompileRules,
+    *,
+    block: Optional[Tuple[int, int]],
+    block_density: float,
+    element_density: float,
+) -> str:
+    """Per-layer policy gate shared by compile_model and compile_lenet:
+    explicit override, else cost model; sparse downgrades to quant when the
+    rule block cannot tile the shape."""
+    if override is not None and override not in POLICIES:
+        raise ValueError(
+            f"{name}: unknown policy {override!r} — valid: {POLICIES}")
+    if override == "sparse" and block is None:
+        raise ValueError(
+            f"{name}: policy 'sparse' was explicitly requested but block "
+            f"{rules.block} cannot tile shape {(K, N)} — pick a dividing "
+            "block or drop the override")
+    policy = override or choose_policy(
+        K, N, rules=rules, block_density=block_density,
+        element_density=element_density, sparse_eligible=block is not None)
+    if policy == "sparse" and block is None:  # cost-model fallback only
+        policy = "quant"
+    return policy
+
+
+# --------------------------------------------------------- leaf compilers
+
+
+def _quantize_stack(stack: np.ndarray, bits: int):
+    """(L, K, N) -> w_q (L, K, N) int8, w_s (L, N) f32 per-out-channel."""
+    qs, ss = [], []
+    for wl in stack:
+        qt = quantize(wl, bits, axis=1)
+        qs.append(np.asarray(qt.values))
+        ss.append(np.asarray(qt.scales).reshape(-1))
+    return jnp.asarray(np.stack(qs)), jnp.asarray(np.stack(ss).astype(np.float32))
+
+
+def _compress_stack(
+    stack: np.ndarray,
+    masks: np.ndarray,
+    pattern: BlockSparsePattern,
+    rules: CompileRules,
+) -> Tuple[Dict[str, jnp.ndarray], int, float]:
+    """Pack an (L, K, N) stack under the forced shared pattern.
+
+    Returns (leaves, payload_bytes, element_density).  Payload bytes are
+    blocks + scales only: the shared pattern's static metadata is counted
+    once per pattern by CompressedModel.storage_bytes, since one schedule
+    may serve several same-shape leaves."""
+    L = stack.shape[0]
+    block = pattern.block
+    blk_list, scale_list = [], []
+    total_bytes = 0
+    nnz = 0
+    for wl, ml in zip(stack, masks):
+        if rules.quantize_sparse:
+            qt = quantize(wl * ml, rules.quant_bits, axis=1)
+            cl = compress(wl, ml, block, pattern=pattern,
+                          quant_scales=np.asarray(qt.scales).reshape(-1),
+                          quant_bits=rules.quant_bits)
+            scale_list.append(np.asarray(cl.scales))
+            total_bytes += cl.scales.size * cl.scales.dtype.itemsize
+        else:
+            cl = compress(wl, ml, block, pattern=pattern, dtype=rules.dtype)
+        blk_list.append(np.asarray(cl.blocks))
+        total_bytes += cl.blocks.size * cl.blocks.dtype.itemsize
+        nnz += cl.pattern.nnz
+    leaves: Dict[str, jnp.ndarray] = {"w_blk": jnp.asarray(np.stack(blk_list))}
+    if scale_list:
+        leaves["w_s"] = jnp.asarray(np.stack(scale_list))
+    K, N = pattern.shape
+    return leaves, total_bytes, nnz / (L * K * N)
+
+
+@dataclasses.dataclass
+class _LeafPlan:
+    """Phase-A analysis of one linear leaf (see compile_model)."""
+
+    path: str
+    parent: dict
+    key: str
+    stack: np.ndarray            # (L, K, N) f32
+    stacked: bool
+    mask: Optional[np.ndarray]   # (L, K, N) bool or None
+    block: Optional[Tuple[int, int]]
+    bitmap: Optional[np.ndarray]  # this leaf's own block bitmap (sparse only)
+    policy: str
+    bd: float
+    ed: float
+
+
+# -------------------------------------------------------------- model pass
+
+
+def _iter_linears(tree: Any, path: str = "", in_linear_subtree: bool = False):
+    """Yield (path, parent_dict, key) for every (compiled or raw) linear."""
+    if not isinstance(tree, dict):
+        return
+    for k, v in tree.items():
+        p = f"{path}/{k}" if path else k
+        if (in_linear_subtree and k in _LINEAR_KEYS and isinstance(v, dict)
+                and any(lk in v for lk in ("w", "w_q", "w_blk"))):
+            yield p, tree, k
+        elif isinstance(v, dict):
+            yield from _iter_linears(
+                v, p, in_linear_subtree or k in _LINEAR_SUBTREES)
+
+
+def _copy_spine(tree):
+    """Copy the dict structure; array leaves are shared, never mutated."""
+    if not isinstance(tree, dict):
+        return tree
+    return {k: _copy_spine(v) for k, v in tree.items()}
+
+
+def compile_model(
+    params: Any,
+    cfg: Any,
+    *,
+    masks: Optional[Dict[str, np.ndarray]] = None,
+    rules: CompileRules = CompileRules(),
+) -> CompressedModel:
+    """Lower a transformer parameter pytree onto the compressed datapath.
+
+    ``cfg`` is the model's ArchConfig (only ``family`` is consulted).
+    ``masks`` maps leaf names ("wq", ... or "head") to (L, K, N) / (K, N)
+    boolean keep-masks; absent entries are derived by two-level pruning at
+    ``rules.block_density`` x ``rules.in_block_density``.
+
+    The result's ``params`` drop into ``forward`` / ``decode_step`` /
+    ``ServeEngine`` together with ``patterns``.
+
+    Scope note: MoE routed-expert stacks (``eg``/``eu``/``ed``) and the
+    router are NOT lowered — their dispatch is data-dependent (sort-based
+    top-k), so the static-schedule form does not apply yet.  They still
+    appear as dense rows in the report so ``compression`` reflects the
+    whole model, not just the lowered layers.
+    """
+    if cfg.family not in ("dense", "encoder", "vlm", "moe", "hybrid"):
+        raise NotImplementedError(
+            f"compile_model supports attention/MLP families, got {cfg.family}")
+
+    patterns: Dict[Tuple[int, int], BlockSparsePattern] = {}
+    report: List[LayerReport] = []
+
+    consumed_mask_keys = set()
+    consumed_policy_keys = set()
+
+    def _mask_for(path: str, leaf: str):
+        """Masks may be keyed by full path ("blocks/attn/wq") or leaf name."""
+        if not masks:
+            return None
+        key = path if path in masks else (leaf if leaf in masks else None)
+        if key is None:
+            return None
+        consumed_mask_keys.add(key)
+        m = np.asarray(masks[key], bool)
+        return m if m.ndim == 3 else m[None]
+
+    def _override_for(path: str, leaf: str):
+        """Policy overrides accept the same keys as masks (path or leaf)."""
+        pols = rules.policies
+        if not pols:
+            return None
+        key = path if path in pols else (leaf if leaf in pols else None)
+        if key is None:
+            return None
+        consumed_policy_keys.add(key)
+        return pols[key]
+
+    new_params = _copy_spine(params)
+
+    sites: List[Tuple[str, dict, str]] = []
+    roots = [] if cfg.family == "hybrid" else ["blocks"]
+    if "shared_attn" in params:
+        roots.append("shared_attn")
+    for root_name in roots:
+        sites.extend(_iter_linears(new_params[root_name], root_name))
+    if isinstance(params.get("head"), dict) and any(
+            lk in params["head"] for lk in ("w", "w_q", "w_blk")):
+        sites.append(("head", new_params, "head"))
+
+    # Phase A — analyze each leaf: policy + (for sparse) its own bitmap.
+    plans: List[_LeafPlan] = []
+    for path, parent, key in sites:
+        leaf = parent[key]
+        if "w" not in leaf:
+            raise ValueError(
+                f"{path}: leaf is already compiled ({sorted(leaf)}); "
+                "compile_model expects a raw dense parameter tree — use "
+                "decompress_model() first to recompile")
+        w = np.asarray(leaf["w"], np.float32)
+        stacked = w.ndim == 3
+        stack = w if stacked else w[None]
+        L, K, N = stack.shape
+        mask = _mask_for(path, key)
+        if mask is not None:
+            if mask.shape[1:] != (K, N) or mask.shape[0] not in (1, L):
+                raise ValueError(
+                    f"{path}: mask shape {mask.shape} does not match "
+                    f"weight stack {(L, K, N)}")
+            if mask.shape[0] == 1 and L > 1:  # (K, N) mask: every layer
+                mask = np.broadcast_to(mask, (L, K, N)).copy()
+        block = _fit_block(K, N, rules.block)
+        bitmap = None
+        if mask is not None and block is not None:
+            bitmap = _mask_bitmap(mask[0], block)
+            for ml in mask[1:]:
+                bitmap |= _mask_bitmap(ml, block)
+            bd = bitmap.sum() / bitmap.size
+            ed = mask.sum() / mask.size
+        else:
+            bd = rules.block_density
+            ed = rules.block_density * rules.in_block_density
+        policy = _decide_policy(path, _override_for(path, key), K, N, rules,
+                                block=block, block_density=bd,
+                                element_density=ed)
+        if policy == "sparse" and bitmap is None:
+            bitmap = _shared_bitmap(stack, block, rules.block_density)
+            bd = bitmap.sum() / bitmap.size
+        plans.append(_LeafPlan(path, parent, key, stack, stacked, mask,
+                               block, bitmap, policy, float(bd), float(ed)))
+
+    valid = sorted(pl.path for pl in plans)
+    unused = set(masks or {}) - consumed_mask_keys
+    if unused:
+        raise ValueError(
+            f"masks keys matched no linear leaf: {sorted(unused)} — valid "
+            f"keys are leaf names or full paths from {valid}; a typo here "
+            "would silently drop pruning")
+    unused = set(rules.policies or {}) - consumed_policy_keys
+    if unused:
+        raise ValueError(
+            f"policies keys matched no linear leaf: {sorted(unused)} — "
+            f"valid keys are leaf names or full paths from {valid}")
+
+    # Phase B — one pattern per (K, N) shape: union of the leaf bitmaps.
+    # Blocks a leaf's own mask never touches are packed as zero tiles, the
+    # price of keeping stacked/scan-uniform leaves and a single schedule.
+    for pl in plans:
+        if pl.policy != "sparse":
+            continue
+        K, N = pl.stack.shape[1:]
+        prev = patterns.get((K, N))
+        if prev is None:
+            patterns[(K, N)] = pattern_from_bitmap((K, N), pl.block,
+                                                   pl.bitmap.copy())
+        else:
+            patterns[(K, N)] = pattern_from_bitmap(
+                (K, N), pl.block, prev.bitmap | pl.bitmap)
+
+    # Phase C — rewrite the leaves.
+    for pl in plans:
+        leaf = pl.parent[pl.key]
+        L, K, N = pl.stack.shape
+        dense_bytes = int(np.asarray(leaf["w"]).size
+                          * np.asarray(leaf["w"]).dtype.itemsize)
+        out = {k: v for k, v in leaf.items() if k != "w"}
+        bd, ed = pl.bd, pl.ed
+        # a user mask is honoured under EVERY policy: quant/dense layers
+        # keep the pruned zeros (no silent weight resurrection), they just
+        # don't get the block-compaction storage win
+        masked_stack = pl.stack if pl.mask is None else pl.stack * pl.mask
+        if pl.policy in ("dense", "quant"):
+            bd = 1.0  # no block elimination on these paths
+            ed = 1.0 if pl.mask is None else pl.mask.sum() / pl.mask.size
+        if pl.policy == "dense":
+            if pl.mask is None:
+                out["w"] = leaf["w"]
+            else:
+                w = masked_stack if pl.stacked else masked_stack[0]
+                out["w"] = jnp.asarray(w, np.asarray(leaf["w"]).dtype)
+            comp_bytes = dense_bytes
+        elif pl.policy == "quant":
+            w_q, w_s = _quantize_stack(masked_stack, rules.quant_bits)
+            if not pl.stacked:
+                w_q, w_s = w_q[0], w_s[0]
+            out["w_q"], out["w_s"] = w_q, w_s
+            comp_bytes = int(w_q.size + w_s.size * 4)
+        else:
+            mask = pl.mask
+            if mask is None:
+                mask = np.stack([
+                    _element_mask(wl, pl.bitmap, pl.block,
+                                  rules.in_block_density)
+                    for wl in pl.stack])
+            pattern = patterns[(K, N)]
+            leaves, comp_bytes, ed = _compress_stack(pl.stack, mask,
+                                                     pattern, rules)
+            bd = pattern.block_density
+            if not pl.stacked:
+                leaves = {k: v[0] for k, v in leaves.items()}
+            out.update(leaves)
+        pl.parent[pl.key] = out
+        report.append(LayerReport(
+            name=pl.path, policy=pl.policy, shape=(K, N), n_layers=L,
+            dense_bytes=dense_bytes, compressed_bytes=int(comp_bytes),
+            block_density=float(bd), element_density=float(ed)))
+
+    # Honest accounting for weights the pass leaves dense on purpose (MoE
+    # routed experts + router: data-dependent dispatch, not lowered) so
+    # CompressedModel.compression reflects the whole model.
+    def _report_dense(path, arr):
+        a = np.asarray(arr)
+        K, N = a.shape[-2:]
+        L = int(np.prod(a.shape[:-2], dtype=int)) if a.ndim > 2 else 1
+        b = int(a.size * a.dtype.itemsize)
+        report.append(LayerReport(
+            name=path, policy="dense", shape=(K, N), n_layers=L,
+            dense_bytes=b, compressed_bytes=b,
+            block_density=1.0, element_density=1.0))
+
+    if cfg.family == "moe":
+        moe = params["blocks"].get("moe", {})
+        for k in ("router", "eg", "eu", "ed"):
+            if isinstance(moe.get(k), dict) and "w" in moe[k]:
+                _report_dense(f"blocks/moe/{k}", moe[k]["w"])
+    if cfg.family == "hybrid":
+        # the Mamba superblocks (bulk of a hybrid model) are not lowered —
+        # account them as one aggregate dense row so compression is honest
+        def _tree_bytes(t):
+            if isinstance(t, dict):
+                return sum(_tree_bytes(v) for v in t.values())
+            a = np.asarray(t)
+            return int(a.size * a.dtype.itemsize)
+
+        b = _tree_bytes(params["blocks"])
+        report.append(LayerReport(
+            name="blocks (ssm, not lowered)", policy="dense", shape=(0, 0),
+            n_layers=0, dense_bytes=b, compressed_bytes=b,
+            block_density=1.0, element_density=1.0))
+
+    return CompressedModel(params=new_params, patterns=patterns, report=report)
+
+
+def _decompress_leaf(leaf: Dict[str, Any],
+                     pattern: Optional[BlockSparsePattern], dtype):
+    if "w_q" in leaf:
+        w_q, w_s = np.asarray(leaf["w_q"]), np.asarray(leaf["w_s"])
+        w = w_q.astype(np.float32) * (
+            w_s[..., None, :] if w_q.ndim == 3 else w_s[None, :])
+        out = {k: v for k, v in leaf.items() if k not in ("w_q", "w_s")}
+        out["w"] = jnp.asarray(w, dtype)
+        return out
+    if "w_blk" in leaf:
+        assert pattern is not None, "compiled sparse leaf without a pattern"
+        blk = np.asarray(leaf["w_blk"])
+        stacked = blk.ndim == 4
+        blks = blk if stacked else blk[None]
+        scales = leaf.get("w_s")
+        scales = np.asarray(scales) if scales is not None else None
+        if scales is not None and scales.ndim == 1:
+            scales = scales[None]
+        dense = []
+        for i, b in enumerate(blks):
+            cl = CompressedLinear(
+                pattern=pattern, blocks=jnp.asarray(b),
+                scales=None if scales is None else jnp.asarray(scales[i]))
+            dense.append(np.asarray(decompress(cl), np.float32))
+        w = np.stack(dense) if stacked else dense[0]
+        out = {k: v for k, v in leaf.items() if k not in ("w_blk", "w_s")}
+        out["w"] = jnp.asarray(w, dtype)
+        return out
+    return leaf
+
+
+def decompress_model(cm: CompressedModel, *, dtype=jnp.float32) -> Any:
+    """Dense oracle: reconstruct a plain-``w`` pytree from the compressed
+    one (dequantised, blocks scattered back).  Differential tests run the
+    model on this reconstruction and compare against the compacted path.
+
+    For LeNet-style models (``cm.layers`` payloads) the reconstruction is
+    the original param dict with each compressed ``<name>_w`` replaced by
+    its dequantised / scattered dense weight.
+    """
+    if cm.layers:  # compile_lenet result: rebuild <name>_w from payloads
+        out = dict(cm.params)
+        for name, payload in cm.layers.items():
+            if isinstance(payload, CompressedLinear):
+                out[name + "_w"] = decompress(payload).astype(dtype)
+            elif isinstance(payload, QuantizedTensor):
+                out[name + "_w"] = dequantize(payload).astype(dtype)
+            else:  # masked dense array
+                out[name + "_w"] = jnp.asarray(payload, dtype)
+        return out
+    shape_of = {r.name: r.shape for r in cm.report}
+    out = _copy_spine(cm.params)
+    for root in ("blocks", "shared_attn"):
+        if isinstance(out.get(root), dict):
+            for path, parent, k in _iter_linears(out[root], root):
+                pat = cm.patterns.get(shape_of.get(path))
+                parent[k] = _decompress_leaf(parent[k], pat, dtype)
+    if isinstance(out.get("head"), dict):
+        pat = cm.patterns.get(shape_of.get("head"))
+        out["head"] = _decompress_leaf(out["head"], pat, dtype)
+    return out
+
+
+# -------------------------------------------------------------- LeNet pass
+
+
+def compile_lenet(
+    params: Dict[str, jnp.ndarray],
+    masks: Optional[Dict[str, np.ndarray]] = None,
+    *,
+    rules: CompileRules = CompileRules(block=(8, 4), min_weight_elems=512),
+    blocks: Optional[Dict[str, Tuple[int, int]]] = None,
+) -> CompressedModel:
+    """Compress the LeNet-5 FC layers (the paper's Table-1 workload).
+
+    Returns a CompressedModel whose ``layers`` dict plugs straight into
+    ``lenet_forward(params, x, compressed=cm.layers)``: CompressedLinear for
+    sparse layers, QuantizedTensor for quant-dense, a masked dense array
+    for dense-with-mask, absent for unmasked dense.
+    """
+    from ..models.lenet import LAYERS
+
+    linear_names = [n for n, kind, _ in LAYERS if kind == "linear"]
+    unknown = set(masks or {}) - set(linear_names)
+    if unknown:
+        raise ValueError(
+            f"masks keys matched no LeNet linear layer: {sorted(unknown)} — "
+            f"compile_lenet compresses {linear_names}; conv masks are "
+            "applied at forward time via lenet_forward(masks=...)")
+    unknown = set(rules.policies or {}) - set(linear_names)
+    if unknown:
+        raise ValueError(
+            f"policies keys matched no LeNet linear layer: "
+            f"{sorted(unknown)} — valid names: {linear_names}")
+    unknown = set(blocks or {}) - set(linear_names)
+    if unknown:
+        raise ValueError(
+            f"blocks keys matched no LeNet linear layer: {sorted(unknown)} "
+            f"— valid names: {linear_names}")
+
+    patterns: Dict[Tuple[int, int], BlockSparsePattern] = {}
+    report: List[LayerReport] = []
+    layers: Dict[str, Any] = {}
+    for name, kind, shape in LAYERS:
+        if kind != "linear":
+            continue
+        K, N = shape
+        w = np.asarray(params[name + "_w"], np.float32)
+        block = _fit_block(K, N, (blocks or {}).get(name, rules.block))
+        mask = np.asarray(masks[name], bool) if masks and name in masks else None
+        if mask is not None and block is not None:
+            bitmap = _mask_bitmap(mask, block)
+            bd, ed = bitmap.sum() / bitmap.size, mask.sum() / mask.size
+        else:
+            bd = rules.block_density
+            ed = rules.block_density * rules.in_block_density
+        policy = _decide_policy(name, (rules.policies or {}).get(name),
+                                K, N, rules, block=block,
+                                block_density=bd, element_density=ed)
+        dense_bytes = K * N * 4
+        # as in compile_model: a user mask is honoured under every policy
+        if policy in ("dense", "quant"):
+            bd = 1.0
+            ed = 1.0 if mask is None else mask.sum() / mask.size
+        if policy == "dense":
+            if mask is not None:  # masked dense payload (plain array)
+                layers[name] = jnp.asarray(w * mask, jnp.float32)
+            comp_bytes = dense_bytes
+        elif policy == "quant":
+            qt = quantize(w if mask is None else w * mask,
+                          rules.quant_bits, axis=1)
+            layers[name] = QuantizedTensor(
+                values=qt.values, scales=qt.scales.reshape(N), axis=1,
+                bits=rules.quant_bits)
+            comp_bytes = K * N + N * 4
+        else:
+            if mask is None:
+                bitmap = _shared_bitmap(w[None], block, rules.block_density)
+                mask = _element_mask(w, bitmap, block, rules.in_block_density)
+            if rules.quantize_sparse:
+                qt = quantize(w * mask, rules.quant_bits, axis=1)
+                cl = compress(w, mask, block,
+                              quant_scales=np.asarray(qt.scales).reshape(-1),
+                              quant_bits=rules.quant_bits)
+            else:
+                cl = compress(w, mask, block, dtype=rules.dtype)
+            layers[name] = cl
+            patterns[(K, N)] = cl.pattern
+            # payload only; schedule metadata added once per pattern by
+            # CompressedModel.storage_bytes
+            comp_bytes = cl.storage_bytes - cl.pattern.meta_bytes
+            bd, ed = cl.pattern.block_density, cl.pattern.element_density
+        report.append(LayerReport(
+            name=name, policy=policy, shape=(K, N), n_layers=1,
+            dense_bytes=dense_bytes, compressed_bytes=int(comp_bytes),
+            block_density=float(bd), element_density=float(ed)))
+    return CompressedModel(params=params, patterns=patterns, report=report,
+                           layers=layers)

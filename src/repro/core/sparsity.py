@@ -31,6 +31,7 @@ __all__ = [
     "decompress",
     "compression_ratio",
     "pattern_from_mask",
+    "pattern_from_bitmap",
 ]
 
 
@@ -72,6 +73,13 @@ class BlockSparsePattern:
     def element_density(self) -> float:
         return self.nnz / max(1, self.shape[0] * self.shape[1])
 
+    @property
+    def meta_bytes(self) -> int:
+        """Static schedule metadata: packed bitmap + block coordinates.
+        (Lives in the compiled program, but accounted honestly.)"""
+        return int(np.ceil(self.n_blocks_total / 8)) \
+            + self.block_rows.nbytes + self.block_cols.nbytes
+
     def validate(self) -> None:
         K, N = self.shape
         bm, bn = self.block
@@ -81,6 +89,28 @@ class BlockSparsePattern:
         assert int(self.bitmap.sum()) == self.n_blocks_present
 
 
+def pattern_from_bitmap(
+    shape: Tuple[int, int],
+    block: Tuple[int, int],
+    bitmap: np.ndarray,
+    *,
+    nnz: Optional[int] = None,
+) -> BlockSparsePattern:
+    """Build the static pattern from a block-level bitmap.
+
+    ``nnz`` defaults to full present blocks (no element-level pruning)."""
+    bitmap = np.asarray(bitmap, dtype=bool)
+    rows, cols = np.nonzero(bitmap)
+    return BlockSparsePattern(
+        shape=tuple(shape),
+        block=tuple(block),
+        bitmap=bitmap,
+        block_rows=rows.astype(np.int32),
+        block_cols=cols.astype(np.int32),
+        nnz=int(bitmap.sum()) * block[0] * block[1] if nnz is None else nnz,
+    )
+
+
 def pattern_from_mask(mask: np.ndarray, block: Tuple[int, int]) -> BlockSparsePattern:
     """Derive the static pattern from an element-level boolean mask."""
     mask = np.asarray(mask, dtype=bool)
@@ -88,17 +118,8 @@ def pattern_from_mask(mask: np.ndarray, block: Tuple[int, int]) -> BlockSparsePa
     bm, bn = block
     if K % bm or N % bn:
         raise ValueError(f"mask shape {mask.shape} not divisible by block {block}")
-    blocked = mask.reshape(K // bm, bm, N // bn, bn)
-    bitmap = blocked.any(axis=(1, 3))
-    rows, cols = np.nonzero(bitmap)
-    return BlockSparsePattern(
-        shape=(K, N),
-        block=(bm, bn),
-        bitmap=bitmap,
-        block_rows=rows.astype(np.int32),
-        block_cols=cols.astype(np.int32),
-        nnz=int(mask.sum()),
-    )
+    bitmap = mask.reshape(K // bm, bm, N // bn, bn).any(axis=(1, 3))
+    return pattern_from_bitmap((K, N), (bm, bn), bitmap, nnz=int(mask.sum()))
 
 
 @dataclasses.dataclass
@@ -123,11 +144,7 @@ class CompressedLinear:
         b = self.blocks.size * self.blocks.dtype.itemsize
         if self.scales is not None:
             b += self.scales.size * self.scales.dtype.itemsize
-        # static metadata (bitmap + block coords) lives in the compiled
-        # program, but we account for it honestly:
-        b += int(np.ceil(self.pattern.n_blocks_total / 8))
-        b += self.pattern.block_rows.nbytes + self.pattern.block_cols.nbytes
-        return int(b)
+        return int(b) + self.pattern.meta_bytes
 
 
 def compress(
@@ -135,6 +152,7 @@ def compress(
     mask: np.ndarray,
     block: Tuple[int, int],
     *,
+    pattern: Optional[BlockSparsePattern] = None,
     quant_scales: Optional[np.ndarray] = None,
     quant_bits: int = 8,
     dtype=jnp.bfloat16,
@@ -143,11 +161,23 @@ def compress(
 
     ``quant_scales`` (shape (N,)) switches storage to int8 with fused
     dequant at matmul time (the QNN datapath of the paper).
+
+    ``pattern`` forces an externally-fixed schedule (e.g. one pattern
+    shared across a layer stack, from ``compile_sparse``): the mask's own
+    block bitmap must be a subset of it; blocks the mask never touches are
+    packed as all-zero tiles so stacked leaves stay shape-uniform.
     """
     weight = np.asarray(weight)
     mask = np.asarray(mask, dtype=bool)
     assert weight.shape == mask.shape
-    pattern = pattern_from_mask(mask, block)
+    if pattern is None:
+        pattern = pattern_from_mask(mask, block)
+    else:
+        assert pattern.shape == weight.shape and pattern.block == tuple(block)
+        own = pattern_from_mask(mask, block)
+        assert (own.bitmap <= pattern.bitmap).all(), (
+            "mask has nonzeros outside the forced pattern")
+        pattern = dataclasses.replace(pattern, nnz=own.nnz)
     K, N = pattern.shape
     bm, bn = block
     w = (weight * mask).reshape(K // bm, bm, N // bn, bn).transpose(0, 2, 1, 3)
@@ -186,7 +216,6 @@ def decompress(cl: CompressedLinear) -> jnp.ndarray:
 import functools
 
 
-@functools.lru_cache(maxsize=None)
 def shared_pattern(K: int, N: int, block: Tuple[int, int],
                    density: float) -> BlockSparsePattern:
     """Deterministic block bitmap at ~``density``, identical for every
@@ -198,7 +227,21 @@ def shared_pattern(K: int, N: int, block: Tuple[int, int],
     Real deployments derive the pattern from magnitude pruning
     (``block_aware_prune``); this synthetic pattern is for perf modelling
     (dry-run/hillclimb), where only the schedule shape matters.
+
+    Results are lru_cached, so ``block`` must be a hashable (bm, bn) tuple
+    — lists/arrays are rejected up front rather than failing inside the
+    cache lookup.
     """
+    if not isinstance(block, tuple):
+        raise TypeError(
+            f"shared_pattern caches on its arguments; block must be a "
+            f"(bm, bn) tuple, got {type(block).__name__}")
+    return _shared_pattern_cached(int(K), int(N), block, float(density))
+
+
+@functools.lru_cache(maxsize=None)
+def _shared_pattern_cached(K: int, N: int, block: Tuple[int, int],
+                           density: float) -> BlockSparsePattern:
     bm, bn = block
     nR, nC = K // bm, N // bn
     stride = max(1, round(1.0 / max(density, 1e-6)))
@@ -207,13 +250,7 @@ def shared_pattern(K: int, N: int, block: Tuple[int, int],
         for j in range(nC):
             if (i + j) % stride == 0:
                 bitmap[i, j] = True
-    rows, cols = np.nonzero(bitmap)
-    nnz = int(bitmap.sum()) * bm * bn
-    return BlockSparsePattern(
-        shape=(K, N), block=block, bitmap=bitmap,
-        block_rows=rows.astype(np.int32), block_cols=cols.astype(np.int32),
-        nnz=nnz,
-    )
+    return pattern_from_bitmap((K, N), block, bitmap)
 
 
 def compression_ratio(

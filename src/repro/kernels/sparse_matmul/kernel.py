@@ -153,7 +153,7 @@ def block_sparse_matmul(
     block_cols = np.asarray(block_cols, np.int32)
     block_rows = np.asarray(block_rows, np.int32)
     present_cols = np.unique(block_cols)
-    y = block_cols_matmul = _call(
+    y = _call(
         x,
         blocks,
         scales,

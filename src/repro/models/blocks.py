@@ -71,8 +71,13 @@ def lin_init(key, cfg: ArchConfig, K: int, N: int, *, bias: bool = False,
                        pattern=pat)
 
 
-def lin_apply(cfg: ArchConfig, p: Params, x, K: int, N: int):
-    pat = _pattern(cfg, K, N) if "w_blk" in p else None
+def lin_apply(cfg: ArchConfig, p: Params, x, K: int, N: int, patterns=None):
+    """``patterns`` is the compile_sparse side-table ((K, N) -> static
+    BlockSparsePattern) for compressed models; without it, sparse leaves
+    fall back to the cfg-derived shared pattern (synthetic perf models)."""
+    pat = None
+    if "w_blk" in p:
+        pat = (patterns or {}).get((K, N)) or _pattern(cfg, K, N)
     return linear_apply(p, x, pattern=pat)
 
 
@@ -96,12 +101,13 @@ def attn_apply(
     x: jnp.ndarray,                    # (B, T, D)
     positions: jnp.ndarray,            # (B, T)
     cache: Optional[Dict] = None,      # decode: {"k","v","length"}
+    patterns=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     B, T, D = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = lin_apply(cfg, p["wq"], x, D, H * Dh).reshape(B, T, H, Dh)
-    k = lin_apply(cfg, p["wk"], x, D, Hkv * Dh).reshape(B, T, Hkv, Dh)
-    v = lin_apply(cfg, p["wv"], x, D, Hkv * Dh).reshape(B, T, Hkv, Dh)
+    q = lin_apply(cfg, p["wq"], x, D, H * Dh, patterns).reshape(B, T, H, Dh)
+    k = lin_apply(cfg, p["wk"], x, D, Hkv * Dh, patterns).reshape(B, T, Hkv, Dh)
+    v = lin_apply(cfg, p["wv"], x, D, Hkv * Dh, patterns).reshape(B, T, Hkv, Dh)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     if cache is None:
@@ -128,7 +134,7 @@ def attn_apply(
         o = decode_attention(q, k_cache, v_cache, idx + 1)
         new_cache = {"k": k_cache, "v": v_cache, "length": idx + 1}
     o = o.reshape(B, T, H * Dh)
-    return lin_apply(cfg, p["wo"], o, H * Dh, D), new_cache
+    return lin_apply(cfg, p["wo"], o, H * Dh, D, patterns), new_cache
 
 
 def attn_cache_init(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
@@ -158,15 +164,18 @@ def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
     }
 
 
-def mlp_apply(p: Params, cfg: ArchConfig, x, d_ff: Optional[int] = None):
+def mlp_apply(p: Params, cfg: ArchConfig, x, d_ff: Optional[int] = None,
+              patterns=None):
     D = cfg.d_model
     F = d_ff or cfg.d_ff
     if "wg" in p:
-        g = jax.nn.silu(lin_apply(cfg, p["wg"], x, D, F).astype(jnp.float32))
-        u = lin_apply(cfg, p["wu"], x, D, F).astype(jnp.float32)
-        return lin_apply(cfg, p["wd"], (g * u).astype(x.dtype), F, D)
-    h = jax.nn.gelu(lin_apply(cfg, p["wu"], x, D, F).astype(jnp.float32))
-    return lin_apply(cfg, p["wd"], h.astype(x.dtype), F, D)
+        g = jax.nn.silu(lin_apply(cfg, p["wg"], x, D, F, patterns
+                                  ).astype(jnp.float32))
+        u = lin_apply(cfg, p["wu"], x, D, F, patterns).astype(jnp.float32)
+        return lin_apply(cfg, p["wd"], (g * u).astype(x.dtype), F, D, patterns)
+    h = jax.nn.gelu(lin_apply(cfg, p["wu"], x, D, F, patterns
+                              ).astype(jnp.float32))
+    return lin_apply(cfg, p["wd"], h.astype(x.dtype), F, D, patterns)
 
 
 # ----------------------------------------------------------------------- moe
@@ -193,12 +202,13 @@ def _stack_init(key, E, K, N, dt):
     return {"w": (jax.random.normal(key, (E, K, N)) / np.sqrt(K)).astype(dt)}
 
 
-def moe_apply(p, cfg, x):
+def moe_apply(p, cfg, x, patterns=None):
     with jax.named_scope("moe_apply"):
-        return _moe_apply(p, cfg, x)
+        return _moe_apply(p, cfg, x, patterns)
 
 
-def _moe_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+def _moe_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+               patterns=None) -> jnp.ndarray:
     """Sort-based top-k dispatch with static capacity (drop policy).
 
     Gather/scatter indices are data-dependent but shapes are static, so the
@@ -243,5 +253,6 @@ def _moe_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
         (gathered * w[:, None]).astype(xt.dtype))
     if "shared" in p:
         y = y + mlp_apply(p["shared"], cfg, xt,
-                          d_ff=cfg.d_expert * cfg.n_shared_experts)
+                          d_ff=cfg.d_expert * cfg.n_shared_experts,
+                          patterns=patterns)
     return y.reshape(B, T, D)

@@ -10,6 +10,13 @@ Param-leaf conventions (all functional, pytree-of-arrays):
   quantised:      {"w_q": (K, N) int8, "w_s": (N,) f32}
   block-sparse:   {"w_blk": (P, bk, bn), ["w_s": (N,) f32]}  + static pattern
                   carried in the enclosing module's config (compile-time).
+
+These leaves are produced two ways: synthetically by ``linear_init`` (perf
+modelling) or by the whole-model compression pass
+(:mod:`repro.core.compile_sparse`), which rewrites trained dense ``w``
+leaves into the quantised/compacted forms and hands the static patterns to
+the model as a (K, N)-keyed side-table.  Stacked layers share one pattern
+per linear shape, so (L, P, bk, bn) leaves stay scannable.
 """
 from __future__ import annotations
 
@@ -104,7 +111,10 @@ def linear_apply(
     elif "w_grp" in p:
         y = _gsparse_apply(p, x, compute_dtype)
     elif "w_blk" in p:
-        assert pattern is not None, "sparse linear needs its static pattern"
+        assert pattern is not None, (
+            "sparse linear needs its static pattern — pass the "
+            "compile_sparse pattern table through forward/decode_step "
+            "(patterns=cm.patterns) or a cfg-derived shared pattern")
         y = _sparse_apply(p, x, pattern, compute_dtype)
     else:
         raise ValueError(f"unknown linear leaves {list(p)}")

@@ -19,7 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.cost_model import LayerSpec
+from ..core.quant import QuantizedTensor
 from ..core.sparsity import CompressedLinear
+from ..kernels.quant_matmul.ops import quant_linear
 from ..kernels.sparse_matmul.ops import sparse_linear
 
 Params = Dict[str, jnp.ndarray]
@@ -87,10 +89,17 @@ def lenet_forward(
     x = _pool(x)
     x = x.reshape(x.shape[0], -1)  # (B, 256)
     for name in ("fc1", "fc2", "fc3"):
-        if compressed is not None and name in compressed:
-            y = sparse_linear(x, compressed[name], use_kernel=interpret_kernels,
+        cw = compressed.get(name) if compressed is not None else None
+        if isinstance(cw, CompressedLinear):
+            y = sparse_linear(x, cw, use_kernel=interpret_kernels,
                               interpret=interpret_kernels)
             y = y.astype(jnp.float32) + params[name + "_b"]
+        elif isinstance(cw, QuantizedTensor):
+            y = quant_linear(x, cw, use_kernel=interpret_kernels,
+                             interpret=interpret_kernels)
+            y = y.astype(jnp.float32) + params[name + "_b"]
+        elif cw is not None:  # masked dense payload from compile_lenet
+            y = x @ cw + params[name + "_b"]
         else:
             y = x @ w(name) + params[name + "_b"]
         x = jax.nn.relu(y) if name != "fc3" else y

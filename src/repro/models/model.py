@@ -119,13 +119,13 @@ def init_params(key, cfg: ArchConfig) -> Params:
 # ------------------------------------------------------------------- forward
 
 
-def _dense_block(p, cfg, h, positions, cache=None):
+def _dense_block(p, cfg, h, positions, cache=None, patterns=None):
     a, new_cache = attn_apply(p["attn"], cfg, norm_apply(cfg, p["ln1"], h),
-                              positions, cache)
+                              positions, cache, patterns=patterns)
     h = h + a
     key = "moe" if cfg.family == "moe" else "mlp"
     f = moe_apply if cfg.family == "moe" else mlp_apply
-    h = h + f(p[key], cfg, norm_apply(cfg, p["ln2"], h))
+    h = h + f(p[key], cfg, norm_apply(cfg, p["ln2"], h), patterns=patterns)
     return h, new_cache
 
 
@@ -145,13 +145,15 @@ def _ssm_superblock(p, cfg, h, cache=None):
     return h, ({"slstm": new_s, "mlstm": new_mc} if cache else None)
 
 
-def _hybrid_superblock(p, shared, cfg, h, positions, cache=None):
+def _hybrid_superblock(p, shared, cfg, h, positions, cache=None, patterns=None):
     """Zamba2 super-block: tied shared attention + attn_every Mamba2 blocks."""
     ac = cache["attn"] if cache else None
     a, new_ac = attn_apply(shared["attn"], cfg,
-                           norm_apply(cfg, shared["ln"], h), positions, ac)
+                           norm_apply(cfg, shared["ln"], h), positions, ac,
+                           patterns=patterns)
     h = h + a
-    h = h + mlp_apply(shared["mlp"], cfg, norm_apply(cfg, shared["ln2"], h))
+    h = h + mlp_apply(shared["mlp"], cfg, norm_apply(cfg, shared["ln2"], h),
+                      patterns=patterns)
 
     def inner(hh, xs):
         pm, ln, mc = xs
@@ -182,13 +184,19 @@ def embed_inputs(params, cfg: ArchConfig, batch: Dict) -> Tuple[jnp.ndarray, jnp
     return h, pos
 
 
-def forward(params: Params, cfg: ArchConfig, batch: Dict) -> jnp.ndarray:
-    """Full-sequence forward (train / prefill). Returns logits (B, T, V)."""
+def forward(params: Params, cfg: ArchConfig, batch: Dict, *,
+            patterns=None) -> jnp.ndarray:
+    """Full-sequence forward (train / prefill). Returns logits (B, T, V).
+
+    ``patterns`` is the compile_sparse static side-table for compressed
+    parameter trees ((K, N) -> BlockSparsePattern, compile-time constant).
+    """
     h, positions = embed_inputs(params, cfg, batch)
 
     if cfg.family in ("dense", "encoder", "vlm", "moe"):
         def body(h, p_layer):
-            out, _ = _dense_block(p_layer, cfg, h, positions)
+            out, _ = _dense_block(p_layer, cfg, h, positions,
+                                  patterns=patterns)
             return out, None
     elif cfg.family == "ssm":
         def body(h, p_layer):
@@ -197,7 +205,8 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict) -> jnp.ndarray:
     elif cfg.family == "hybrid":
         shared = params["shared_attn"]
         def body(h, p_layer):
-            out, _ = _hybrid_superblock(p_layer, shared, cfg, h, positions)
+            out, _ = _hybrid_superblock(p_layer, shared, cfg, h, positions,
+                                        patterns=patterns)
             return out, None
     else:
         raise ValueError(cfg.family)
@@ -218,7 +227,8 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict) -> jnp.ndarray:
     if cfg.tie_embeddings:
         logits = jnp.dot(h, params["embed"]["w"].T.astype(h.dtype))
     else:
-        logits = linear_apply(params["head"], h)
+        logits = linear_apply(params["head"], h, pattern=(patterns or {}).get(
+            (cfg.d_model, cfg.vocab)))
     return logits
 
 
@@ -262,12 +272,13 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
     return jax.vmap(one)(jnp.arange(L))
 
 
-def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray
-                ) -> Tuple[jnp.ndarray, Any]:
+def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray,
+                *, patterns=None) -> Tuple[jnp.ndarray, Any]:
     """One token per sequence: tokens (B, 1) -> logits (B, 1, V), new cache.
 
     Position comes from the per-layer cache lengths (attention) or is
-    implicit in the SSM state.
+    implicit in the SSM state.  ``patterns`` (static) enables serving from
+    compile_sparse's compacted parameter format.
     """
     h = params["embed"]["w"][tokens]
     B = h.shape[0]
@@ -277,7 +288,8 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray
 
         def body(h, xs):
             p_layer, c_layer = xs
-            out, new_c = _dense_block(p_layer, cfg, h, positions, c_layer)
+            out, new_c = _dense_block(p_layer, cfg, h, positions, c_layer,
+                                      patterns=patterns)
             return out, new_c
     elif cfg.family == "ssm":
         positions = None
@@ -294,7 +306,8 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray
         def body(h, xs):
             p_layer, c_layer = xs
             out, new_c = _hybrid_superblock(p_layer, shared, cfg, h,
-                                            positions, c_layer)
+                                            positions, c_layer,
+                                            patterns=patterns)
             return out, new_c
     else:
         raise ValueError(cfg.family)
@@ -304,5 +317,6 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray
     if cfg.tie_embeddings:
         logits = jnp.dot(h, params["embed"]["w"].T.astype(h.dtype))
     else:
-        logits = linear_apply(params["head"], h)
+        logits = linear_apply(params["head"], h, pattern=(patterns or {}).get(
+            (cfg.d_model, cfg.vocab)))
     return logits, new_cache

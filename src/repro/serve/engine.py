@@ -35,9 +35,19 @@ class Request:
 
 
 class ServeEngine:
+    """``params`` may be a raw parameter pytree or a
+    :class:`repro.core.compile_sparse.CompressedModel` — the engine then
+    serves straight from the compacted format (int8 / block-compacted
+    leaves), with the static pattern table baked into the jitted step."""
+
     def __init__(self, params, cfg: ArchConfig, *, batch_slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, patterns=None):
+        from ..core.compile_sparse import CompressedModel
+        if isinstance(params, CompressedModel):
+            patterns = params.patterns if patterns is None else patterns
+            params = params.params
         self.params = params
+        self.patterns = patterns
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
@@ -49,7 +59,8 @@ class ServeEngine:
         self.last_tok = np.zeros((batch_slots, 1), np.int32)
         self.queue: List[Request] = []
         self.steps_run = 0
-        self._step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+        self._step = jax.jit(
+            lambda p, c, t: decode_step(p, cfg, c, t, patterns=patterns))
 
     def submit(self, req: Request):
         req.out = []

@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim for the property-test modules.
+
+``hypothesis`` is a dev-only dependency (declared in pyproject.toml /
+requirements-dev.txt).  When it is absent the suite must degrade to
+*skips*, not collection errors — and unit tests living in the same module
+as property tests must keep running.  Import the three names from here
+instead of from hypothesis:
+
+    from _hyp import given, settings, st
+
+With hypothesis installed this is a pure re-export.  Without it, ``st``
+returns inert placeholder strategies and ``@given`` replaces the test with
+one that calls ``pytest.importorskip("hypothesis")`` — so every property
+test reports as a skip with a clear reason.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # degrade to skips
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _Strategies()
+
+    def given(*_args, **_kwargs):
+        def deco(_fn):
+            def skipped(*a, **k):
+                pytest.importorskip("hypothesis")
+            skipped.__name__ = _fn.__name__
+            skipped.__doc__ = _fn.__doc__
+            return skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

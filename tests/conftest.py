@@ -6,3 +6,5 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# test-local helpers (_hyp shim) importable regardless of invocation dir
+sys.path.insert(0, os.path.dirname(__file__))

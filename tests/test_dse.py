@@ -1,6 +1,6 @@
 """DSE (Fig. 1 workflow) invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     FoldingConfig,

@@ -1,6 +1,6 @@
 """Pruning invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     block_aware_prune,

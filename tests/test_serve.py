@@ -16,6 +16,22 @@ def _cfg():
                       param_dtype="float32", remat=False)
 
 
+def _dedicated_decode(params, cfg, prompt, n_tokens, max_len=64):
+    """Greedy single-sequence reference decode (the engine oracle)."""
+    import jax.numpy as jnp
+    cache = init_cache(cfg, 1, max_len)
+    toks = list(prompt)
+    out = []
+    for _ in range(n_tokens):
+        for t in toks:
+            logits, cache = decode_step(params, cfg, cache,
+                                        jnp.asarray([[t]], jnp.int32))
+        nxt = int(jnp.argmax(logits[0, 0]))
+        out.append(nxt)
+        toks = [nxt]
+    return out
+
+
 def test_engine_matches_single_request_decode():
     """A request served in a shared batch must produce the same tokens as a
     dedicated greedy decode."""
@@ -32,19 +48,8 @@ def test_engine_matches_single_request_decode():
         engine.submit(r)
     engine.run()
 
-    import jax.numpy as jnp
     for r in reqs:
-        cache = init_cache(cfg, 1, 64)
-        toks = list(r.prompt)
-        out = []
-        for _ in range(5):
-            for t in toks:
-                logits, cache2 = decode_step(params, cfg, cache,
-                                             jnp.asarray([[t]], jnp.int32))
-                cache = cache2
-            nxt = int(jnp.argmax(logits[0, 0]))
-            out.append(nxt)
-            toks = [nxt]
+        out = _dedicated_decode(params, cfg, r.prompt, 5)
         assert out == r.out, (r.uid, out, r.out)
 
 
@@ -62,3 +67,34 @@ def test_engine_slot_reuse():
     # 5 requests through 2 slots: batching must share steps
     serial_steps = sum(len(r.prompt) + r.max_new_tokens for r in reqs)
     assert engine.steps_run < serial_steps
+
+
+def test_engine_slot_churn_does_not_corrupt_neighbour():
+    """Continuous-batching stress: more requests than slots, with one
+    long-running request pinned in a slot while its neighbour slot is
+    freed and re-admitted several times.  Every request must complete, and
+    each freed slot's cache reset must leave the long request's output
+    identical to a dedicated single-sequence decode."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    engine = ServeEngine(params, cfg, batch_slots=2, max_len=64)
+    long_req = Request(uid=0, prompt=rng.integers(1, 211, size=4).astype(np.int32),
+                       max_new_tokens=14)
+    shorts = [Request(uid=i + 1,
+                      prompt=rng.integers(1, 211, size=2 + i).astype(np.int32),
+                      max_new_tokens=2) for i in range(5)]
+    engine.submit(long_req)
+    for r in shorts:
+        engine.submit(r)
+    engine.run()
+
+    # every request through the 2 slots completed with its full budget
+    assert len(long_req.out) == 14
+    assert all(len(r.out) == 2 for r in shorts)
+
+    # the long request's slot survived >= 4 neighbour admissions untouched
+    assert long_req.out == _dedicated_decode(params, cfg, long_req.prompt, 14)
+    # ... and the churned requests themselves are also correct
+    for r in shorts:
+        assert r.out == _dedicated_decode(params, cfg, r.prompt, 2)

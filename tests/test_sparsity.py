@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (
     block_aware_prune,
@@ -91,3 +91,82 @@ def test_storage_bytes_counts_metadata():
     mask = np.ones((16, 16), bool)
     cl = compress(w, mask, (8, 8), dtype=jnp.float32)
     assert cl.storage_bytes >= 16 * 16 * 4
+
+
+# ------------------------------------------------------------------------
+# Deterministic round-trip + accounting regressions (run without hypothesis)
+
+
+def test_roundtrip_deterministic_float_and_quant():
+    """dense -> pack -> unpack == masked dense, float exactly and int8
+    within half a quantisation step, across seeds and block shapes."""
+    for seed, (bm, bn) in [(0, (4, 4)), (1, (8, 2)), (2, (2, 8))]:
+        rng = np.random.default_rng(seed)
+        K, N = 4 * bm, 6 * bn
+        w = rng.normal(size=(K, N)).astype(np.float32)
+        mask = rng.random((K, N)) < 0.35
+        cl = compress(w, mask, (bm, bn), dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(decompress(cl)), w * mask,
+                                   atol=1e-6)
+        assert cl.pattern.nnz == int(mask.sum())
+        q = quantize(w * mask, 8, axis=1)
+        clq = compress(w, mask, (bm, bn),
+                       quant_scales=np.asarray(q.scales).reshape(N),
+                       quant_bits=8)
+        err = np.abs(np.asarray(decompress(clq)) - w * mask)
+        assert (err <= 0.5 * np.asarray(q.scales).reshape(N)[None, :]
+                + 1e-6).all()
+
+
+def test_roundtrip_forced_pattern_packs_zero_tiles():
+    """compress(pattern=...) packs blocks the mask never touches as zero
+    tiles and still reconstructs the masked dense weight exactly."""
+    rng = np.random.default_rng(7)
+    w = rng.normal(size=(16, 16)).astype(np.float32)
+    mask = np.zeros((16, 16), bool)
+    mask[:8, :8] = True  # only block (0, 0)
+    forced = pattern_from_mask(np.ones((16, 16), bool), (8, 8))  # all 4
+    cl = compress(w, mask, (8, 8), pattern=forced, dtype=jnp.float32)
+    assert cl.blocks.shape[0] == 4            # packed the full schedule
+    assert cl.pattern.nnz == 64               # nnz stays the mask's own
+    np.testing.assert_allclose(np.asarray(decompress(cl)), w * mask,
+                               atol=1e-6)
+    blocks = np.asarray(cl.blocks)
+    assert np.abs(blocks[1:]).max() == 0.0    # untouched tiles are zero
+
+
+def test_compression_ratio_hand_computed():
+    # dense fp32 = 16*16*32 = 8192 bits; nnz=64 @ 8 bits = 512 -> 16x
+    assert compression_ratio((16, 16), nnz=64, bits=8) == 8192 / 512
+    # per-nnz index cost and block metadata enter the denominator
+    assert compression_ratio((16, 16), nnz=64, bits=8,
+                             index_bits_per_nnz=8.0) == 8192 / (64 * 16)
+    assert compression_ratio((16, 16), nnz=64, bits=8,
+                             block_meta_bits=512) == 8192 / 1024
+
+
+def test_storage_bytes_hand_computed():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(16, 16)).astype(np.float32)
+    mask = np.ones((16, 16), bool)
+    # f32, all 4 (8,8) blocks present:
+    #   blocks 4*8*8*4 = 1024 B; bitmap ceil(4/8) = 1 B;
+    #   block coords 2 * 4 * 4 B (int32) = 32 B  -> 1057
+    cl = compress(w, mask, (8, 8), dtype=jnp.float32)
+    assert cl.storage_bytes == 1024 + 1 + 32
+    # int8 + (16,) f32 scales: 256 + 64 + 33 = 353
+    q = quantize(w, 8, axis=1)
+    clq = compress(w, mask, (8, 8),
+                   quant_scales=np.asarray(q.scales).reshape(16),
+                   quant_bits=8)
+    assert clq.storage_bytes == 256 + 64 + 1 + 32
+
+
+def test_shared_pattern_requires_tuple_block():
+    from repro.core.sparsity import shared_pattern
+    with pytest.raises(TypeError):
+        shared_pattern(64, 64, [32, 32], 0.5)  # list is not hashable-safe
+    pat = shared_pattern(64, 64, (32, 32), 0.5)
+    assert pat.block == (32, 32)
+    # cached: identical args return the identical object
+    assert shared_pattern(64, 64, (32, 32), 0.5) is pat

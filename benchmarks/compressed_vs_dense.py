@@ -11,12 +11,24 @@ Three whole-model policies over the same trained weights (forced via
 Reported per variant: mean decode-step latency (CPU, XLA path — the
 relative ordering is what transfers), linear-weight storage bytes, and the
 compression ratio vs dense.  Also prints the LeNet Table-1 workload's
-storage reduction at 8-bit / 25% block density (paper acceptance regime).
+storage reduction at 8-bit / 25% block density (paper acceptance regime),
+and a per-layer **kernel-vs-gather** micro-timing table for every shared
+sparse schedule (Pallas block_sparse_matmul vs the jnp static-gather twin
+at the decode shape) — all of it recorded into the bench JSON.
 
-Run:  PYTHONPATH=src python benchmarks/compressed_vs_dense.py
+Run:  PYTHONPATH=src python benchmarks/compressed_vs_dense.py \
+          [--dispatch {auto,pallas,jnp}] [--json PATH]
+
+``--dispatch`` forces the kernel path of the timed decode steps (same
+values as the REPRO_FORCE_DISPATCH env var; 'pallas' off-TPU runs the
+kernels in interpret mode — orders of magnitude slower, differential use
+only).  Default 'auto' = compiled Pallas on TPU, jnp twin on CPU.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 from typing import Dict, List
 
@@ -25,6 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CompileRules, block_aware_prune, compile_lenet, compile_model
+from repro.core.dispatch import linear_dispatch, resolve as resolve_dispatch
+from repro.core.sparsity import CompressedLinear
+from repro.kernels.sparse_matmul.ops import sparse_linear
 from repro.models.config import ArchConfig
 from repro.models.lenet import init_lenet
 from repro.models.model import decode_step, init_cache, init_params
@@ -35,14 +50,16 @@ CFG = ArchConfig(name="bench", family="dense", n_layers=4, d_model=256,
 BATCH = 8
 ITERS = 20
 LINEAR_KEYS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd", "head")
+DEFAULT_JSON = os.path.join("results", "compressed_vs_dense.json")
 
 
-def _time_decode(params, cfg, patterns=None) -> float:
+def _time_decode(params, cfg, patterns=None, dispatch=None) -> float:
     cache = init_cache(cfg, BATCH, 32)
     toks = jnp.asarray(np.random.default_rng(0).integers(
         0, cfg.vocab, (BATCH, 1)), jnp.int32)
     step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t,
-                                               patterns=patterns))
+                                               patterns=patterns,
+                                               dispatch=dispatch))
     logits, cache = step(params, cache, toks)   # compile + warm
     logits.block_until_ready()
     t0 = time.perf_counter()
@@ -52,7 +69,60 @@ def _time_decode(params, cfg, patterns=None) -> float:
     return (time.perf_counter() - t0) / ITERS
 
 
-def run() -> List[Dict]:
+def _layer_kernel_vs_gather(cm, dispatch) -> List[Dict]:
+    """Per shared sparse schedule: Pallas kernel vs the production jnp
+    static-gather twin (the path auto-dispatch runs on CPU), both jitted
+    end to end, at the decode shape (M = BATCH).  Off-TPU the kernel runs
+    in interpret mode — that column measures schedule overhead, not MXU
+    throughput."""
+    interpret = resolve_dispatch(dispatch).run_interpret
+    rng = np.random.default_rng(7)
+    rows = []
+    sparse_layers = [r for r in cm.report if r.policy == "sparse"]
+    for (K, N), pat in cm.patterns.items():
+        # one representative packed leaf for this shape
+        rep = next(r for r in sparse_layers if r.shape == (K, N))
+        leaf = _find_leaf(cm.params, rep.name)
+        blocks = leaf["w_blk"][0] if leaf["w_blk"].ndim == 4 else leaf["w_blk"]
+        scales = leaf.get("w_s")
+        if scales is not None and scales.ndim == 2:
+            scales = scales[0]
+        cl = CompressedLinear(pattern=pat, blocks=blocks, scales=scales)
+        p = {"w_blk": blocks} if scales is None \
+            else {"w_blk": blocks, "w_s": scales}
+        gather = jax.jit(lambda xx, p=p, pat=pat: linear_dispatch(
+            p, xx, pattern=pat, dispatch="jnp"))
+        pallas = jax.jit(lambda xx, cl=cl: sparse_linear(
+            xx, cl, use_kernel=True, interpret=interpret))
+        x = jnp.asarray(rng.normal(size=(BATCH, K)).astype(np.float32))
+
+        def t(fn, n=5):
+            fn().block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(n):
+                fn().block_until_ready()
+            return (time.perf_counter() - t0) / n * 1e6
+
+        pallas_us = t(lambda: pallas(x))
+        jnp_us = t(lambda: gather(x))
+        rows.append({
+            "layer": rep.name, "K": K, "N": N,
+            "n_blocks_present": pat.n_blocks_present,
+            "block_density": pat.block_density,
+            "pallas_us": pallas_us, "pallas_interpret": bool(interpret),
+            "jnp_us": jnp_us,
+        })
+    return rows
+
+
+def _find_leaf(tree, path):
+    node = tree
+    for k in path.split("/"):
+        node = node[k]
+    return node
+
+
+def run(dispatch: str = "auto") -> Dict:
     params = init_params(jax.random.PRNGKey(0), CFG)
 
     def forced(policy):
@@ -68,7 +138,8 @@ def run() -> List[Dict]:
     rows = []
     dense_bytes = variants["dense"].storage_bytes
     for name, cm in variants.items():
-        us = _time_decode(cm.params, CFG, cm.patterns or None) * 1e6
+        us = _time_decode(cm.params, CFG, cm.patterns or None,
+                          dispatch=dispatch) * 1e6
         rows.append({
             "variant": name,
             "step_us": us,
@@ -76,6 +147,8 @@ def run() -> List[Dict]:
             "compression": dense_bytes / max(1, cm.storage_bytes),
             "policies": ",".join(sorted({r.policy for r in cm.report})),
         })
+
+    layer_rows = _layer_kernel_vs_gather(variants["block_sparse"], dispatch)
 
     # LeNet Table-1 workload: storage reduction at 8-bit / 25% blocks
     lp = init_lenet(jax.random.PRNGKey(1))
@@ -86,24 +159,45 @@ def run() -> List[Dict]:
     cm = compile_lenet(lp, masks, blocks=blocks)
     rows.append({
         "variant": "lenet_fc_8bit_25pct",
-        "step_us": float("nan"),
+        "step_us": None,  # storage-only row (no decode step); null in JSON
         "storage_bytes": cm.storage_bytes,
         "compression": cm.compression,
         "policies": ",".join(r.policy for r in cm.report),
     })
-    return rows
+    return {"dispatch": dispatch, "variants": rows, "layers": layer_rows}
 
 
-def main():
-    rows = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dispatch", choices=["auto", "pallas", "jnp"],
+                    default="auto",
+                    help="kernel path for the timed decode steps "
+                         "(REPRO_FORCE_DISPATCH equivalent)")
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="bench JSON output path ('' disables)")
+    args = ap.parse_args(argv)
+
+    result = run(dispatch=args.dispatch)
+    rows = result["variants"]
     print("variant,step_us,storage_bytes,compression,policies")
     for r in rows:
-        print(f"{r['variant']},{r['step_us']:.1f},{r['storage_bytes']},"
+        su = "nan" if r["step_us"] is None else f"{r['step_us']:.1f}"
+        print(f"{r['variant']},{su},{r['storage_bytes']},"
               f"{r['compression']:.2f}x,{r['policies']}")
+    print("layer,K,N,block_density,pallas_us,jnp_us,pallas_interpret")
+    for r in result["layers"]:
+        print(f"{r['layer']},{r['K']},{r['N']},{r['block_density']:.2f},"
+              f"{r['pallas_us']:.1f},{r['jnp_us']:.1f},"
+              f"{r['pallas_interpret']}")
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {args.json}")
     sparse = next(r for r in rows if r["variant"] == "lenet_fc_8bit_25pct")
     assert sparse["compression"] >= 4.0, (
         f"storage reduction regressed: {sparse['compression']:.2f}x < 4x")
-    return rows
+    return result
 
 
 if __name__ == "__main__":

@@ -84,10 +84,16 @@ def main() -> None:
         _kernel_bench()
     if "compressed" in sections:
         from . import compressed_vs_dense
-        for r in compressed_vs_dense.run():
-            print(f"compressed/{r['variant']},{r['step_us']:.1f},"
+        result = compressed_vs_dense.run()
+        for r in result["variants"]:
+            su = "nan" if r["step_us"] is None else f"{r['step_us']:.1f}"
+            print(f"compressed/{r['variant']},{su},"
                   f"comp={r['compression']:.2f}x;"
                   f"bytes={r['storage_bytes']}")
+        for r in result["layers"]:
+            print(f"compressed/layer/{r['layer']},{r['jnp_us']:.1f},"
+                  f"pallas_us={r['pallas_us']:.1f};"
+                  f"interpret={r['pallas_interpret']}")
     if "roofline" in sections:
         from . import roofline
         for r in roofline.rows("pod1"):

@@ -7,6 +7,22 @@ a *whole model* onto the compressed datapath with ``compile_model`` and
 serve it.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Kernel dispatch: every compiled linear executes through
+``repro.core.dispatch``, which picks per layer between the Pallas kernels
+(quant_matmul / block_sparse_matmul, fused dequant + bias/activation
+epilogue) and their jnp reference twins.  The ``REPRO_FORCE_DISPATCH``
+environment variable forces the choice globally:
+
+  REPRO_FORCE_DISPATCH=auto    (default) compiled Pallas on TPU when the
+                               shapes tile; jnp twin on CPU
+  REPRO_FORCE_DISPATCH=pallas  force the kernels (interpret mode off-TPU —
+                               slow, bit-compatible; differential testing)
+  REPRO_FORCE_DISPATCH=jnp     force the reference path (the CI matrix
+                               runs the whole suite this way too)
+
+The same knob is the ``dispatch=`` argument of ``forward`` /
+``decode_step`` / ``ServeEngine`` / ``lenet_forward``.
 """
 import jax
 import numpy as np
@@ -77,3 +93,11 @@ lc, _ = decode_step(cm.params, cfg, init_cache(cfg, 1, 16), toks,
 ld, _ = decode_step(decompress_model(cm), cfg, init_cache(cfg, 1, 16), toks)
 print(f"compressed-vs-oracle decode max err: "
       f"{float(jnp.abs(lc - ld).max()):.2e}")
+
+# 6. kernel dispatch: the same compiled model through the forced-Pallas
+#    path (interpret mode on CPU) — identical logits, one kernel launch
+#    per compiled linear instead of the XLA static-gather twin.
+lk, _ = decode_step(cm.params, cfg, init_cache(cfg, 1, 16), toks,
+                    patterns=cm.patterns, dispatch="pallas")
+print(f"jnp-vs-pallas dispatch decode max err: "
+      f"{float(jnp.abs(lc - lk).max()):.2e}")

@@ -27,6 +27,14 @@ from .cost_model import (
     NetworkEstimate,
 )
 from .dse import DSEResult, run_dse, balanced_folding_baseline
+from .dispatch import (
+    DISPATCH_ENV,
+    DispatchConfig,
+    linear_dispatch,
+    quant_kernel_eligible,
+    resolve as resolve_dispatch,
+    sparse_kernel_eligible,
+)
 from .compile_sparse import (
     CompileRules,
     CompressedModel,

@@ -1,0 +1,328 @@
+"""Unified compressed-linear dispatch — one entry for every leaf family.
+
+Every linear in the repo (transformer projections, LeNet FC layers, the
+serving engine's decode step) executes through :func:`linear_dispatch`,
+which looks at the compiled parameter leaves and selects the execution
+path per layer:
+
+  leaf family                  Pallas path              jnp reference path
+  -------------------------    ---------------------    -------------------
+  dense   {"w"}                —  (XLA matmul IS the engine-free form)
+  quant   {"w_q", "w_s"}       quant_matmul kernel      dequant + matmul
+  gsparse {"w_grp"[, "w_s"]}   —  (factorises into s dense matmuls)
+  sparse  {"w_blk"[, "w_s"]}   block_sparse_matmul      static-gather einsum
+
+Selection policy (:func:`resolve` / :class:`DispatchConfig`):
+
+* ``auto``  (default) — Pallas kernels on a real TPU backend when the
+  static pattern satisfies the hardware tile constraints; the jnp twin
+  everywhere else (CPU CI, awkward tiles).  Both lower the *same* static
+  schedule — the jnp path's gather indices are numpy constants — so this
+  is a kernel-substitution choice, never a semantics choice.
+* ``pallas`` — force the Pallas kernels; off-TPU they run in interpret
+  mode (Python-speed, bit-compatible — the differential test mode).  In
+  compiled (on-TPU) execution, shapes that cannot satisfy the hardware
+  tile minima still take the jnp twin — same numerics, no Mosaic crash.
+* ``jnp``   — force the reference path (oracle, and the CPU prod path).
+
+The mode comes from (highest wins): an explicit ``dispatch=`` argument
+threaded through ``forward`` / ``decode_step`` / ``ServeEngine`` /
+``lenet_forward``, else the ``REPRO_FORCE_DISPATCH`` environment variable,
+else ``auto``.  Everything here is resolved at trace time — the choice is
+baked into the jitted step, exactly like the pattern side-table.
+
+The fused bias+activation epilogue rides the same dispatch: pass
+``activation=`` and a ``"b"`` leaf and the sparse Pallas path emits
+``act(x @ W + b)`` in one launch; every other path applies the identical
+f32 formula (:data:`repro.kernels.sparse_matmul.kernel.ACTIVATIONS`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.quant_matmul.kernel import quant_matmul
+from ..kernels.sparse_matmul.kernel import (
+    ACTIVATIONS,
+    _check_activation,
+    _pad_rows,
+    _row_tile,
+)
+from ..kernels.sparse_matmul.ops import sparse_linear
+from .quant import QuantizedTensor
+from .sparsity import BlockSparsePattern, CompressedLinear
+
+__all__ = [
+    "DISPATCH_ENV",
+    "DISPATCH_MODES",
+    "DispatchConfig",
+    "resolve",
+    "sparse_kernel_eligible",
+    "quant_kernel_eligible",
+    "linear_dispatch",
+]
+
+Params = Dict[str, Any]
+
+DISPATCH_ENV = "REPRO_FORCE_DISPATCH"
+DISPATCH_MODES = ("auto", "pallas", "jnp")
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Trace-time kernel-selection knobs (never traced values).
+
+    ``interpret=None`` means "interpret iff the backend is not a TPU" —
+    forced-pallas runs stay runnable (and differentially testable) on CPU.
+    """
+
+    mode: str = "auto"
+    interpret: Optional[bool] = None
+    bm: Optional[int] = None  # sparse row-tile override (None = auto)
+
+    def __post_init__(self):
+        if self.mode not in DISPATCH_MODES:
+            raise ValueError(
+                f"unknown dispatch mode {self.mode!r} — valid: "
+                f"{DISPATCH_MODES} (from {DISPATCH_ENV} or dispatch=)")
+
+    @property
+    def run_interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+
+def resolve(dispatch: Union[None, str, DispatchConfig] = None) -> DispatchConfig:
+    """Normalise a dispatch override to a DispatchConfig.
+
+    ``None`` reads ``REPRO_FORCE_DISPATCH`` (default ``auto``); a string is
+    a mode name; a DispatchConfig passes through.  Unknown modes raise
+    loudly — a typo'd env var silently running the wrong path would defeat
+    the CI matrix this variable exists for.
+    """
+    if isinstance(dispatch, DispatchConfig):
+        return dispatch
+    if dispatch is None:
+        dispatch = os.environ.get(DISPATCH_ENV, "auto").strip() or "auto"
+    return DispatchConfig(mode=str(dispatch).lower())
+
+
+# ------------------------------------------------------------- eligibility
+
+
+def sparse_kernel_eligible(pattern: BlockSparsePattern, blocks_dtype) -> bool:
+    """Can the Pallas kernel execute this pattern on real TPU hardware?
+
+    The kernel streams x as (bm, bk) tiles and w as (1, bk, bn): bk is the
+    activation tile's *lane* dim and bn the weight tile's, so both must be
+    multiples of 128; 128 also covers every storage dtype's sublane minimum
+    (f32 8 / bf16 16 / int8 32) on the (bk, bn) weight tile.  In interpret
+    mode anything goes — callers only consult this for compiled
+    (non-interpret) execution.
+    """
+    del blocks_dtype  # 128-multiple bk satisfies every dtype's sublane
+    bk, bn = pattern.block
+    return bk % 128 == 0 and bn % 128 == 0
+
+
+def quant_kernel_eligible(K: int, N: int) -> bool:
+    """quant_matmul tiles (128, 128, 128) on real hardware."""
+    return K % 128 == 0 and N % 128 == 0
+
+
+def _use_pallas(cfg: DispatchConfig, eligible: bool) -> bool:
+    if cfg.mode == "jnp":
+        return False
+    if cfg.mode == "pallas":
+        # interpret mode imposes no tile constraints; compiled (on-TPU)
+        # forced-pallas still respects hardware tiling — ineligible shapes
+        # take the jnp twin instead of dying in Mosaic lowering
+        return cfg.run_interpret or eligible
+    # auto: compiled Pallas on TPU when the shape tiles; jnp twin otherwise
+    return jax.default_backend() == "tpu" and eligible
+
+
+# ----------------------------------------------------------- jnp fallbacks
+
+
+def _epilogue(y: jnp.ndarray, bias, activation: Optional[str],
+              out_dtype) -> jnp.ndarray:
+    """f32 bias + activation, shared by every non-fused path (identical
+    formulas to the kernel's fused emit step)."""
+    if bias is None and activation is None:
+        return y.astype(out_dtype)
+    y = y.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation is not None:
+        y = ACTIVATIONS[activation](y)
+    return y.astype(out_dtype)
+
+
+def _sparse_apply_jnp(p: Params, x, pattern: BlockSparsePattern,
+                      compute_dtype):
+    """Engine-free static block-sparse matmul, jnp path (XLA prod path).
+
+    The gather below uses *static* indices (numpy constants), so XLA sees a
+    fixed schedule — collapsing at compile time exactly like the Pallas
+    kernel's prefetch tables. K-blocks absent from a column contribute 0.
+    """
+    K, N = pattern.shape
+    bk, bn = pattern.block
+    nR, nC = pattern.bitmap.shape
+    blocks = p["w_blk"].astype(compute_dtype)
+    if "w_s" in p:
+        s = p["w_s"].reshape(nC, bn)[np.asarray(pattern.block_cols)]
+        blocks = blocks * s[:, None, :].astype(compute_dtype)
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, K).astype(compute_dtype)
+    if pattern.n_blocks_present == 0:  # fully-empty schedule
+        return jnp.zeros((*lead, N), compute_dtype)
+    xb = xm.reshape(-1, nR, bk)
+    # per present block: (M, bk) x (bk, bn) -> scatter-add into (M, nC, bn)
+    xg = xb[:, np.asarray(pattern.block_rows)]           # (M, P, bk) static gather
+    yb = jnp.einsum("mpk,pkn->mpn", xg, blocks)          # (M, P, bn)
+    y = jnp.zeros((xm.shape[0], nC, bn), yb.dtype)
+    y = y.at[:, np.asarray(pattern.block_cols)].add(yb)  # static scatter-add
+    return y.reshape(*lead, N)
+
+
+def _gsparse_apply_jnp(p: Params, x, compute_dtype):
+    """Group-diagonal static sparsity as s dense matmuls (engine-free for
+    XLA): output column-group c reads input row-group (s - c) % s.
+
+    Feature -> group mapping is at *block* granularity implicitly: with the
+    whole (K/s, N/s) group dense, block size folds away and groups can be
+    taken directly on contiguous strides of the feature axes.
+    """
+    w = p["w_grp"]  # (s, Kg, Ng)
+    s, Kg, Ng = w.shape
+    K, N = s * Kg, s * Ng
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, Kg, s).astype(compute_dtype)   # feature f=(q, g)
+    wf = w.astype(compute_dtype)
+    if "w_s" in p:
+        wf = wf * p["w_s"].reshape(s, 1, Ng).astype(compute_dtype)
+    # row group used by column group c: g = (s - c) % s  -> static roll
+    order = [(s - c) % s for c in range(s)]
+    xg = jnp.stack([xm[:, :, g] for g in order], axis=0)  # (s, M, Kg)
+    yg = jnp.einsum("smk,skn->smn", xg, wf)               # (s, M, Ng)
+    y = yg.transpose(1, 2, 0).reshape(-1, N)              # j=(r, c)
+    return y.reshape(*lead, N)
+
+
+def _quant_apply_jnp(p: Params, x, compute_dtype):
+    w = p["w_q"].astype(compute_dtype) * p["w_s"].astype(compute_dtype)[None, :]
+    return jnp.dot(x.astype(compute_dtype), w)
+
+
+def _quant_apply_pallas(p: Params, x, cfg: DispatchConfig, out_dtype):
+    """quant_matmul kernel path; tiles fall back to whole-dim blocks when
+    128 does not divide — legal only in interpret mode, which is the sole
+    way here for such shapes (_use_pallas gates compiled execution on
+    quant_kernel_eligible)."""
+    K, N = p["w_q"].shape
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, K)
+    bm = _row_tile(xm.shape[0], xm.dtype)
+    xm, M = _pad_rows(xm, bm)
+    bn = 128 if N % 128 == 0 else N
+    bk = 128 if K % 128 == 0 else K
+    y = quant_matmul(xm, p["w_q"], p["w_s"].reshape(N), bm=bm, bn=bn, bk=bk,
+                     out_dtype=out_dtype, interpret=cfg.run_interpret)[:M]
+    return y.reshape(*lead, N)
+
+
+# ----------------------------------------------------------------- dispatch
+
+
+def linear_dispatch(
+    p: Params,
+    x: jnp.ndarray,
+    *,
+    pattern: Optional[BlockSparsePattern] = None,
+    dispatch: Union[None, str, DispatchConfig] = None,
+    compute_dtype=None,
+    activation: Optional[str] = None,
+) -> jnp.ndarray:
+    """Apply one compiled linear leaf: y = act(x @ W + b).
+
+    Dispatches on the parameter leaves (see module docstring) and on the
+    resolved dispatch mode.  The bias leaf ``p["b"]`` and ``activation``
+    are fused into the sparse kernel's epilogue on the Pallas path and
+    applied by the identical f32 formula on every other path.
+    """
+    _check_activation(activation)
+    cfg = resolve(dispatch)
+    if compute_dtype is None:
+        compute_dtype = x.dtype
+    bias = p.get("b")
+
+    if "w" in p:
+        y = jnp.dot(x.astype(compute_dtype), p["w"].astype(compute_dtype))
+        return _epilogue(y, bias, activation, compute_dtype)
+
+    if "w_q" in p:
+        if _use_pallas(cfg, quant_kernel_eligible(*p["w_q"].shape)):
+            y = _quant_apply_pallas(p, x, cfg, compute_dtype)
+        else:
+            y = _quant_apply_jnp(p, x, compute_dtype)
+        return _epilogue(y, bias, activation, compute_dtype)
+
+    if "w_grp" in p:
+        y = _gsparse_apply_jnp(p, x, compute_dtype)
+        return _epilogue(y, bias, activation, compute_dtype)
+
+    if "w_blk" in p:
+        if pattern is None:
+            raise ValueError(
+                "sparse linear needs its static pattern — pass the "
+                "compile_sparse pattern table through forward/decode_step "
+                "(patterns=cm.patterns) or a cfg-derived shared pattern")
+        if _use_pallas(cfg, sparse_kernel_eligible(pattern, p["w_blk"].dtype)):
+            cl = CompressedLinear(pattern=pattern, blocks=p["w_blk"],
+                                  scales=p.get("w_s"))
+            return sparse_linear(
+                x, cl, bm=cfg.bm, bias=bias, activation=activation,
+                out_dtype=compute_dtype, interpret=cfg.run_interpret,
+                use_kernel=True)
+        y = _sparse_apply_jnp(p, x, pattern, compute_dtype)
+        return _epilogue(y, bias, activation, compute_dtype)
+
+    raise ValueError(f"unknown linear leaves {list(p)}")
+
+
+def payload_dispatch(
+    payload: Any,
+    x: jnp.ndarray,
+    *,
+    dispatch: Union[None, str, DispatchConfig] = None,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
+) -> jnp.ndarray:
+    """Dispatch over a compile_lenet layer payload (CompressedLinear /
+    QuantizedTensor / masked-dense array) — the per-name analogue of
+    :func:`linear_dispatch` for non-pytree models."""
+    cfg = resolve(dispatch)
+    if isinstance(payload, CompressedLinear):
+        use_k = _use_pallas(cfg, sparse_kernel_eligible(payload.pattern,
+                                                        payload.blocks.dtype))
+        return sparse_linear(x, payload, bm=cfg.bm, bias=bias,
+                             activation=activation,
+                             interpret=cfg.run_interpret, use_kernel=use_k)
+    if isinstance(payload, QuantizedTensor):
+        K, N = payload.values.shape
+        p = {"w_q": payload.values, "w_s": payload.scales.reshape(N)}
+        if bias is not None:
+            p["b"] = bias
+        return linear_dispatch(p, x, dispatch=cfg, activation=activation,
+                               compute_dtype=jnp.float32)
+    # masked dense payload (plain array)
+    y = jnp.dot(x.astype(jnp.float32), payload.astype(jnp.float32))
+    return _epilogue(y, bias, activation, jnp.float32)

@@ -1,6 +1,6 @@
 """Engine-free static block-sparse matmul — the LogicSparse datapath on TPU.
 
-``y[M, N] = x[M, K] @ W`` where W is stored block-compacted
+``y[M, N] = act(x[M, K] @ W + b)`` where W is stored block-compacted
 (:class:`repro.core.sparsity.CompressedLinear`): only present (bk, bn)
 blocks exist in HBM, enumerated by static ``block_rows``/``block_cols``.
 
@@ -18,6 +18,19 @@ a contiguous run of grid steps — the output BlockSpec revisits the same
 
 Optionally the blocks may be int8 with a per-output-channel dequant scale
 (the paper's quantised datapath); dequant is fused into the accumulation.
+
+Epilogue schedule: the last grid step of each output-column run emits the
+tile through a fused **bias + activation** epilogue (f32: ``acc + b`` then
+``act``), so a whole ``act(x @ W + b)`` layer is one kernel launch.
+Output columns whose block-column is entirely absent never enter the grid;
+they still receive the epilogue (``act(b)``) via a static column mask.
+
+Two entry points share the schedule:
+
+* :func:`block_sparse_matmul`        — prefill/training shapes (M >= bm);
+* :func:`block_sparse_matmul_decode` — batched-RHS decode shapes (M is the
+  live batch, usually << 128): picks the smallest legal sublane tile and
+  pads, so a 4-slot serving step does not burn a 128-row MXU pass.
 """
 from __future__ import annotations
 
@@ -30,10 +43,27 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["block_sparse_matmul"]
+__all__ = ["ACTIVATIONS", "block_sparse_matmul", "block_sparse_matmul_decode"]
+
+# Fused epilogue nonlinearities (applied in f32).  The jnp oracle
+# (ref.block_sparse_matmul_ref) and the dispatch fallbacks import THIS
+# table, so both paths use bit-identical formulas.
+ACTIVATIONS = {
+    "relu": lambda v: jnp.maximum(v, 0.0),
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
 
 
-def _kernel(meta_ref, x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n_steps: int):
+def _check_activation(activation: Optional[str]) -> None:
+    if activation is not None and activation not in ACTIVATIONS:
+        raise ValueError(
+            f"unknown epilogue activation {activation!r} — "
+            f"supported: {sorted(ACTIVATIONS)} or None")
+
+
+def _kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
+            activation: Optional[str]):
     """meta_ref rows: [row, col, packed_idx, is_first, is_last] per step."""
     p = pl.program_id(1)
     is_first = meta_ref[3, p]
@@ -55,7 +85,10 @@ def _kernel(meta_ref, x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n_steps: int):
 
     @pl.when(is_last == 1)
     def _emit():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        out = acc_ref[...] + bias_ref[0].astype(jnp.float32)[None, :]
+        if activation is not None:
+            out = ACTIVATIONS[activation](out)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
 def _schedule(block_rows: np.ndarray, block_cols: np.ndarray):
@@ -75,12 +108,14 @@ def _schedule(block_rows: np.ndarray, block_cols: np.ndarray):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_rows", "block_cols", "block", "n_cols", "bm", "interpret", "out_dtype"),
+    static_argnames=("block_rows", "block_cols", "block", "n_cols", "bm",
+                     "interpret", "out_dtype", "activation"),
 )
 def _call(
     x: jnp.ndarray,
     blocks: jnp.ndarray,
     scales: Optional[jnp.ndarray],
+    bias: Optional[jnp.ndarray],
     *,
     block_rows: Tuple[int, ...],
     block_cols: Tuple[int, ...],
@@ -89,6 +124,7 @@ def _call(
     bm: int,
     interpret: bool,
     out_dtype,
+    activation: Optional[str],
 ):
     M, K = x.shape
     bk, bn = block
@@ -103,9 +139,13 @@ def _call(
         scales = jnp.ones((n_cols, bn), jnp.float32)  # unused for float blocks
     else:
         scales = scales.reshape(n_cols, bn).astype(jnp.float32)
+    if bias is None:
+        bias = jnp.zeros((n_cols, bn), jnp.float32)
+    else:
+        bias = bias.reshape(n_cols, bn).astype(jnp.float32)
 
     grid = (M // bm, P)
-    kernel = functools.partial(_kernel, n_steps=P)
+    kernel = functools.partial(_kernel, activation=activation)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -115,6 +155,7 @@ def _call(
                 pl.BlockSpec((bm, bk), lambda m, p, meta: (m, meta[0, p])),
                 pl.BlockSpec((1, bk, bn), lambda m, p, meta: (meta[2, p], 0, 0)),
                 pl.BlockSpec((1, bn), lambda m, p, meta: (meta[1, p], 0)),
+                pl.BlockSpec((1, bn), lambda m, p, meta: (meta[1, p], 0)),
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda m, p, meta: (m, meta[1, p])),
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
@@ -122,8 +163,18 @@ def _call(
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         interpret=interpret,
         name="logicsparse_block_sparse_matmul",
-    )(meta, x, blocks, scales)
+    )(meta, x, blocks, scales, bias)
     return out
+
+
+def _epilogue_of_zero(N: int, bias: Optional[jnp.ndarray],
+                      activation: Optional[str]) -> jnp.ndarray:
+    """What the epilogue emits for an all-pruned output column: act(0 + b)."""
+    b = jnp.zeros((N,), jnp.float32) if bias is None \
+        else bias.reshape(N).astype(jnp.float32)
+    if activation is not None:
+        b = ACTIVATIONS[activation](b)
+    return b
 
 
 def block_sparse_matmul(
@@ -135,14 +186,20 @@ def block_sparse_matmul(
     n_row_blocks: int,
     n_col_blocks: int,
     scales: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
     bm: int = 128,
     out_dtype=jnp.float32,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """y = x @ W for a block-compacted W. See module docstring.
+    """y = act(x @ W + b) for a block-compacted W. See module docstring.
 
-    Output columns whose block-column is entirely absent are zero.
+    ``bias`` is a per-output-channel (N,) vector (or None); ``activation``
+    is one of :data:`ACTIVATIONS` (or None).  Output columns whose
+    block-column is entirely absent — including the fully-empty pattern —
+    still go through the epilogue: they come back as ``act(b)``.
     """
+    _check_activation(activation)
     bk, bn = int(blocks.shape[1]), int(blocks.shape[2])
     M, K = x.shape
     if K != n_row_blocks * bk:
@@ -150,13 +207,21 @@ def block_sparse_matmul(
     if M % bm:
         raise ValueError(f"M={M} not divisible by bm={bm}")
 
+    N = n_col_blocks * bn
     block_cols = np.asarray(block_cols, np.int32)
     block_rows = np.asarray(block_rows, np.int32)
+    if block_rows.size == 0:
+        # fully-empty pattern: nothing in the schedule — the whole output is
+        # one epilogue application, no kernel launch at all
+        empty = _epilogue_of_zero(N, bias, activation)
+        return jnp.broadcast_to(empty[None, :], (M, N)).astype(out_dtype)
+
     present_cols = np.unique(block_cols)
     y = _call(
         x,
         blocks,
         scales,
+        bias,
         block_rows=tuple(int(r) for r in block_rows),
         block_cols=tuple(int(c) for c in block_cols),
         block=(bk, bn),
@@ -164,12 +229,75 @@ def block_sparse_matmul(
         bm=bm,
         interpret=interpret,
         out_dtype=out_dtype,
+        activation=activation,
     )
     if present_cols.size != n_col_blocks:
         # columns never visited by the grid hold uninitialised memory (which
-        # may be NaN — where(), not multiply) — zero them with a static mask
+        # may be NaN — where(), not multiply): substitute the epilogue of a
+        # zero accumulator, act(0 + b), via a static column mask
         colmask = np.zeros((n_col_blocks,), bool)
         colmask[present_cols] = True
         m = jnp.repeat(jnp.asarray(colmask), bn)
-        y = jnp.where(m[None, :], y, jnp.zeros((), y.dtype))
+        empty = _epilogue_of_zero(N, bias, activation).astype(y.dtype)
+        y = jnp.where(m[None, :], y, empty[None, :])
     return y
+
+
+def _sublane(dtype) -> int:
+    """Minimum legal second-to-last tile dim for the dtype (lane is 128)."""
+    if dtype == jnp.int8:
+        return 32
+    if dtype == jnp.bfloat16:
+        return 16
+    return 8
+
+
+def _row_tile(M: int, dtype) -> int:
+    """Smallest legal row tile (<= 128) covering M rows of ``dtype`` — the
+    shared tiling rule of the decode entry and the quant dispatch path."""
+    sub = _sublane(dtype)
+    return min(128, -(-M // sub) * sub)
+
+
+def _pad_rows(x: jnp.ndarray, bm: int) -> Tuple[jnp.ndarray, int]:
+    """Pad axis 0 up to a multiple of bm; returns (padded, original M)."""
+    M = x.shape[0]
+    pad = (-M) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, M
+
+
+def block_sparse_matmul_decode(
+    x: jnp.ndarray,
+    blocks: jnp.ndarray,
+    block_rows,
+    block_cols,
+    *,
+    n_row_blocks: int,
+    n_col_blocks: int,
+    scales: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched-RHS (decode) entry point: same static schedule, thin M.
+
+    Serving feeds one token per slot, so M is the live batch (4–64), far
+    below the 128-row prefill tile.  This wrapper picks the smallest legal
+    row tile for the dtype, pads M up to it, and strips the padding — the
+    schedule, epilogue and dequant path are identical to the prefill entry.
+    """
+    if x.shape[0] < 1:
+        raise ValueError(
+            f"decode entry needs at least one row, got M={x.shape[0]}")
+    bm = _row_tile(x.shape[0], x.dtype)
+    x, M = _pad_rows(x, bm)
+    y = block_sparse_matmul(
+        x, blocks, block_rows, block_cols,
+        n_row_blocks=n_row_blocks, n_col_blocks=n_col_blocks,
+        scales=scales, bias=bias, activation=activation,
+        bm=bm, out_dtype=out_dtype, interpret=interpret,
+    )
+    return y[:M]

@@ -1,10 +1,12 @@
 """Public op: sparse linear layer over a CompressedLinear weight."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from ...core.sparsity import CompressedLinear
-from .kernel import block_sparse_matmul
+from .kernel import _pad_rows, block_sparse_matmul, block_sparse_matmul_decode
 from .ref import block_sparse_matmul_ref
 
 
@@ -12,18 +14,28 @@ def sparse_linear(
     x: jnp.ndarray,
     cl: CompressedLinear,
     *,
-    bm: int = 128,
+    bm: Optional[int] = None,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
     out_dtype=jnp.float32,
     interpret: bool = False,
     use_kernel: bool = True,
 ) -> jnp.ndarray:
-    """y = x @ W for compile-time-compacted W (optionally int8+scales).
+    """y = act(x @ W + b) for compile-time-compacted W (optionally int8+scales).
 
     ``x`` may be (..., K); leading dims are flattened to M for the kernel.
+    ``bm=None`` auto-selects the row tile: decode-thin M goes through the
+    batched-RHS entry point, prefill-wide M through the 128-row tile.
     ``use_kernel=False`` falls back to the jnp oracle (CPU prod path).
     """
     pat = cl.pattern
     K, N = pat.shape
+    if x.shape[-1] != K:
+        raise ValueError(
+            f"sparse_linear: activation feature dim {x.shape[-1]} does not "
+            f"match the compiled weight's K={K} (= {pat.bitmap.shape[0]} row "
+            f"blocks x {pat.block[0]}); a bare reshape would silently fold "
+            "batch rows into features — fix the caller's shape")
     lead = x.shape[:-1]
     xm = x.reshape(-1, K)
     kwargs = dict(
@@ -32,16 +44,20 @@ def sparse_linear(
         n_row_blocks=pat.bitmap.shape[0],
         n_col_blocks=pat.bitmap.shape[1],
         scales=cl.scales,
+        bias=bias,
+        activation=activation,
         out_dtype=out_dtype,
     )
     if use_kernel:
         M = xm.shape[0]
-        pad = (-M) % bm
-        if pad:
-            xm = jnp.pad(xm, ((0, pad), (0, 0)))
-        y = block_sparse_matmul(xm, cl.blocks, bm=bm, interpret=interpret, **kwargs)
-        if pad:
-            y = y[:M]
+        if bm is None and M < 128:
+            y = block_sparse_matmul_decode(xm, cl.blocks, interpret=interpret,
+                                           **kwargs)
+        else:
+            bm = 128 if bm is None else bm
+            xm, M = _pad_rows(xm, bm)
+            y = block_sparse_matmul(xm, cl.blocks, bm=bm, interpret=interpret,
+                                    **kwargs)[:M]
     else:
         y = block_sparse_matmul_ref(xm, cl.blocks, **kwargs)
     return y.reshape(*lead, N)

@@ -6,6 +6,8 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from .kernel import ACTIVATIONS, _check_activation
+
 
 def block_sparse_matmul_ref(
     x: jnp.ndarray,
@@ -16,9 +18,13 @@ def block_sparse_matmul_ref(
     n_row_blocks: int,
     n_col_blocks: int,
     scales: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
     out_dtype=jnp.float32,
 ) -> jnp.ndarray:
-    """Scatter blocks back to dense and matmul in f32."""
+    """Scatter blocks back to dense and matmul in f32; epilogue applies the
+    same bias + activation formulas the kernel fuses (kernel.ACTIVATIONS)."""
+    _check_activation(activation)
     P, bk, bn = blocks.shape
     K, N = n_row_blocks * bk, n_col_blocks * bn
     w = blocks.astype(jnp.float32)
@@ -26,6 +32,12 @@ def block_sparse_matmul_ref(
         s = scales.reshape(n_col_blocks, bn).astype(jnp.float32)
         w = w * s[np.asarray(block_cols)][:, None, :]
     dense = jnp.zeros((n_row_blocks, n_col_blocks, bk, bn), jnp.float32)
-    dense = dense.at[np.asarray(block_rows), np.asarray(block_cols)].set(w)
+    if P:
+        dense = dense.at[np.asarray(block_rows), np.asarray(block_cols)].set(w)
     dense = dense.transpose(0, 2, 1, 3).reshape(K, N)
-    return jnp.dot(x.astype(jnp.float32), dense).astype(out_dtype)
+    y = jnp.dot(x.astype(jnp.float32), dense)
+    if bias is not None:
+        y = y + bias.reshape(N).astype(jnp.float32)[None, :]
+    if activation is not None:
+        y = ACTIVATIONS[activation](y)
+    return y.astype(out_dtype)

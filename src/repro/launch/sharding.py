@@ -56,6 +56,56 @@ def _path_str(path) -> str:
     return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
 
 
+# -------------------------------------------------- pattern-aware sparse TP
+
+
+def schedule_shardable(pattern, n_shards: int) -> bool:
+    """Can this shared static schedule be row-parallel partitioned n ways?
+
+    The packed ``w_blk`` axis is ordered row-major (block_rows/cols from
+    the bitmap), so splitting it into ``n_shards`` equal contiguous chunks
+    is a valid tensor-parallel partition exactly when every chunk covers a
+    whole group of block-*rows* — i.e. each shard owns K/n input rows and
+    its private sub-schedule, and GSPMD reduces the partial y's (the same
+    row-parallel contract as the dense ``wo``/``wd`` rules).  That holds
+    iff the row-block count divides and each contiguous row group holds an
+    equal share of the present blocks.
+
+    Anything else (uneven rows, P not divisible) would split a block
+    between shards or misalign the side-table's coordinates against the
+    shard-local packed index — the pattern side-table would no longer
+    describe any single shard's leaf.  Those patterns stay replicated.
+    """
+    if n_shards <= 1:
+        return True
+    P = pattern.n_blocks_present
+    nR = pattern.bitmap.shape[0]
+    if P == 0 or P % n_shards or nR % n_shards:
+        return False
+    per_row = pattern.bitmap.sum(axis=1)
+    groups = per_row.reshape(n_shards, nR // n_shards).sum(axis=1)
+    return bool((groups == P // n_shards).all())
+
+
+def _pattern_tail(leaf_shape, patterns, n_shards: int) -> Tuple:
+    """Trailing spec for a ``w_blk`` leaf (..., P, bk, bn) under the shared
+    pattern side-table: row-parallel over 'model' only when the matching
+    pattern's schedule partitions evenly; replicated otherwise.
+
+    The leaf is matched to its pattern structurally — (bk, bn) block and
+    packed length P — since the side-table is keyed by logical (K, N),
+    which the compacted leaf no longer carries.  If several same-shape
+    patterns match they must all agree on shardability, else we replicate
+    (safe: replication never invalidates the schedule).
+    """
+    P, bk, bn = leaf_shape[-3:]
+    cands = [p for p in patterns.values()
+             if p.block == (bk, bn) and p.n_blocks_present == P]
+    if cands and all(schedule_shardable(p, n_shards) for p in cands):
+        return ("model", None, None)
+    return (None, None, None)
+
+
 def _tp_spec(pstr: str, ndim: int) -> Tuple:
     for frag, spec in _TP_RULES:
         if frag in pstr.split("/"):
@@ -78,15 +128,28 @@ def _fsdp_extend(spec: Tuple, shape: Tuple[int, ...], dp: Tuple[str, ...],
 
 
 def param_specs(params: PyTree, cfg: ArchConfig, mesh, *, fsdp: bool = True,
-                zero: bool = False) -> PyTree:
+                zero: bool = False, patterns=None) -> PyTree:
     """PartitionSpec tree for params (``zero=True`` for optimizer moments —
-    always FSDP-extended, mirroring ZeRO-1)."""
+    always FSDP-extended, mirroring ZeRO-1).
+
+    ``patterns`` is the compile_sparse side-table ((K, N) ->
+    BlockSparsePattern).  When given, ``w_blk`` leaves get *pattern-aware*
+    specs: the packed block axis is sharded over 'model' only when the
+    shared schedule itself partitions into equal per-shard sub-schedules
+    (see :func:`schedule_shardable`); otherwise the leaf is replicated so
+    the side-table stays valid on every shard.  Without it the legacy
+    blind packed-axis rule applies (sanitize_specs remains the net)."""
     dp = data_axes(mesh)
     dp_size = int(np.prod([mesh_size(mesh, a) for a in dp]))
+    mdl_size = mesh_size(mesh, "model")
 
     def one(path, leaf):
         pstr = _path_str(path)
-        spec = _tp_spec(pstr, leaf.ndim)
+        if patterns is not None and pstr.split("/")[-1] == "w_blk":
+            tail = _pattern_tail(leaf.shape, patterns, mdl_size)
+            spec = (None,) * (leaf.ndim - len(tail)) + tail
+        else:
+            spec = _tp_spec(pstr, leaf.ndim)
         if (fsdp or zero) and leaf.size >= _FSDP_MIN_ELEMS and dp_size > 1:
             spec = _fsdp_extend(spec, leaf.shape, dp, dp_size)
         return P(*spec)

@@ -71,14 +71,16 @@ def lin_init(key, cfg: ArchConfig, K: int, N: int, *, bias: bool = False,
                        pattern=pat)
 
 
-def lin_apply(cfg: ArchConfig, p: Params, x, K: int, N: int, patterns=None):
+def lin_apply(cfg: ArchConfig, p: Params, x, K: int, N: int, patterns=None,
+              dispatch=None):
     """``patterns`` is the compile_sparse side-table ((K, N) -> static
     BlockSparsePattern) for compressed models; without it, sparse leaves
-    fall back to the cfg-derived shared pattern (synthetic perf models)."""
+    fall back to the cfg-derived shared pattern (synthetic perf models).
+    ``dispatch`` selects the kernel path (see repro.core.dispatch)."""
     pat = None
     if "w_blk" in p:
         pat = (patterns or {}).get((K, N)) or _pattern(cfg, K, N)
-    return linear_apply(p, x, pattern=pat)
+    return linear_apply(p, x, pattern=pat, dispatch=dispatch)
 
 
 # ----------------------------------------------------------------- attention
@@ -102,12 +104,16 @@ def attn_apply(
     positions: jnp.ndarray,            # (B, T)
     cache: Optional[Dict] = None,      # decode: {"k","v","length"}
     patterns=None,
+    dispatch=None,
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     B, T, D = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = lin_apply(cfg, p["wq"], x, D, H * Dh, patterns).reshape(B, T, H, Dh)
-    k = lin_apply(cfg, p["wk"], x, D, Hkv * Dh, patterns).reshape(B, T, Hkv, Dh)
-    v = lin_apply(cfg, p["wv"], x, D, Hkv * Dh, patterns).reshape(B, T, Hkv, Dh)
+    q = lin_apply(cfg, p["wq"], x, D, H * Dh, patterns,
+                  dispatch).reshape(B, T, H, Dh)
+    k = lin_apply(cfg, p["wk"], x, D, Hkv * Dh, patterns,
+                  dispatch).reshape(B, T, Hkv, Dh)
+    v = lin_apply(cfg, p["wv"], x, D, Hkv * Dh, patterns,
+                  dispatch).reshape(B, T, Hkv, Dh)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
     if cache is None:
@@ -134,7 +140,7 @@ def attn_apply(
         o = decode_attention(q, k_cache, v_cache, idx + 1)
         new_cache = {"k": k_cache, "v": v_cache, "length": idx + 1}
     o = o.reshape(B, T, H * Dh)
-    return lin_apply(cfg, p["wo"], o, H * Dh, D, patterns), new_cache
+    return lin_apply(cfg, p["wo"], o, H * Dh, D, patterns, dispatch), new_cache
 
 
 def attn_cache_init(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
@@ -165,17 +171,19 @@ def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
 
 
 def mlp_apply(p: Params, cfg: ArchConfig, x, d_ff: Optional[int] = None,
-              patterns=None):
+              patterns=None, dispatch=None):
     D = cfg.d_model
     F = d_ff or cfg.d_ff
     if "wg" in p:
-        g = jax.nn.silu(lin_apply(cfg, p["wg"], x, D, F, patterns
+        g = jax.nn.silu(lin_apply(cfg, p["wg"], x, D, F, patterns, dispatch
                                   ).astype(jnp.float32))
-        u = lin_apply(cfg, p["wu"], x, D, F, patterns).astype(jnp.float32)
-        return lin_apply(cfg, p["wd"], (g * u).astype(x.dtype), F, D, patterns)
-    h = jax.nn.gelu(lin_apply(cfg, p["wu"], x, D, F, patterns
+        u = lin_apply(cfg, p["wu"], x, D, F, patterns, dispatch
+                      ).astype(jnp.float32)
+        return lin_apply(cfg, p["wd"], (g * u).astype(x.dtype), F, D,
+                         patterns, dispatch)
+    h = jax.nn.gelu(lin_apply(cfg, p["wu"], x, D, F, patterns, dispatch
                               ).astype(jnp.float32))
-    return lin_apply(cfg, p["wd"], h.astype(x.dtype), F, D, patterns)
+    return lin_apply(cfg, p["wd"], h.astype(x.dtype), F, D, patterns, dispatch)
 
 
 # ----------------------------------------------------------------------- moe
@@ -202,13 +210,13 @@ def _stack_init(key, E, K, N, dt):
     return {"w": (jax.random.normal(key, (E, K, N)) / np.sqrt(K)).astype(dt)}
 
 
-def moe_apply(p, cfg, x, patterns=None):
+def moe_apply(p, cfg, x, patterns=None, dispatch=None):
     with jax.named_scope("moe_apply"):
-        return _moe_apply(p, cfg, x, patterns)
+        return _moe_apply(p, cfg, x, patterns, dispatch)
 
 
 def _moe_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray,
-               patterns=None) -> jnp.ndarray:
+               patterns=None, dispatch=None) -> jnp.ndarray:
     """Sort-based top-k dispatch with static capacity (drop policy).
 
     Gather/scatter indices are data-dependent but shapes are static, so the
@@ -254,5 +262,5 @@ def _moe_apply(p: Params, cfg: ArchConfig, x: jnp.ndarray,
     if "shared" in p:
         y = y + mlp_apply(p["shared"], cfg, xt,
                           d_ff=cfg.d_expert * cfg.n_shared_experts,
-                          patterns=patterns)
+                          patterns=patterns, dispatch=dispatch)
     return y.reshape(B, T, D)

@@ -20,14 +20,13 @@ per linear shape, so (L, P, bk, bn) leaves stay scannable.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.dispatch import linear_dispatch
 from ..core.sparsity import BlockSparsePattern
 
 Params = Dict[str, Any]
@@ -97,79 +96,19 @@ def linear_apply(
     *,
     pattern: Optional[BlockSparsePattern] = None,
     compute_dtype=None,
+    activation: Optional[str] = None,
+    dispatch=None,
 ) -> jnp.ndarray:
-    """Dispatch on the parameter leaves (see module docstring)."""
-    if compute_dtype is None:
-        compute_dtype = x.dtype
-    if "w" in p:
-        y = jnp.dot(x.astype(compute_dtype), p["w"].astype(compute_dtype))
-    elif "w_q" in p:
-        # int8 storage; dequant fused into the matmul by XLA (or by the
-        # quant_matmul Pallas kernel on the serving path).
-        w = p["w_q"].astype(compute_dtype) * p["w_s"].astype(compute_dtype)[None, :]
-        y = jnp.dot(x.astype(compute_dtype), w)
-    elif "w_grp" in p:
-        y = _gsparse_apply(p, x, compute_dtype)
-    elif "w_blk" in p:
-        assert pattern is not None, (
-            "sparse linear needs its static pattern — pass the "
-            "compile_sparse pattern table through forward/decode_step "
-            "(patterns=cm.patterns) or a cfg-derived shared pattern")
-        y = _sparse_apply(p, x, pattern, compute_dtype)
-    else:
-        raise ValueError(f"unknown linear leaves {list(p)}")
-    if "b" in p:
-        y = y + p["b"].astype(y.dtype)
-    return y
+    """Apply one linear leaf: y = act(x @ W + b).
 
-
-def _gsparse_apply(p, x, compute_dtype):
-    """Group-diagonal static sparsity as s dense matmuls (engine-free for
-    XLA): output column-group c reads input row-group (s - c) % s.
-
-    Feature -> group mapping is at *block* granularity implicitly: with the
-    whole (K/s, N/s) group dense, block size folds away and groups can be
-    taken directly on contiguous strides of the feature axes.
+    Thin alias for :func:`repro.core.dispatch.linear_dispatch` — the
+    unified per-leaf kernel selection (dense / quant_matmul /
+    block_sparse_matmul Pallas kernels with jnp twins; see that module).
+    ``dispatch`` is a mode name ("auto" | "pallas" | "jnp"), a
+    DispatchConfig, or None (REPRO_FORCE_DISPATCH env, default auto).
     """
-    w = p["w_grp"]  # (s, Kg, Ng)
-    s, Kg, Ng = w.shape
-    K, N = s * Kg, s * Ng
-    lead = x.shape[:-1]
-    xm = x.reshape(-1, Kg, s).astype(compute_dtype)   # feature f=(q, g)
-    wf = w.astype(compute_dtype)
-    if "w_s" in p:
-        wf = wf * p["w_s"].reshape(s, 1, Ng).astype(compute_dtype)
-    # row group used by column group c: g = (s - c) % s  -> static roll
-    order = [(s - c) % s for c in range(s)]
-    xg = jnp.stack([xm[:, :, g] for g in order], axis=0)  # (s, M, Kg)
-    yg = jnp.einsum("smk,skn->smn", xg, wf)               # (s, M, Ng)
-    y = yg.transpose(1, 2, 0).reshape(-1, N)              # j=(r, c)
-    return y.reshape(*lead, N)
-
-
-def _sparse_apply(p, x, pattern: BlockSparsePattern, compute_dtype):
-    """Engine-free static block-sparse matmul, jnp path (XLA prod path).
-
-    The gather below uses *static* indices (numpy constants), so XLA sees a
-    fixed schedule — collapsing at compile time exactly like the Pallas
-    kernel's prefetch tables. K-blocks absent from a column contribute 0.
-    """
-    K, N = pattern.shape
-    bk, bn = pattern.block
-    nR, nC = pattern.bitmap.shape
-    blocks = p["w_blk"].astype(compute_dtype)
-    if "w_s" in p:
-        s = p["w_s"].reshape(nC, bn)[np.asarray(pattern.block_cols)]
-        blocks = blocks * s[:, None, :].astype(compute_dtype)
-    lead = x.shape[:-1]
-    xm = x.reshape(-1, K).astype(compute_dtype)
-    xb = xm.reshape(-1, nR, bk)
-    # per present block: (M, bk) x (bk, bn) -> scatter-add into (M, nC, bn)
-    xg = xb[:, np.asarray(pattern.block_rows)]           # (M, P, bk) static gather
-    yb = jnp.einsum("mpk,pkn->mpn", xg, blocks)          # (M, P, bn)
-    y = jnp.zeros((xm.shape[0], nC, bn), yb.dtype)
-    y = y.at[:, np.asarray(pattern.block_cols)].add(yb)  # static scatter-add
-    return y.reshape(*lead, N)
+    return linear_dispatch(p, x, pattern=pattern, dispatch=dispatch,
+                           compute_dtype=compute_dtype, activation=activation)
 
 
 # --------------------------------------------------------------------- norms

@@ -19,10 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.cost_model import LayerSpec
-from ..core.quant import QuantizedTensor
+from ..core.dispatch import payload_dispatch, resolve as resolve_dispatch
 from ..core.sparsity import CompressedLinear
-from ..kernels.quant_matmul.ops import quant_linear
-from ..kernels.sparse_matmul.ops import sparse_linear
 
 Params = Dict[str, jnp.ndarray]
 
@@ -66,13 +64,26 @@ def lenet_forward(
     compressed: Optional[Dict[str, CompressedLinear]] = None,
     qat_bits: Optional[Dict[str, int]] = None,
     interpret_kernels: bool = False,
+    dispatch=None,
 ) -> jnp.ndarray:
     """Forward pass. ``masks`` applies static pruning (training / eval);
     ``qat_bits`` applies straight-through fake quantisation per layer (the
     paper's mixed-precision QNN datapath during re-sparse fine-tuning);
     ``compressed`` switches named FC layers to the engine-free compacted
-    execution path (deployment form, validates against the masked path)."""
+    execution path (deployment form, validates against the masked path).
+
+    Compressed FC layers run through :mod:`repro.core.dispatch`: bias and
+    the inter-layer relu ride the sparse kernel's fused epilogue on the
+    Pallas path.  ``dispatch`` selects the path ("auto" | "pallas" |
+    "jnp" | DispatchConfig | None = REPRO_FORCE_DISPATCH); the legacy
+    ``interpret_kernels=True`` flag is shorthand for forced-Pallas
+    (interpret mode off-TPU) and only applies when no explicit
+    ``dispatch`` is given — an explicit argument always wins."""
     from ..core.quant import fake_quant
+
+    if dispatch is None and interpret_kernels:
+        dispatch = "pallas"
+    dcfg = resolve_dispatch(dispatch)
 
     def w(name):
         ww = params[name + "_w"]
@@ -89,20 +100,14 @@ def lenet_forward(
     x = _pool(x)
     x = x.reshape(x.shape[0], -1)  # (B, 256)
     for name in ("fc1", "fc2", "fc3"):
+        act = "relu" if name != "fc3" else None
         cw = compressed.get(name) if compressed is not None else None
-        if isinstance(cw, CompressedLinear):
-            y = sparse_linear(x, cw, use_kernel=interpret_kernels,
-                              interpret=interpret_kernels)
-            y = y.astype(jnp.float32) + params[name + "_b"]
-        elif isinstance(cw, QuantizedTensor):
-            y = quant_linear(x, cw, use_kernel=interpret_kernels,
-                             interpret=interpret_kernels)
-            y = y.astype(jnp.float32) + params[name + "_b"]
-        elif cw is not None:  # masked dense payload from compile_lenet
-            y = x @ cw + params[name + "_b"]
+        if cw is not None:  # CompressedLinear / QuantizedTensor / masked dense
+            x = payload_dispatch(cw, x, dispatch=dcfg,
+                                 bias=params[name + "_b"], activation=act)
         else:
             y = x @ w(name) + params[name + "_b"]
-        x = jax.nn.relu(y) if name != "fc3" else y
+            x = jax.nn.relu(y) if name != "fc3" else y
     return x
 
 

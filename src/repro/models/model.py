@@ -119,13 +119,16 @@ def init_params(key, cfg: ArchConfig) -> Params:
 # ------------------------------------------------------------------- forward
 
 
-def _dense_block(p, cfg, h, positions, cache=None, patterns=None):
+def _dense_block(p, cfg, h, positions, cache=None, patterns=None,
+                 dispatch=None):
     a, new_cache = attn_apply(p["attn"], cfg, norm_apply(cfg, p["ln1"], h),
-                              positions, cache, patterns=patterns)
+                              positions, cache, patterns=patterns,
+                              dispatch=dispatch)
     h = h + a
     key = "moe" if cfg.family == "moe" else "mlp"
     f = moe_apply if cfg.family == "moe" else mlp_apply
-    h = h + f(p[key], cfg, norm_apply(cfg, p["ln2"], h), patterns=patterns)
+    h = h + f(p[key], cfg, norm_apply(cfg, p["ln2"], h), patterns=patterns,
+              dispatch=dispatch)
     return h, new_cache
 
 
@@ -145,15 +148,16 @@ def _ssm_superblock(p, cfg, h, cache=None):
     return h, ({"slstm": new_s, "mlstm": new_mc} if cache else None)
 
 
-def _hybrid_superblock(p, shared, cfg, h, positions, cache=None, patterns=None):
+def _hybrid_superblock(p, shared, cfg, h, positions, cache=None,
+                       patterns=None, dispatch=None):
     """Zamba2 super-block: tied shared attention + attn_every Mamba2 blocks."""
     ac = cache["attn"] if cache else None
     a, new_ac = attn_apply(shared["attn"], cfg,
                            norm_apply(cfg, shared["ln"], h), positions, ac,
-                           patterns=patterns)
+                           patterns=patterns, dispatch=dispatch)
     h = h + a
     h = h + mlp_apply(shared["mlp"], cfg, norm_apply(cfg, shared["ln2"], h),
-                      patterns=patterns)
+                      patterns=patterns, dispatch=dispatch)
 
     def inner(hh, xs):
         pm, ln, mc = xs
@@ -185,18 +189,20 @@ def embed_inputs(params, cfg: ArchConfig, batch: Dict) -> Tuple[jnp.ndarray, jnp
 
 
 def forward(params: Params, cfg: ArchConfig, batch: Dict, *,
-            patterns=None) -> jnp.ndarray:
+            patterns=None, dispatch=None) -> jnp.ndarray:
     """Full-sequence forward (train / prefill). Returns logits (B, T, V).
 
     ``patterns`` is the compile_sparse static side-table for compressed
-    parameter trees ((K, N) -> BlockSparsePattern, compile-time constant).
+    parameter trees ((K, N) -> BlockSparsePattern, compile-time constant);
+    ``dispatch`` selects the kernel path per compiled leaf — Pallas
+    quant/block-sparse kernels or their jnp twins (repro.core.dispatch).
     """
     h, positions = embed_inputs(params, cfg, batch)
 
     if cfg.family in ("dense", "encoder", "vlm", "moe"):
         def body(h, p_layer):
             out, _ = _dense_block(p_layer, cfg, h, positions,
-                                  patterns=patterns)
+                                  patterns=patterns, dispatch=dispatch)
             return out, None
     elif cfg.family == "ssm":
         def body(h, p_layer):
@@ -206,7 +212,7 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict, *,
         shared = params["shared_attn"]
         def body(h, p_layer):
             out, _ = _hybrid_superblock(p_layer, shared, cfg, h, positions,
-                                        patterns=patterns)
+                                        patterns=patterns, dispatch=dispatch)
             return out, None
     else:
         raise ValueError(cfg.family)
@@ -228,7 +234,7 @@ def forward(params: Params, cfg: ArchConfig, batch: Dict, *,
         logits = jnp.dot(h, params["embed"]["w"].T.astype(h.dtype))
     else:
         logits = linear_apply(params["head"], h, pattern=(patterns or {}).get(
-            (cfg.d_model, cfg.vocab)))
+            (cfg.d_model, cfg.vocab)), dispatch=dispatch)
     return logits
 
 
@@ -273,12 +279,13 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
 
 
 def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray,
-                *, patterns=None) -> Tuple[jnp.ndarray, Any]:
+                *, patterns=None, dispatch=None) -> Tuple[jnp.ndarray, Any]:
     """One token per sequence: tokens (B, 1) -> logits (B, 1, V), new cache.
 
     Position comes from the per-layer cache lengths (attention) or is
     implicit in the SSM state.  ``patterns`` (static) enables serving from
-    compile_sparse's compacted parameter format.
+    compile_sparse's compacted parameter format; ``dispatch`` (static)
+    selects Pallas kernels vs jnp twins for the compiled leaves.
     """
     h = params["embed"]["w"][tokens]
     B = h.shape[0]
@@ -289,7 +296,7 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray,
         def body(h, xs):
             p_layer, c_layer = xs
             out, new_c = _dense_block(p_layer, cfg, h, positions, c_layer,
-                                      patterns=patterns)
+                                      patterns=patterns, dispatch=dispatch)
             return out, new_c
     elif cfg.family == "ssm":
         positions = None
@@ -307,7 +314,8 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray,
             p_layer, c_layer = xs
             out, new_c = _hybrid_superblock(p_layer, shared, cfg, h,
                                             positions, c_layer,
-                                            patterns=patterns)
+                                            patterns=patterns,
+                                            dispatch=dispatch)
             return out, new_c
     else:
         raise ValueError(cfg.family)
@@ -318,5 +326,5 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray,
         logits = jnp.dot(h, params["embed"]["w"].T.astype(h.dtype))
     else:
         logits = linear_apply(params["head"], h, pattern=(patterns or {}).get(
-            (cfg.d_model, cfg.vocab)))
+            (cfg.d_model, cfg.vocab)), dispatch=dispatch)
     return logits, new_cache

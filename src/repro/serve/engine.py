@@ -38,16 +38,25 @@ class ServeEngine:
     """``params`` may be a raw parameter pytree or a
     :class:`repro.core.compile_sparse.CompressedModel` — the engine then
     serves straight from the compacted format (int8 / block-compacted
-    leaves), with the static pattern table baked into the jitted step."""
+    leaves), with the static pattern table baked into the jitted step.
+
+    ``dispatch`` picks the kernel path for the compiled leaves ("auto" |
+    "pallas" | "jnp" | DispatchConfig | None = REPRO_FORCE_DISPATCH env);
+    it is resolved once here and baked into the jitted ``decode_step``
+    alongside the pattern side-table, so every engine step runs the same
+    engine-free datapath as ``forward``."""
 
     def __init__(self, params, cfg: ArchConfig, *, batch_slots: int = 4,
-                 max_len: int = 256, patterns=None):
+                 max_len: int = 256, patterns=None, dispatch=None):
         from ..core.compile_sparse import CompressedModel
+        from ..core.dispatch import resolve as resolve_dispatch
         if isinstance(params, CompressedModel):
             patterns = params.patterns if patterns is None else patterns
             params = params.params
+        dispatch = resolve_dispatch(dispatch)
         self.params = params
         self.patterns = patterns
+        self.dispatch = dispatch
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
@@ -60,7 +69,8 @@ class ServeEngine:
         self.queue: List[Request] = []
         self.steps_run = 0
         self._step = jax.jit(
-            lambda p, c, t: decode_step(p, cfg, c, t, patterns=patterns))
+            lambda p, c, t: decode_step(p, cfg, c, t, patterns=patterns,
+                                        dispatch=dispatch))
 
     def submit(self, req: Request):
         req.out = []

@@ -1,0 +1,250 @@
+"""Unified compressed-linear dispatch: mode resolution + path routing +
+kernel-vs-jnp equivalence on every serving surface (forward / decode_step /
+ServeEngine), for every policy a layer can compile to."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompileRules, compile_model, decompress_model
+from repro.core.dispatch import (
+    DISPATCH_ENV,
+    DispatchConfig,
+    resolve,
+    sparse_kernel_eligible,
+)
+from repro.core.sparsity import shared_pattern
+from repro.models.config import ArchConfig
+from repro.models.layers import linear_apply, linear_init
+from repro.models.model import decode_step, forward, init_cache, init_params
+from repro.serve.engine import Request, ServeEngine
+
+CFG = ArchConfig(name="disp", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab=211,
+                 param_dtype="float32", remat=False)
+# every stacked linear leaf of CFG (head left to the cost model: 211 does
+# not tile, so forcing it sparse would be a loud error — by design)
+FORCE_KEYS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+
+def _compiled(policy):
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    rules = CompileRules(block=(32, 32), min_weight_elems=0,
+                         block_density=0.5,
+                         policies={k: policy for k in FORCE_KEYS})
+    return compile_model(params, CFG, rules=rules)
+
+
+def _batch(B=2, T=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, CFG.vocab, (B, T)))}
+
+
+# ------------------------------------------------------------- resolution
+
+
+def test_resolve_modes_and_env(monkeypatch):
+    monkeypatch.delenv(DISPATCH_ENV, raising=False)
+    assert resolve(None).mode == "auto"
+    assert resolve("jnp").mode == "jnp"
+    assert resolve("PALLAS").mode == "pallas"
+    cfg = DispatchConfig(mode="jnp")
+    assert resolve(cfg) is cfg
+    monkeypatch.setenv(DISPATCH_ENV, "jnp")
+    assert resolve(None).mode == "jnp"
+    monkeypatch.setenv(DISPATCH_ENV, "pallas")
+    assert resolve(None).mode == "pallas"
+    monkeypatch.setenv(DISPATCH_ENV, "")
+    assert resolve(None).mode == "auto"
+
+
+def test_resolve_rejects_typos(monkeypatch):
+    with pytest.raises(ValueError, match="unknown dispatch mode"):
+        resolve("palas")
+    monkeypatch.setenv(DISPATCH_ENV, "xla")
+    with pytest.raises(ValueError, match="unknown dispatch mode"):
+        resolve(None)
+
+
+def test_interpret_follows_backend():
+    # CPU test environment: forced-pallas must run in interpret mode
+    assert resolve("pallas").run_interpret is True
+    assert DispatchConfig(mode="pallas", interpret=False).run_interpret is False
+
+
+# ---------------------------------------------------------------- routing
+
+
+def _sparse_leaf(K=64, N=128, block=(8, 128), density=0.5, key=0):
+    pat = shared_pattern(K, N, block, density)
+    p = linear_init(jax.random.PRNGKey(key), K, N, dtype=jnp.float32,
+                    mode="sparse", pattern=pat)
+    return p, pat
+
+
+def test_pallas_mode_routes_through_kernel(monkeypatch):
+    """Forced-pallas must hit block_sparse_matmul (via sparse_linear)."""
+    calls = []
+    import repro.core.dispatch as disp
+    real = disp.sparse_linear
+    monkeypatch.setattr(disp, "sparse_linear",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    p, pat = _sparse_leaf()
+    x = jnp.ones((4, 64), jnp.float32)
+    linear_apply(p, x, pattern=pat, dispatch="pallas")
+    assert calls, "pallas dispatch did not reach the Pallas kernel path"
+    calls.clear()
+    linear_apply(p, x, pattern=pat, dispatch="jnp")
+    assert not calls, "jnp dispatch must not launch the kernel"
+
+
+def test_auto_on_tpu_routes_tiling_shapes_through_kernel(monkeypatch):
+    """Acceptance criterion: auto mode + TPU backend + tiling pattern =>
+    block_sparse_matmul; non-tiling block => static-gather fallback.
+    (Backend is faked; the kernel call is stubbed, never executed.)"""
+    import repro.core.dispatch as disp
+    monkeypatch.delenv(DISPATCH_ENV, raising=False)  # CI matrix sets it
+    monkeypatch.setattr(disp.jax, "default_backend", lambda: "tpu")
+    calls = []
+    monkeypatch.setattr(disp, "sparse_linear",
+                        lambda x, cl, **k: calls.append(1) or
+                        jnp.zeros((*x.shape[:-1], cl.pattern.shape[1])))
+    p, pat = _sparse_leaf(K=256, N=256, block=(128, 128))  # bk, bn % 128
+    assert sparse_kernel_eligible(pat, jnp.float32)
+    linear_apply(p, jnp.ones((4, 256)), pattern=pat)  # auto
+    assert calls, "auto on TPU with tiling shapes must use the kernel"
+    calls.clear()
+    p2, pat2 = _sparse_leaf(K=64, N=64, block=(32, 32))  # 32-lane: no tile
+    assert not sparse_kernel_eligible(pat2, jnp.float32)
+    # bk below the 128-lane minimum of the x tile is also ineligible
+    _, pat3 = _sparse_leaf(block=(8, 128))
+    assert not sparse_kernel_eligible(pat3, jnp.float32)
+    linear_apply(p2, jnp.ones((4, 64)), pattern=pat2)  # auto
+    assert not calls, "non-tiling block must fall back to the jnp path"
+
+
+def test_forced_pallas_compiled_mode_respects_tiling(monkeypatch):
+    """Forced-pallas with interpret OFF (i.e. on real hardware) must not
+    launch the kernel for shapes below the tile minima — the jnp twin
+    runs instead of dying in Mosaic lowering."""
+    import repro.core.dispatch as disp
+    calls = []
+    monkeypatch.setattr(disp, "sparse_linear",
+                        lambda x, cl, **k: calls.append(1) or
+                        jnp.zeros((*x.shape[:-1], cl.pattern.shape[1])))
+    compiled = DispatchConfig(mode="pallas", interpret=False)
+    p, pat = _sparse_leaf(K=64, N=64, block=(32, 32))  # below tile minima
+    y = linear_apply(p, jnp.ones((4, 64), jnp.float32), pattern=pat,
+                     dispatch=compiled)
+    assert not calls and y.shape == (4, 64)
+    p2, pat2 = _sparse_leaf(K=256, N=256, block=(128, 128))  # tiles
+    linear_apply(p2, jnp.ones((4, 256), jnp.float32), pattern=pat2,
+                 dispatch=compiled)
+    assert calls
+
+
+def test_env_var_reaches_linear_apply(monkeypatch):
+    calls = []
+    import repro.core.dispatch as disp
+    real = disp.sparse_linear
+    monkeypatch.setattr(disp, "sparse_linear",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    p, pat = _sparse_leaf()
+    monkeypatch.setenv(DISPATCH_ENV, "pallas")
+    linear_apply(p, jnp.ones((4, 64), jnp.float32), pattern=pat)
+    assert calls
+
+
+# ----------------------------------------------- surface equivalence matrix
+
+
+@pytest.mark.parametrize("policy", ["dense", "quant", "sparse"])
+def test_forward_equivalence_per_policy(policy):
+    """forward: identical logits whether the Pallas kernels or the jnp
+    fallback execute the compiled leaves, both matching the dense oracle."""
+    cm = _compiled(policy)
+    assert {r.policy for r in cm.report if r.name != "head"} == {policy}
+    batch = _batch()
+    l_jnp = forward(cm.params, CFG, batch, patterns=cm.patterns,
+                    dispatch="jnp")
+    l_pal = forward(cm.params, CFG, batch, patterns=cm.patterns,
+                    dispatch="pallas")
+    l_den = forward(decompress_model(cm), CFG, batch)
+    np.testing.assert_allclose(np.asarray(l_jnp), np.asarray(l_pal),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(l_jnp), np.asarray(l_den),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("policy", ["dense", "quant", "sparse"])
+def test_decode_equivalence_per_policy(policy):
+    cm = _compiled(policy)
+    toks = jnp.asarray([[3], [7]], jnp.int32)
+    l_jnp, _ = decode_step(cm.params, CFG, init_cache(CFG, 2, 16), toks,
+                           patterns=cm.patterns, dispatch="jnp")
+    l_pal, _ = decode_step(cm.params, CFG, init_cache(CFG, 2, 16), toks,
+                           patterns=cm.patterns, dispatch="pallas")
+    np.testing.assert_allclose(np.asarray(l_jnp), np.asarray(l_pal),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_serve_engine_equivalence_sparse():
+    """ServeEngine.run: same generated tokens on both dispatch paths."""
+    cm = _compiled("sparse")
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, CFG.vocab, size=n).astype(np.int32)
+               for n in (3, 5)]
+
+    def run(dispatch):
+        eng = ServeEngine(cm, CFG, batch_slots=2, max_len=32,
+                          dispatch=dispatch)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [r.out for r in reqs]
+
+    assert run("jnp") == run("pallas")
+
+
+def test_lenet_explicit_dispatch_beats_legacy_flag(monkeypatch):
+    """lenet_forward(dispatch='jnp', interpret_kernels=True): the explicit
+    argument wins — the legacy flag must not force the kernel path."""
+    import repro.core.dispatch as disp
+    from repro.core import CompileRules as CR, compile_lenet
+    from repro.models.lenet import init_lenet, lenet_forward
+    kernel_uses = []
+    real = disp.sparse_linear
+    monkeypatch.setattr(
+        disp, "sparse_linear",
+        lambda *a, **k: kernel_uses.append(k.get("use_kernel")) or
+        real(*a, **k))
+    params = init_lenet(jax.random.PRNGKey(0))
+    cm = compile_lenet(params, rules=CR(block=(8, 4), min_weight_elems=0,
+                                        block_density=0.5,
+                                        policies={"fc1": "sparse"}))
+    assert cm.policy_of("fc1") == "sparse"
+    img = jnp.asarray(np.random.default_rng(0).normal(size=(2, 28, 28, 1)),
+                      jnp.float32)
+    lenet_forward(params, img, compressed=cm.layers, dispatch="jnp",
+                  interpret_kernels=True)
+    assert kernel_uses and not any(kernel_uses)
+    kernel_uses.clear()
+    lenet_forward(params, img, compressed=cm.layers, interpret_kernels=True)
+    assert kernel_uses and all(kernel_uses)
+
+
+def test_decode_thin_batch_uses_decode_entry(monkeypatch):
+    """decode_step's M is the slot count (<128): the dispatch must route
+    through the batched-RHS decode entry, not the 128-row prefill tile."""
+    import repro.kernels.sparse_matmul.ops as ops
+    calls = []
+    real = ops.block_sparse_matmul_decode
+    monkeypatch.setattr(ops, "block_sparse_matmul_decode",
+                        lambda *a, **k: calls.append(a[0].shape) or real(*a, **k))
+    cm = _compiled("sparse")
+    toks = jnp.asarray([[3], [7]], jnp.int32)
+    decode_step(cm.params, CFG, init_cache(CFG, 2, 16), toks,
+                patterns=cm.patterns, dispatch="pallas")
+    assert calls, "thin-M sparse dispatch skipped the decode entry point"

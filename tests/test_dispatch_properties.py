@@ -1,0 +1,185 @@
+"""Property-based differential matrix for the Pallas sparse datapath.
+
+Every case builds a random two-level pattern (block bitmap x in-block
+element mask), compresses it (float or int8+scales), and asserts the
+Pallas kernel path — fused bias/activation epilogue included — matches
+the **decompressed-dense oracle** (`decompress(cl)` then plain matmul)
+to tolerance.
+
+The checker is exercised two ways:
+
+* a deterministic pytest matrix spanning the regime corners (density 0
+  and 1, thin decode M, padded prefill M, int8, every epilogue) — runs
+  everywhere, hypothesis installed or not;
+* hypothesis fuzzing over the same parameter space via the `_hyp` shim
+  (skips cleanly when hypothesis is absent).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core import CompileRules, compile_lenet, decompress_model, quantize
+from repro.core.sparsity import compress, decompress
+from repro.kernels.sparse_matmul.kernel import ACTIVATIONS
+from repro.kernels.sparse_matmul.ops import sparse_linear
+from repro.models.lenet import init_lenet, lenet_forward
+
+BLOCKS = [(4, 4), (8, 4), (16, 8), (8, 128), (32, 32)]
+ACTS = [None, "relu", "silu", "gelu"]
+
+
+def _oracle(x, cl, bias, activation):
+    """decompressed-dense reference: scatter W back, matmul, f32 epilogue."""
+    w = decompress(cl).astype(jnp.float32)
+    y = jnp.asarray(x, jnp.float32) @ w
+    if bias is not None:
+        y = y + jnp.asarray(bias, jnp.float32)[None, :]
+    if activation is not None:
+        y = ACTIVATIONS[activation](y)
+    return y
+
+
+def _check_case(M, nR, nC, bk, bn, density, in_density, quant, bias,
+                activation, seed):
+    rng = np.random.default_rng(seed)
+    K, N = nR * bk, nC * bn
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    bitmap = rng.random((nR, nC)) < density          # density 0 => empty
+    mask = np.kron(bitmap, np.ones((bk, bn), bool))
+    if in_density < 1.0:                             # unstructured inside
+        mask &= rng.random((K, N)) < in_density
+    if quant:
+        q = quantize(w, 8, axis=1)
+        cl = compress(w, mask, (bk, bn),
+                      quant_scales=np.asarray(q.scales).reshape(-1),
+                      quant_bits=8)
+    else:
+        cl = compress(w, mask, (bk, bn), dtype=jnp.float32)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(N,)), jnp.float32) if bias else None
+    y = sparse_linear(x, cl, bias=b, activation=activation,
+                      interpret=True, use_kernel=True)
+    yo = _oracle(x, cl, b, activation)
+    assert y.shape == (M, N)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yo),
+                               rtol=1e-4, atol=1e-3)
+    # and the jnp twin agrees with the same oracle (both dispatch paths)
+    yj = sparse_linear(x, cl, bias=b, activation=activation,
+                       use_kernel=False)
+    np.testing.assert_allclose(np.asarray(yj), np.asarray(yo),
+                               rtol=1e-4, atol=1e-3)
+
+
+# --------------------------------------------------- deterministic corners
+
+
+@pytest.mark.parametrize("density", [0.0, 0.1, 0.5, 1.0])
+@pytest.mark.parametrize("quant", [False, True])
+def test_density_regime(density, quant):
+    _check_case(M=12, nR=3, nC=2, bk=8, bn=16, density=density,
+                in_density=1.0, quant=quant, bias=True, activation="relu",
+                seed=int(density * 10) + quant)
+
+
+@pytest.mark.parametrize("bk,bn", BLOCKS)
+def test_block_shapes(bk, bn):
+    _check_case(M=9, nR=2, nC=2, bk=bk, bn=bn, density=0.6, in_density=0.7,
+                quant=False, bias=True, activation="silu", seed=bk + bn)
+
+
+@pytest.mark.parametrize("activation", ACTS)
+@pytest.mark.parametrize("bias", [False, True])
+def test_epilogue_fusion_matrix(activation, bias):
+    _check_case(M=7, nR=2, nC=3, bk=8, bn=8, density=0.5, in_density=1.0,
+                quant=True, bias=bias, activation=activation, seed=11)
+
+
+@pytest.mark.parametrize("M", [1, 3, 8, 130, 257])
+def test_batch_rows_decode_and_padded(M):
+    """Thin decode M (< 128, incl. 1) and non-multiple prefill M."""
+    _check_case(M=M, nR=2, nC=2, bk=8, bn=16, density=0.5, in_density=1.0,
+                quant=False, bias=True, activation=None, seed=M)
+
+
+def test_leading_batch_dims_preserved():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(32, 32)).astype(np.float32)
+    mask = np.kron(rng.random((4, 4)) < 0.5, np.ones((8, 8), bool))
+    cl = compress(w, mask, (8, 8), dtype=jnp.float32)
+    x = jnp.asarray(rng.normal(size=(3, 5, 32)), jnp.float32)
+    y = sparse_linear(x, cl, interpret=True, use_kernel=True)
+    yo = _oracle(x.reshape(-1, 32), cl, None, None).reshape(3, 5, 32)
+    assert y.shape == (3, 5, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yo),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_wrong_feature_dim_raises_loudly():
+    """x whose trailing dim is not K but whose size divides K must NOT be
+    silently refolded (the old reshape(-1, K) bug)."""
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(128, 64)).astype(np.float32)
+    mask = np.ones((128, 64), bool)
+    cl = compress(w, mask, (32, 32), dtype=jnp.float32)
+    with pytest.raises(ValueError, match="feature dim"):
+        sparse_linear(jnp.ones((4, 96), jnp.float32), cl)  # 4*96 % 128 == 0
+
+
+# -------------------------------------- K/N not divisible by the rule block
+
+
+@pytest.mark.parametrize("block", [(16, 7), (9, 4), (48, 128)])
+def test_nondividing_block_downgrades_not_corrupts(block):
+    """compile-level fuzz corner: a rule block that cannot tile a layer
+    must downgrade the policy (never sparse), and the compressed model
+    must still match the dense oracle on both dispatch paths."""
+    params = init_lenet(jax.random.PRNGKey(0))
+    cm = compile_lenet(params, rules=CompileRules(
+        block=block, min_weight_elems=0, block_density=0.5))
+    for r in cm.report:
+        K, N = r.shape
+        if K % block[0] or N % block[1]:
+            assert r.policy != "sparse", (r.name, r.policy)
+    img = jnp.asarray(np.random.default_rng(2).normal(size=(4, 28, 28, 1)),
+                      jnp.float32)
+    dense = decompress_model(cm)
+    y_ref = lenet_forward(dense, img)
+    for mode in ("jnp", "pallas"):
+        y = lenet_forward(params, img, compressed=cm.layers, dispatch=mode)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_explicit_sparse_on_nondividing_block_is_loud():
+    params = init_lenet(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="cannot tile"):
+        compile_lenet(params, rules=CompileRules(
+            block=(16, 7), min_weight_elems=0,
+            policies={"fc1": "sparse"}))
+
+
+# -------------------------------------------------------- hypothesis fuzz
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    M=st.integers(min_value=1, max_value=140),
+    nR=st.integers(min_value=1, max_value=4),
+    nC=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from(BLOCKS),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    in_density=st.floats(min_value=0.0, max_value=1.0),
+    quant=st.booleans(),
+    bias=st.booleans(),
+    activation=st.sampled_from(ACTS),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_fuzz_differential(M, nR, nC, block, density, in_density, quant,
+                           bias, activation, seed):
+    bk, bn = block
+    _check_case(M=M, nR=nR, nC=nC, bk=bk, bn=bn, density=density,
+                in_density=in_density, quant=quant, bias=bias,
+                activation=activation, seed=seed)

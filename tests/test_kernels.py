@@ -8,7 +8,11 @@ import numpy as np
 import pytest
 
 from repro.core import block_aware_prune, compress, quantize
-from repro.kernels.sparse_matmul.kernel import block_sparse_matmul
+from repro.kernels.sparse_matmul.kernel import (
+    ACTIVATIONS,
+    block_sparse_matmul,
+    block_sparse_matmul_decode,
+)
 from repro.kernels.sparse_matmul.ref import block_sparse_matmul_ref
 from repro.kernels.sparse_matmul.ops import sparse_linear
 from repro.kernels.quant_matmul.kernel import quant_matmul
@@ -170,6 +174,96 @@ def test_block_sparse_single_present_block_masks_all_other_columns():
     np.testing.assert_allclose(np.asarray(y), x @ w, rtol=1e-4, atol=1e-3)
     assert np.abs(np.asarray(y)[:, :256]).max() == 0.0
     assert np.abs(np.asarray(y)[:, 384:]).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Fused bias+activation epilogue schedule + batched-RHS (decode) entry point.
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "silu", "gelu"])
+def test_epilogue_kernel_vs_ref(activation):
+    cl, w, mask = _compressed(256, 256, 64, 64, 0.5, 0.8, seed=31)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(32, 256)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    pat = cl.pattern
+    kw = dict(block_rows=pat.block_rows, block_cols=pat.block_cols,
+              n_row_blocks=pat.bitmap.shape[0],
+              n_col_blocks=pat.bitmap.shape[1], bias=b, activation=activation)
+    y = block_sparse_matmul(x, cl.blocks, bm=32, interpret=True, **kw)
+    yref = block_sparse_matmul_ref(x, cl.blocks, **kw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-3)
+    # oracle equals the fused formula applied to the masked dense matmul
+    manual = x @ (w * mask) + b[None, :]
+    if activation is not None:
+        manual = ACTIVATIONS[activation](manual)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(manual),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fully_empty_pattern_epilogue():
+    """Regression: all blocks pruned — no schedule, no kernel launch; the
+    output must still be act(0 + b), on kernel and oracle paths alike."""
+    K = N = 128
+    w = np.zeros((K, N), np.float32)
+    cl = compress(w, np.zeros((K, N), bool), (32, 32), dtype=jnp.float32)
+    assert cl.pattern.n_blocks_present == 0
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.normal(size=(16, K)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+    for act in (None, "relu", "silu"):
+        y = sparse_linear(x, cl, bias=b, activation=act,
+                          interpret=True, use_kernel=True)
+        yref = sparse_linear(x, cl, bias=b, activation=act, use_kernel=False)
+        expect = b[None, :] if act is None else ACTIVATIONS[act](b)[None, :]
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(y), np.broadcast_to(np.asarray(expect), (16, N)),
+            rtol=1e-5, atol=1e-6)
+    # and without any epilogue the empty pattern is exactly zero
+    y0 = sparse_linear(x, cl, interpret=True, use_kernel=True)
+    assert np.abs(np.asarray(y0)).max() == 0.0
+
+
+def test_single_block_pattern_epilogue():
+    """Regression: 1-of-16 block pattern through the epilogue — present
+    column fused, absent columns get act(b) via the static column mask."""
+    K = N = 128
+    rng = np.random.default_rng(13)
+    w = np.zeros((K, N), np.float32)
+    w[32:64, 64:96] = rng.normal(size=(32, 32))
+    mask = w != 0
+    cl = compress(w, mask, (32, 32), dtype=jnp.float32)
+    assert cl.pattern.n_blocks_present == 1
+    x = jnp.asarray(rng.normal(size=(8, K)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(N,)).astype(np.float32))
+    y = sparse_linear(x, cl, bias=b, activation="relu",
+                      interpret=True, use_kernel=True)
+    manual = np.maximum(np.asarray(x) @ w + np.asarray(b)[None, :], 0.0)
+    np.testing.assert_allclose(np.asarray(y), manual, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("M", [1, 4, 17, 127])
+def test_decode_entry_point_small_batch(M):
+    """block_sparse_matmul_decode: thin batched-RHS shapes, with dequant
+    and epilogue, must match the ref without the caller padding to 128."""
+    clq, w, mask = _compressed(256, 128, 64, 64, 0.5, 1.0, seed=41,
+                               quant=True)
+    rng = np.random.default_rng(M)
+    x = jnp.asarray(rng.normal(size=(M, 256)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(128,)).astype(np.float32))
+    pat = clq.pattern
+    kw = dict(block_rows=pat.block_rows, block_cols=pat.block_cols,
+              n_row_blocks=pat.bitmap.shape[0],
+              n_col_blocks=pat.bitmap.shape[1], scales=clq.scales,
+              bias=b, activation="relu")
+    y = block_sparse_matmul_decode(x, clq.blocks, interpret=True, **kw)
+    yref = block_sparse_matmul_ref(x, clq.blocks, **kw)
+    assert y.shape == (M, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-3)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

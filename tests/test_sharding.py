@@ -18,6 +18,7 @@ from repro.launch.sharding import (
     cache_specs,
     param_specs,
     sanitize_specs,
+    schedule_shardable,
 )
 from repro.launch.specs import param_shapes
 
@@ -93,6 +94,58 @@ def test_cache_specs_batch_vs_sequence_sharding():
     spec = cache_specs(cfg, MESH, batch=1)
     assert tuple(spec["attn"]["k"])[1] is None
     assert "data" in str(tuple(spec["attn"]["k"])[2])
+
+
+def test_schedule_shardable_uniform_vs_lopsided():
+    from repro.core.sparsity import pattern_from_bitmap, shared_pattern
+    # diagonal stripe: every row group carries an equal share of blocks
+    pat = shared_pattern(256, 256, (32, 32), 0.5)
+    assert schedule_shardable(pat, 2)
+    assert schedule_shardable(pat, 1)
+    # all present blocks crowd the first block-row: a contiguous packed-axis
+    # split would hand shard 1 nothing and break the shared side-table
+    bm = np.zeros((8, 8), bool)
+    bm[0] = True
+    lop = pattern_from_bitmap((256, 256), (32, 32), bm)
+    assert not schedule_shardable(lop, 2)
+    # empty pattern: nothing to shard
+    empty = pattern_from_bitmap((256, 256), (32, 32), np.zeros((8, 8), bool))
+    assert not schedule_shardable(empty, 2)
+
+
+def test_param_specs_pattern_aware_w_blk():
+    """With the compile_sparse side-table, w_blk specs are pattern-aware:
+    row-parallel 'model' sharding only when the shared schedule partitions
+    evenly into per-shard sub-schedules; replicated otherwise."""
+    import jax.numpy as jnp
+    from repro.core.sparsity import pattern_from_bitmap, shared_pattern
+    cfg = get_config("llama3.2-1b")
+    mesh = FakeMesh((4, 2), ("data", "model"))
+
+    uniform = shared_pattern(256, 512, (32, 32), 0.5)   # shardable by 2
+    bm = np.zeros((8, 8), bool)
+    bm[0] = True
+    lop = pattern_from_bitmap((256, 256), (32, 32), bm)  # not shardable
+
+    P_u, P_l = uniform.n_blocks_present, lop.n_blocks_present
+    params = {
+        "blocks": {
+            "attn": {
+                "wq": {"w_blk": jnp.zeros((4, P_u, 32, 32))},   # stacked
+                "wo": {"w_blk": jnp.zeros((P_l, 32, 32))},
+            },
+        },
+    }
+    specs = param_specs(params, cfg, mesh, fsdp=False,
+                        patterns={(256, 512): uniform, (256, 256): lop})
+    assert tuple(specs["blocks"]["attn"]["wq"]["w_blk"]) == \
+        (None, "model", None, None)
+    assert tuple(specs["blocks"]["attn"]["wo"]["w_blk"]) == \
+        (None, None, None)
+    # without the side-table the legacy blind packed-axis rule still applies
+    legacy = param_specs(params, cfg, mesh, fsdp=False)
+    assert tuple(legacy["blocks"]["attn"]["wo"]["w_blk"]) == \
+        ("model", None, None)
 
 
 def test_checkpoint_restore_to_sharding(tmp_path):

@@ -1,0 +1,90 @@
+"""Autotune smoke — the CI leg for the DSE-coupled tuner.
+
+Tiny search space, full loop: compile a small model with forced sparse +
+quant leaves, tune at the decode shape, then assert the whole acceptance
+surface:
+
+  1. a second tuning run against the same on-disk cache re-times NOTHING
+     (the cache-hit contract);
+  2. tuned decode output is bitwise identical to the default dispatch
+     (tuning swaps kernels/tiles, never math);
+  3. the tuned config beats or matches the default path on the recorded
+     micro-bench for the block-sparse decode case (generous tolerance —
+     CI runners are noisy, and on CPU both resolve to the same XLA twin);
+  4. the stable top-level BENCH_autotune.json is written.
+
+Run:  PYTHONPATH=src python -m benchmarks.autotune_smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CompileRules, TuneOptions, compile_model
+from repro.core.autotune import autotune_model
+from repro.core.dispatch import DispatchConfig
+from repro.models.config import ArchConfig
+from repro.models.model import decode_step, init_cache, init_params
+
+CFG = ArchConfig(name="smoke", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab=211,
+                 param_dtype="float32", remat=False)
+SLOTS = 2
+OPTS = TuneOptions(iters=3, warmup=1, max_measured=2)  # tiny search space
+
+
+def main() -> int:
+    from benchmarks.compressed_vs_dense import AUTOTUNE_JSON, _autotune_section
+
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    keys = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+    cm = compile_model(params, CFG, rules=CompileRules(
+        block=(32, 32), min_weight_elems=0, block_density=0.5,
+        policies={k: ("quant" if k == "wo" else "sparse") for k in keys}))
+
+    cache = os.path.join(tempfile.mkdtemp(prefix="autotune_smoke_"),
+                         "cache.json")
+    t1 = autotune_model(cm, M=SLOTS, options=OPTS, path=cache)
+    assert len(t1) > 0 and t1.n_timings() > 0, "cold run must tune"
+    t2 = autotune_model(cm, M=SLOTS, options=OPTS, path=cache)
+    assert t2.n_timings() == 0, (
+        f"cache-hit violated: {t2.n_timings()} candidates re-timed")
+    assert t1.entries == t2.entries
+    print(f"cache: {len(t1)} entries, second run re-timed 0 — OK")
+
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, CFG.vocab, (SLOTS, 1)), jnp.int32)
+    l_def, _ = decode_step(cm.params, CFG, init_cache(CFG, SLOTS, 16), toks,
+                           patterns=cm.patterns)
+    l_tun, _ = decode_step(cm.params, CFG, init_cache(CFG, SLOTS, 16), toks,
+                           patterns=cm.patterns,
+                           dispatch=DispatchConfig(mode="auto", tuned=t2))
+    np.testing.assert_array_equal(np.asarray(l_def), np.asarray(l_tun))
+    print("tuned decode bitwise identical to default — OK")
+
+    at = _autotune_section(cm, cache_path=cache)
+    assert at["cache"]["hit"], "bench cache record must show a warm second run"
+    assert at["layers"], "no block-sparse decode rows recorded"
+    for r in at["layers"]:
+        assert r["tuned_us"] <= r["default_us"] * 1.5, (
+            f"{r['layer']}: tuned {r['tuned_us']:.1f}us much slower than "
+            f"default {r['default_us']:.1f}us")
+        print(f"{r['layer']}: default {r['default_us']:.1f}us -> tuned "
+              f"{r['tuned_us']:.1f}us ({r['speedup']:.2f}x)")
+    with open(AUTOTUNE_JSON, "w") as f:
+        json.dump(at, f, indent=2)
+    assert os.path.exists(AUTOTUNE_JSON)
+    print(f"wrote {AUTOTUNE_JSON} — OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,8 +16,15 @@ and a per-layer **kernel-vs-gather** micro-timing table for every shared
 sparse schedule (Pallas block_sparse_matmul vs the jnp static-gather twin
 at the decode shape) — all of it recorded into the bench JSON.
 
+Also emits the **autotune trajectory**: every shared sparse schedule is
+tuned at the decode shape (repro.core.autotune — roofline-seeded search,
+measured refinement, on-disk cache), then default-vs-tuned per-layer
+timings plus the cache-hit record of a second tuning run are written to a
+stable top-level ``BENCH_autotune.json`` so the perf trajectory of the
+tuner is recorded run over run.
+
 Run:  PYTHONPATH=src python benchmarks/compressed_vs_dense.py \
-          [--dispatch {auto,pallas,jnp}] [--json PATH]
+          [--dispatch {auto,pallas,jnp}] [--json PATH] [--autotune-json PATH]
 
 ``--dispatch`` forces the kernel path of the timed decode steps (same
 values as the REPRO_FORCE_DISPATCH env var; 'pallas' off-TPU runs the
@@ -51,6 +58,8 @@ BATCH = 8
 ITERS = 20
 LINEAR_KEYS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd", "head")
 DEFAULT_JSON = os.path.join("results", "compressed_vs_dense.json")
+# stable top-level name: the autotune perf trajectory is diffed run-over-run
+AUTOTUNE_JSON = "BENCH_autotune.json"
 
 
 def _time_decode(params, cfg, patterns=None, dispatch=None) -> float:
@@ -122,7 +131,94 @@ def _find_leaf(tree, path):
     return node
 
 
-def run(dispatch: str = "auto") -> Dict:
+def _time_pair(f_a, f_b, x, n=10, repeats=5):
+    """Interleaved best-of-``repeats`` means over ``n`` calls each.
+
+    Timing the two candidates back-to-back inside every repeat cancels the
+    machine-load drift that dominates at the ~50us scale of these layers;
+    the min over repeats is the stable estimator on noisy shared runners."""
+    f_a(x).block_until_ready()
+    f_b(x).block_until_ready()
+    best_a = best_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            f_a(x).block_until_ready()
+        best_a = min(best_a, (time.perf_counter() - t0) / n * 1e6)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            f_b(x).block_until_ready()
+        best_b = min(best_b, (time.perf_counter() - t0) / n * 1e6)
+    return best_a, best_b
+
+
+def _autotune_section(cm, cache_path=None) -> Dict:
+    """Default-vs-tuned per-layer decode timings + the cache-hit record.
+
+    Tunes every shared sparse schedule at the decode shape (M = BATCH),
+    then times the default dispatch against the tuned table end to end
+    (both jitted).  A second tuning run against the same on-disk cache
+    must re-time nothing — that count is recorded as the cache proof."""
+    from repro.core.autotune import TuneOptions, autotune_model
+    from repro.core.dispatch import DispatchConfig
+
+    # the bench owns its cache file: it deliberately cold-starts (deletes)
+    # it to measure a full tune, which must never wipe the shared default
+    # cache that ServeEngine(autotune=True) / dispatch="autotune" read
+    cache_path = cache_path or os.path.join("results",
+                                            "autotune_bench_cache.json")
+    if os.path.exists(cache_path):
+        os.unlink(cache_path)  # cold start: the bench measures a full tune
+    opts = TuneOptions(iters=10, warmup=2)
+    table = autotune_model(cm, M=BATCH, options=opts, path=cache_path)
+    first_timings = table.n_timings()
+    table2 = autotune_model(cm, M=BATCH, options=opts, path=cache_path)
+    second_timings = table2.n_timings()
+
+    tuned_cfg = DispatchConfig(mode="auto", tuned=table)
+    rng = np.random.default_rng(11)
+    rows = []
+    sparse_layers = [r for r in cm.report if r.policy == "sparse"]
+    for (K, N), pat in cm.patterns.items():
+        rep = next(r for r in sparse_layers if r.shape == (K, N))
+        leaf = _find_leaf(cm.params, rep.name)
+        blocks = leaf["w_blk"][0] if leaf["w_blk"].ndim == 4 else leaf["w_blk"]
+        p = {"w_blk": blocks}
+        if "w_s" in leaf:
+            p["w_s"] = leaf["w_s"][0] if leaf["w_s"].ndim == 2 else leaf["w_s"]
+        x = jnp.asarray(rng.normal(size=(BATCH, K)).astype(np.float32))
+        default = jax.jit(lambda xx, p=p, pat=pat: linear_dispatch(
+            p, xx, pattern=pat))
+        tuned = jax.jit(lambda xx, p=p, pat=pat: linear_dispatch(
+            p, xx, pattern=pat, dispatch=tuned_cfg))
+        d_us, t_us = _time_pair(default, tuned, x)
+        from repro.core.autotune import tune_key
+        entry = table.get(tune_key(kind="sparse", M=BATCH, K=K, N=N,
+                                   dtype=x.dtype, pattern=pat))
+        rows.append({
+            "layer": rep.name, "K": K, "N": N, "M": BATCH,
+            "block_density": pat.block_density,
+            "default_us": d_us, "tuned_us": t_us,
+            "speedup": d_us / max(t_us, 1e-9),
+            "tuned_config": None if entry is None else entry.to_json(),
+        })
+    return {
+        "backend": jax.default_backend(),
+        "decode_batch": BATCH,
+        "layers": rows,
+        "cache": {
+            "path": cache_path,
+            "first_run_timings": first_timings,
+            "second_run_timings": second_timings,
+            "hit": second_timings == 0,
+        },
+    }
+
+
+def run(dispatch: str = "auto", autotune: bool = True) -> Dict:
+    """``autotune=False`` skips the tuning loop entirely (the 'compressed'
+    section alone stays a quick latency/storage report); the result then
+    carries ``autotune: None``."""
     params = init_params(jax.random.PRNGKey(0), CFG)
 
     def forced(policy):
@@ -164,7 +260,11 @@ def run(dispatch: str = "auto") -> Dict:
         "compression": cm.compression,
         "policies": ",".join(r.policy for r in cm.report),
     })
-    return {"dispatch": dispatch, "variants": rows, "layers": layer_rows}
+
+    at = _autotune_section(variants["block_sparse"]) if autotune else None
+
+    return {"dispatch": dispatch, "variants": rows, "layers": layer_rows,
+            "autotune": at}
 
 
 def main(argv=None):
@@ -175,6 +275,9 @@ def main(argv=None):
                          "(REPRO_FORCE_DISPATCH equivalent)")
     ap.add_argument("--json", default=DEFAULT_JSON,
                     help="bench JSON output path ('' disables)")
+    ap.add_argument("--autotune-json", default=AUTOTUNE_JSON,
+                    help="stable top-level autotune trajectory JSON "
+                         "('' disables)")
     args = ap.parse_args(argv)
 
     result = run(dispatch=args.dispatch)
@@ -189,11 +292,27 @@ def main(argv=None):
         print(f"{r['layer']},{r['K']},{r['N']},{r['block_density']:.2f},"
               f"{r['pallas_us']:.1f},{r['jnp_us']:.1f},"
               f"{r['pallas_interpret']}")
+    at = result["autotune"]
+    print("autotune_layer,K,N,default_us,tuned_us,speedup,cache_hit")
+    for r in at["layers"]:
+        print(f"{r['layer']},{r['K']},{r['N']},{r['default_us']:.1f},"
+              f"{r['tuned_us']:.1f},{r['speedup']:.2f}x,"
+              f"{at['cache']['hit']}")
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2)
         print(f"# wrote {args.json}")
+    if args.autotune_json:
+        d = os.path.dirname(args.autotune_json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.autotune_json, "w") as f:
+            json.dump(at, f, indent=2)
+        print(f"# wrote {args.autotune_json}")
+    assert at["cache"]["hit"], (
+        "autotune cache regressed: second tuning run re-measured "
+        f"{at['cache']['second_run_timings']} candidates")
     sparse = next(r for r in rows if r["variant"] == "lenet_fc_8bit_25pct")
     assert sparse["compression"] >= 4.0, (
         f"storage reduction regressed: {sparse['compression']:.2f}x < 4x")

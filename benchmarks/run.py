@@ -7,6 +7,9 @@
              oracle agreement)
   compressed — whole-model dense vs quant-dense vs block-sparse decode-step
              latency + storage (compile_sparse pipeline)
+  autotune — default-vs-tuned per-layer decode timings for every shared
+             sparse schedule + the tuner's cache-hit record; also written
+             to the stable top-level BENCH_autotune.json
   roofline — 40-cell dry-run roofline table (reads results/dryrun)
 """
 from __future__ import annotations
@@ -55,7 +58,7 @@ def _kernel_bench():
 
 def main() -> None:
     sections = sys.argv[1:] or ["table1", "fig2", "kernels", "compressed",
-                                "roofline"]
+                                "autotune", "roofline"]
     print("name,us_per_call,derived")
     if "table1" in sections:
         from . import table1_lenet
@@ -82,18 +85,30 @@ def main() -> None:
                   f"res={r['resource_bytes']:.3g}")
     if "kernels" in sections:
         _kernel_bench()
-    if "compressed" in sections:
+    if "compressed" in sections or "autotune" in sections:
         from . import compressed_vs_dense
-        result = compressed_vs_dense.run()
-        for r in result["variants"]:
-            su = "nan" if r["step_us"] is None else f"{r['step_us']:.1f}"
-            print(f"compressed/{r['variant']},{su},"
-                  f"comp={r['compression']:.2f}x;"
-                  f"bytes={r['storage_bytes']}")
-        for r in result["layers"]:
-            print(f"compressed/layer/{r['layer']},{r['jnp_us']:.1f},"
-                  f"pallas_us={r['pallas_us']:.1f};"
-                  f"interpret={r['pallas_interpret']}")
+        result = compressed_vs_dense.run(autotune="autotune" in sections)
+        if "compressed" in sections:
+            for r in result["variants"]:
+                su = "nan" if r["step_us"] is None else f"{r['step_us']:.1f}"
+                print(f"compressed/{r['variant']},{su},"
+                      f"comp={r['compression']:.2f}x;"
+                      f"bytes={r['storage_bytes']}")
+            for r in result["layers"]:
+                print(f"compressed/layer/{r['layer']},{r['jnp_us']:.1f},"
+                      f"pallas_us={r['pallas_us']:.1f};"
+                      f"interpret={r['pallas_interpret']}")
+        if "autotune" in sections:
+            import json as _json
+            at = result["autotune"]
+            for r in at["layers"]:
+                print(f"autotune/{r['layer']},{r['tuned_us']:.1f},"
+                      f"default_us={r['default_us']:.1f};"
+                      f"speedup={r['speedup']:.2f}x;"
+                      f"cache_hit={at['cache']['hit']}")
+            with open(compressed_vs_dense.AUTOTUNE_JSON, "w") as f:
+                _json.dump(at, f, indent=2)
+            print(f"# wrote {compressed_vs_dense.AUTOTUNE_JSON}")
     if "roofline" in sections:
         from . import roofline
         for r in roofline.rows("pod1"):

@@ -27,6 +27,16 @@ from .cost_model import (
     NetworkEstimate,
 )
 from .dse import DSEResult, run_dse, balanced_folding_baseline
+from .autotune import (
+    TuneOptions,
+    TunedConfig,
+    TunedTable,
+    autotune_lenet,
+    autotune_model,
+    dse_retune,
+    tune_key,
+    tuned_policy,
+)
 from .dispatch import (
     DISPATCH_ENV,
     DispatchConfig,

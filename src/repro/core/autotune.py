@@ -1,0 +1,619 @@
+"""DSE-coupled autotuner — closes the paper's Fig. 1 loop at the dispatch seam.
+
+The paper's workflow is an automated design-space exploration: estimate each
+layer's latency/resource under candidate configurations, pick per-layer
+configurations under a budget, then refine against the realised hardware.
+Our TPU adaptation had the estimator (:mod:`repro.core.cost_model`) and the
+search (:mod:`repro.core.dse`) but executed every layer with hard-coded
+128-tiles.  This module closes the loop, mapping Fig. 1's steps onto the
+dispatch seam:
+
+  Fig. 1 step                         here
+  ---------------------------------   ------------------------------------
+  1. per-layer configuration space    :func:`sparse_candidates` /
+     (folding / sparsity choices)     :func:`quant_candidates` — legal row
+                                      tiles (sublane multiples), bn/bk in
+                                      {128, 256, 512} where they divide,
+                                      Pallas-vs-XLA backend choice
+  2. latency/resource estimation      :func:`repro.core.cost_model.tile_roofline`
+                                      seeds the search order; infeasible
+                                      tiles (VMEM) are pruned up front
+  3. iterative refinement against     :func:`autotune_leaf` measures the
+     the realised design              top candidates (compiled timings on
+                                      TPU; the compiled XLA twin on CPU —
+                                      interpret-mode kernels are never
+                                      timed, their ranking stays roofline)
+  4. emit the chosen configuration    :class:`TunedTable`, cached on disk
+                                      keyed by (shape, dtype, backend,
+                                      pattern-schedule hash) and threaded
+                                      through ``DispatchConfig.tuned`` so
+                                      every serving surface consumes tuned
+                                      tiles at trace time — zero per-call
+                                      overhead
+
+The per-layer *bit-width* axis ({None, 8, 4}) is compile-time, not
+dispatch-time: :func:`tuned_policy` re-ranks it with
+``cost_model.network_estimate`` and is consulted by ``compile_sparse``
+behind ``policy="autotune"``.  :func:`dse_retune` is the matching hook for
+``dse.run_dse`` — step 3's bottleneck elimination can propose a retune of
+the bottleneck layer's folding config as one of its moves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.sparse_matmul.kernel import _row_tile, _sublane
+from .cost_model import (
+    HWSpec,
+    LayerSpec,
+    TPU_V5E,
+    layer_latency,
+    network_estimate,
+    tile_roofline,
+    tile_vmem_bytes,
+)
+from .folding import FoldingConfig
+from .quant import QuantizedTensor
+from .sparsity import BlockSparsePattern, CompressedLinear
+
+__all__ = [
+    "AUTOTUNE_CACHE_ENV",
+    "TunedConfig",
+    "TunedTable",
+    "TuneOptions",
+    "default_cache_path",
+    "load_table",
+    "schedule_hash",
+    "tune_key",
+    "sparse_candidates",
+    "quant_candidates",
+    "autotune_leaf",
+    "autotune_model",
+    "autotune_lenet",
+    "tuned_policy",
+    "dse_retune",
+]
+
+AUTOTUNE_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_DEFAULT_CACHE = os.path.join("results", "autotune_cache.json")
+_QUANT_TILES = (128, 256, 512)  # bn / bk choices where they divide
+_CACHE_VERSION = 1
+
+
+def default_cache_path() -> str:
+    return os.environ.get(AUTOTUNE_CACHE_ENV, _DEFAULT_CACHE)
+
+
+# ------------------------------------------------------------- tuned config
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One leaf's chosen execution configuration (all trace-time statics).
+
+    ``use_pallas=False`` means the XLA twin (no tile knobs).  ``bm=None``
+    on the Pallas path means the auto row tile (decode entry for thin M).
+    ``bn``/``bk`` apply to the dense/quant kernel only — the sparse
+    kernel's weight tiles are fixed by the compiled pattern.
+    """
+
+    use_pallas: bool
+    bm: Optional[int] = None
+    bn: Optional[int] = None
+    bk: Optional[int] = None
+    measured_us: Optional[float] = None   # timing of the winner (None = unmeasured)
+    predicted_us: Optional[float] = None  # roofline seed score
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict[str, Any]) -> "TunedConfig":
+        fields = {f.name for f in dataclasses.fields(TunedConfig)}
+        kw = {k: v for k, v in dict(d).items() if k in fields}
+        if not isinstance(kw.get("use_pallas"), bool):
+            raise ValueError(f"bad TunedConfig entry: {d!r}")
+        # range-validate the tiles too: a value-corrupted (but JSON-valid)
+        # cache must mean "retune", never a crash inside a forward pass
+        for k, legal in (("bm", range(8, 129, 8)),
+                         ("bn", _QUANT_TILES), ("bk", _QUANT_TILES)):
+            if kw.get(k) is not None:
+                kw[k] = int(kw[k])
+                if kw[k] not in legal:
+                    raise ValueError(f"illegal {k}={kw[k]} in entry: {d!r}")
+        return TunedConfig(**kw)
+
+
+class TunedTable:
+    """Key -> TunedConfig map with an on-disk JSON form.
+
+    Deliberately a plain class (identity hash/eq): it rides inside the
+    frozen :class:`repro.core.dispatch.DispatchConfig`, which must stay
+    hashable.  ``load`` never raises on a missing or corrupted cache file —
+    a bad cache means "retune", not "crash".  ``log`` records what the last
+    tuning run did per key (cache hit vs how many candidates were timed);
+    it is never serialised.
+    """
+
+    def __init__(self, entries: Optional[Dict[str, TunedConfig]] = None,
+                 path: Optional[str] = None):
+        self.entries: Dict[str, TunedConfig] = dict(entries or {})
+        self.path = path
+        self.log: List[Dict[str, Any]] = []
+
+    def get(self, key: str) -> Optional[TunedConfig]:
+        return self.entries.get(key)
+
+    def put(self, key: str, cfg: TunedConfig) -> None:
+        self.entries[key] = cfg
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.entries
+
+    def n_timings(self) -> int:
+        """Candidates actually timed by the last tuning run (0 = pure cache)."""
+        return sum(e.get("n_timed", 0) for e in self.log)
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path or default_cache_path()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        blob = {
+            "version": _CACHE_VERSION,
+            "entries": {k: v.to_json() for k, v in sorted(self.entries.items())},
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)  # atomic: a crashed save never corrupts
+        self.path = path
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "TunedTable":
+        table = cls(path=path)
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+            if blob.get("version") != _CACHE_VERSION:
+                return table
+            for k, v in blob.get("entries", {}).items():
+                table.entries[str(k)] = TunedConfig.from_json(v)
+        except (OSError, ValueError, TypeError, AttributeError):
+            # missing / truncated / garbage cache: start empty and retune
+            table.entries.clear()
+        return table
+
+
+_LOAD_MEMO: Dict[Tuple[str, float, int], TunedTable] = {}
+
+
+def load_table(path: Optional[str] = None) -> TunedTable:
+    """Load (memoised on mtime+size) — the trace-time entry ``resolve``
+    uses for ``dispatch="autotune"``; a missing cache is an empty table."""
+    path = path or default_cache_path()
+    try:
+        st = os.stat(path)
+        key = (os.path.abspath(path), st.st_mtime, st.st_size)
+    except OSError:
+        return TunedTable(path=path)
+    hit = _LOAD_MEMO.get(key)
+    if hit is None:
+        hit = TunedTable.load(path)
+        _LOAD_MEMO.clear()  # one live file version is enough
+        _LOAD_MEMO[key] = hit
+    return hit
+
+
+# --------------------------------------------------------------------- keys
+
+
+def schedule_hash(pattern: BlockSparsePattern) -> str:
+    """Deterministic digest of the static schedule (shape, block, bitmap)."""
+    h = hashlib.sha1()
+    h.update(repr((tuple(pattern.shape), tuple(pattern.block))).encode())
+    h.update(np.packbits(np.asarray(pattern.bitmap, bool)).tobytes())
+    return h.hexdigest()[:16]
+
+
+def tune_key(*, kind: str, M: int, K: int, N: int, dtype,
+             backend: Optional[str] = None,
+             pattern: Optional[BlockSparsePattern] = None) -> str:
+    """Cache key: (shape, dtype, backend, pattern-schedule hash).
+
+    ``M`` is part of the shape — tile choice at decode M=4 and prefill
+    M=2048 are different problems.  ``backend`` defaults to the current
+    ``jax.default_backend()``: CPU timings must never serve TPU lookups.
+    """
+    backend = backend or jax.default_backend()
+    sched = schedule_hash(pattern) if pattern is not None else "dense"
+    return (f"{kind}:M{int(M)}:K{int(K)}:N{int(N)}:"
+            f"{jnp.dtype(dtype).name}:{backend}:{sched}")
+
+
+# --------------------------------------------------------------- candidates
+
+
+def _bm_candidates(dtype) -> List[int]:
+    """Legal sparse row tiles: power-of-two sublane multiples up to 128."""
+    sub = _sublane(jnp.dtype(dtype))
+    out, b = [], sub
+    while b <= 128:
+        out.append(b)
+        b *= 2
+    return out
+
+
+def sparse_candidates(M: int, pattern: BlockSparsePattern,
+                      x_dtype) -> List[TunedConfig]:
+    """XLA twin + every legal Pallas row tile (None = auto/decode entry)."""
+    cands = [TunedConfig(use_pallas=False), TunedConfig(use_pallas=True, bm=None)]
+    for bm in _bm_candidates(x_dtype):
+        cands.append(TunedConfig(use_pallas=True, bm=bm))
+    return cands
+
+
+def quant_candidates(M: int, K: int, N: int, x_dtype,
+                     hw: HWSpec = TPU_V5E) -> List[TunedConfig]:
+    """XLA twin + (bm, bn, bk) grid over dividing 128-multiples, VMEM-gated."""
+    cands = [TunedConfig(use_pallas=False), TunedConfig(use_pallas=True)]
+    x_bytes = jnp.dtype(x_dtype).itemsize
+    for bm in _bm_candidates(x_dtype):
+        for bn in _QUANT_TILES:
+            if N % bn:
+                continue
+            for bk in _QUANT_TILES:
+                if K % bk:
+                    continue
+                if tile_vmem_bytes(bm, bk, bn, x_bytes=x_bytes,
+                                   w_bytes=1) > hw.vmem_bytes:
+                    continue
+                cands.append(TunedConfig(use_pallas=True, bm=bm, bn=bn, bk=bk))
+    return cands
+
+
+def _predict_us(kind: str, cand: TunedConfig, *, M: int, K: int, N: int,
+                pattern: Optional[BlockSparsePattern], weight_bits: int,
+                x_dtype, hw: HWSpec) -> float:
+    if kind == "sparse":
+        assert pattern is not None
+        bk, bn = pattern.block
+        n_blocks = pattern.n_blocks_present
+    else:
+        bk = cand.bk or (128 if K % 128 == 0 else K)
+        bn = cand.bn or (128 if N % 128 == 0 else N)
+        n_blocks = None
+    if cand.use_pallas:
+        # None = the decode entry's auto row tile — the kernel's own rule
+        bm = cand.bm if cand.bm is not None else _row_tile(M, jnp.dtype(x_dtype))
+        s = tile_roofline(M=M, K=K, N=N, bm=bm, bk=bk, bn=bn,
+                          n_blocks=n_blocks, weight_bits=weight_bits, hw=hw)
+    else:
+        # XLA twin: same roofline terms at the full-problem granularity —
+        # one "launch", no per-step schedule overhead modelled
+        s = tile_roofline(M=M, K=K, N=N, bm=min(128, max(8, M)), bk=bk,
+                          bn=bn, n_blocks=n_blocks, weight_bits=weight_bits,
+                          hw=hw, launch=False)
+    return s * 1e6
+
+
+# -------------------------------------------------------------- measurement
+
+
+def _time_fn(fn: Callable[[], Any], iters: int, warmup: int = 2) -> float:
+    """Mean wall time in microseconds of a jitted thunk (compile excluded)."""
+    r = None
+    for _ in range(max(1, warmup)):
+        r = fn()
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneOptions:
+    """Search-effort knobs.
+
+    ``max_measured`` bounds the number of candidates actually timed per
+    leaf (the roofline ordering decides which; the XLA twin and the
+    default-tile Pallas candidate are always in the measured set, so the
+    tuned pick can never lose to the default it was seeded from).
+    ``measure_interpret=True`` times interpret-mode kernels off-TPU —
+    meaningless for production (interpret is Python-speed) but it exercises
+    the full measurement loop in tests.
+    """
+
+    max_measured: int = 6
+    iters: int = 10
+    warmup: int = 2
+    measure_interpret: bool = False
+    hw: HWSpec = TPU_V5E
+
+
+def _runner(kind: str, cand: TunedConfig, x: jnp.ndarray,
+            leaf: Dict[str, jnp.ndarray],
+            pattern: Optional[BlockSparsePattern],
+            interpret: bool) -> Callable[[], Any]:
+    """Build a jitted thunk executing ``cand`` on real arrays."""
+    from ..kernels.quant_matmul.ops import quant_linear
+    from ..kernels.sparse_matmul.ops import sparse_linear
+
+    if kind == "sparse":
+        cl = CompressedLinear(pattern=pattern, blocks=leaf["w_blk"],
+                              scales=leaf.get("w_s"))
+        if cand.use_pallas:
+            fn = jax.jit(lambda xx: sparse_linear(
+                xx, cl, bm=cand.bm, interpret=interpret, use_kernel=True))
+        else:
+            fn = jax.jit(lambda xx: sparse_linear(xx, cl, use_kernel=False))
+    else:
+        K, N = leaf["w_q"].shape
+        qt = QuantizedTensor(values=leaf["w_q"],
+                             scales=leaf["w_s"].reshape(N), axis=1, bits=8)
+        if cand.use_pallas:
+            bm = cand.bm or _row_tile(x.shape[0], x.dtype)
+            bn = cand.bn or (128 if N % 128 == 0 else N)
+            bk = cand.bk or (128 if K % 128 == 0 else K)
+            fn = jax.jit(lambda xx: quant_linear(
+                xx, qt, bm=bm, bn=bn, bk=bk, interpret=interpret,
+                use_kernel=True))
+        else:
+            fn = jax.jit(lambda xx: quant_linear(xx, qt, use_kernel=False))
+    return lambda: fn(x)
+
+
+def autotune_leaf(
+    kind: str,
+    x: jnp.ndarray,
+    leaf: Dict[str, jnp.ndarray],
+    *,
+    pattern: Optional[BlockSparsePattern] = None,
+    weight_bits: int = 8,
+    options: TuneOptions = TuneOptions(),
+    table: Optional[TunedTable] = None,
+    key: Optional[str] = None,
+) -> TunedConfig:
+    """Tune one compiled leaf: roofline-seeded search, measured refinement.
+
+    ``kind`` is "sparse" (needs ``pattern``) or "quant".  A pre-existing
+    ``table`` entry for ``key`` short-circuits everything (zero timings —
+    the on-disk cache contract).  Off-TPU, interpret-mode Pallas timings
+    are never trusted: Pallas candidates keep their roofline score and the
+    measured XLA twin wins unless ``options.measure_interpret`` is set.
+    """
+    M, K_x = int(np.prod(x.shape[:-1], dtype=int)), x.shape[-1]
+    if kind == "sparse":
+        K, N = pattern.shape
+    else:
+        K, N = leaf["w_q"].shape
+    assert K_x == K, (K_x, K)
+    if key is None:
+        key = tune_key(kind=kind, M=M, K=K, N=N, dtype=x.dtype,
+                       pattern=pattern)
+    if table is not None:
+        hit = table.get(key)
+        if hit is not None:
+            table.log.append({"key": key, "cached": True, "n_timed": 0})
+            return hit
+
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = not on_tpu
+    measurable_pallas = on_tpu or options.measure_interpret
+
+    if kind == "sparse":
+        cands = sparse_candidates(M, pattern, x.dtype)
+    else:
+        cands = quant_candidates(M, K, N, x.dtype, options.hw)
+    scored = [(c, _predict_us(kind, c, M=M, K=K, N=N, pattern=pattern,
+                              weight_bits=weight_bits, x_dtype=x.dtype,
+                              hw=options.hw)) for c in cands]
+    scored.sort(key=lambda cp: cp[1])
+
+    # measured set: the XLA twin + the default-tile Pallas candidate are
+    # always timed (when timeable); the rest by roofline order.
+    def _is_default(c: TunedConfig) -> bool:
+        return c.use_pallas and c.bm is None and c.bn is None and c.bk is None
+
+    measured: List[Tuple[TunedConfig, float, float]] = []  # (cand, us, pred)
+    n_timed = 0
+    for cand, pred in scored:
+        if cand.use_pallas and not measurable_pallas:
+            continue
+        forced = (not cand.use_pallas) or _is_default(cand)
+        if not forced and n_timed >= options.max_measured:
+            continue
+        us = _time_fn(_runner(kind, cand, x, leaf, pattern, interpret),
+                      options.iters, options.warmup)
+        measured.append((cand, us, pred))
+        n_timed += 1
+
+    if measured:
+        cand, us, pred = min(measured, key=lambda t: t[1])
+        winner = dataclasses.replace(cand, measured_us=float(us),
+                                     predicted_us=float(pred))
+    else:  # nothing timeable (can't happen in practice: XLA always is)
+        cand, pred = scored[0]
+        winner = dataclasses.replace(cand, predicted_us=float(pred))
+    if table is not None:
+        table.put(key, winner)
+        table.log.append({"key": key, "cached": False, "n_timed": n_timed})
+    return winner
+
+
+# ---------------------------------------------------------- whole-model API
+
+
+def _leaf_by_path(tree: Any, path: str) -> Dict[str, Any]:
+    node = tree
+    for k in path.split("/"):
+        node = node[k]
+    return node
+
+
+def _representative(leaf: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+    """First layer of a stacked leaf — same shape/pattern for the stack."""
+    out = {}
+    for k in ("w_blk", "w_q", "w_s"):
+        if k in leaf:
+            v = leaf[k]
+            stacked = (k == "w_blk" and v.ndim == 4) or \
+                      (k in ("w_q",) and v.ndim == 3) or \
+                      (k == "w_s" and v.ndim == 2)
+            out[k] = v[0] if stacked else v
+    return out
+
+
+def autotune_model(
+    cm,
+    *,
+    M: int,
+    x_dtype=jnp.float32,
+    options: TuneOptions = TuneOptions(),
+    path: Optional[str] = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TunedTable:
+    """Tune every compiled (sparse / quant) leaf of a CompressedModel at
+    batch-rows ``M`` (decode: the engine's slot count; prefill: B*T).
+
+    Loads the on-disk table first — already-tuned keys are never re-timed
+    (``table.n_timings() == 0`` on a warm cache) — and saves the merged
+    table back.  One key serves every same-shape leaf: the schedule hash
+    is shared by construction (one pattern per (K, N) shape).
+    """
+    path = path or default_cache_path()
+    table = TunedTable.load(path)
+    table.log = []
+    rng = np.random.default_rng(seed)
+    done = set()
+    for r in cm.report:
+        if r.policy not in ("sparse", "quant"):
+            continue
+        K, N = r.shape
+        kind = r.policy
+        pattern = cm.patterns.get((K, N)) if kind == "sparse" else None
+        key = tune_key(kind=kind, M=M, K=K, N=N, dtype=x_dtype,
+                       pattern=pattern)
+        if key in done:
+            continue
+        done.add(key)
+        if cm.layers:  # LeNet-style payloads
+            leaf = _payload_leaf(cm.layers.get(r.name))
+            if leaf is None:
+                continue
+        else:
+            leaf = _representative(_leaf_by_path(cm.params, r.name))
+        x = jnp.asarray(rng.normal(size=(M, K)), x_dtype)
+        w_arr = leaf.get("w_blk", leaf.get("w_q"))
+        wbits = 8 if w_arr.dtype == jnp.int8 else 32
+        autotune_leaf(kind, x, leaf, pattern=pattern, weight_bits=wbits,
+                      options=options, table=table, key=key)
+    if save:
+        table.save(path)
+    return table
+
+
+def _payload_leaf(payload) -> Optional[Dict[str, jnp.ndarray]]:
+    if isinstance(payload, CompressedLinear):
+        leaf = {"w_blk": payload.blocks}
+        if payload.scales is not None:
+            leaf["w_s"] = payload.scales
+        return leaf
+    if isinstance(payload, QuantizedTensor):
+        return {"w_q": payload.values,
+                "w_s": payload.scales.reshape(payload.values.shape[1])}
+    return None  # masked dense: nothing to tune
+
+
+def autotune_lenet(cm, *, M: int, **kw) -> TunedTable:
+    """Alias of :func:`autotune_model` for compile_lenet results (payload
+    layers) — the report/pattern walk already handles both forms."""
+    return autotune_model(cm, M=M, **kw)
+
+
+# --------------------------------------- compile-time bit-width re-ranking
+
+
+def tuned_policy(
+    K: int,
+    N: int,
+    *,
+    rules,
+    block_density: float,
+    element_density: float,
+    sparse_eligible: bool,
+) -> Tuple[str, int]:
+    """Per-layer (policy, quant_bits) pick behind ``policy="autotune"``.
+
+    Re-ranks the candidate space {dense(16), quant(8), quant(4),
+    sparse(8), sparse(4)} by ``cost_model.network_estimate`` over a
+    decode-shaped one-layer network — the same estimator the DSE trusts,
+    instead of compile_sparse's fixed three-way latency compare.  The
+    storage floor still keeps tiny layers dense.
+    """
+    if K * N < rules.min_weight_elems:
+        return "dense", 16
+    spec = LayerSpec(
+        name="_", kind="linear",
+        flops=2.0 * K * N * rules.batch_tokens,
+        weight_elems=K * N,
+        act_bytes=4.0 * rules.batch_tokens * (K + N),
+    )
+    hw = rules.hw
+    cands: List[Tuple[str, int, FoldingConfig]] = [
+        ("dense", 16, FoldingConfig(parallelism=hw.lanes, unroll="factor",
+                                    quant_bits=16)),
+        ("quant", 8, FoldingConfig(parallelism=hw.lanes, unroll="factor",
+                                   quant_bits=8)),
+        ("quant", 4, FoldingConfig(parallelism=hw.lanes, unroll="factor",
+                                   quant_bits=4)),
+    ]
+    if sparse_eligible:
+        for bits in (8, 4):
+            cands.append(("sparse", bits, FoldingConfig(
+                parallelism=hw.lanes, unroll="sparse",
+                block_density=block_density,
+                element_density=element_density, quant_bits=bits)))
+    best = min(cands, key=lambda c: network_estimate([spec], [c[2]], hw).ii)
+    return best[0], best[1]
+
+
+# ------------------------------------------------------------ DSE coupling
+
+
+def dse_retune(spec: LayerSpec, cfg: FoldingConfig,
+               hw: HWSpec = TPU_V5E) -> Optional[FoldingConfig]:
+    """Bottleneck retune move for :func:`repro.core.dse.run_dse`.
+
+    When step 3's bottleneck elimination stalls on a layer, this proposes
+    re-ranking its quant bit-width ({16, 8, 4}) under the *current* unroll
+    level by ``layer_latency`` — the cheapest move in the space (no
+    refolding, no resource growth beyond storage).  Returns None when the
+    current config is already the best, so the DSE's move loop stays
+    monotone.
+    """
+    best_lat, best = None, None
+    for bits in (16, 8, 4):
+        trial = cfg.replace(quant_bits=bits)
+        lat = layer_latency(spec, trial, hw)["total"]
+        if best_lat is None or lat < best_lat:
+            best_lat, best = lat, trial
+    if best is None or best == cfg:
+        return None
+    return best

@@ -57,6 +57,10 @@ __all__ = [
 ]
 
 POLICIES = ("dense", "quant", "sparse")
+# accepted as an *override* value on top of POLICIES: defer the pick (and
+# the quant bit-width, {16, 8, 4}) to the autotuner's network_estimate
+# re-ranking instead of the fixed choose_policy heuristic
+AUTOTUNE_POLICY = "autotune"
 
 # Stacked transformer linear leaves the pass may rewrite.  SSM/Mamba blocks
 # reuse some of these names but apply them without a pattern table, so the
@@ -237,24 +241,33 @@ def _decide_policy(
     block: Optional[Tuple[int, int]],
     block_density: float,
     element_density: float,
-) -> str:
-    """Per-layer policy gate shared by compile_model and compile_lenet:
-    explicit override, else cost model; sparse downgrades to quant when the
-    rule block cannot tile the shape."""
-    if override is not None and override not in POLICIES:
+) -> Tuple[str, int]:
+    """Per-layer (policy, quant_bits) gate shared by compile_model and
+    compile_lenet: explicit override, else cost model; the ``"autotune"``
+    override defers both the policy and the bit-width to the tuner's
+    network_estimate re-ranking; sparse downgrades to quant when the rule
+    block cannot tile the shape."""
+    if override is not None and override not in POLICIES + (AUTOTUNE_POLICY,):
         raise ValueError(
-            f"{name}: unknown policy {override!r} — valid: {POLICIES}")
+            f"{name}: unknown policy {override!r} — valid: "
+            f"{POLICIES + (AUTOTUNE_POLICY,)}")
     if override == "sparse" and block is None:
         raise ValueError(
             f"{name}: policy 'sparse' was explicitly requested but block "
             f"{rules.block} cannot tile shape {(K, N)} — pick a dividing "
             "block or drop the override")
+    if override == AUTOTUNE_POLICY:
+        from .autotune import tuned_policy
+        return tuned_policy(
+            K, N, rules=rules, block_density=block_density,
+            element_density=element_density,
+            sparse_eligible=block is not None)
     policy = override or choose_policy(
         K, N, rules=rules, block_density=block_density,
         element_density=element_density, sparse_eligible=block is not None)
     if policy == "sparse" and block is None:  # cost-model fallback only
         policy = "quant"
-    return policy
+    return policy, rules.quant_bits
 
 
 # --------------------------------------------------------- leaf compilers
@@ -275,6 +288,7 @@ def _compress_stack(
     masks: np.ndarray,
     pattern: BlockSparsePattern,
     rules: CompileRules,
+    bits: Optional[int] = None,
 ) -> Tuple[Dict[str, jnp.ndarray], int, float]:
     """Pack an (L, K, N) stack under the forced shared pattern.
 
@@ -283,16 +297,17 @@ def _compress_stack(
     once per pattern by CompressedModel.storage_bytes, since one schedule
     may serve several same-shape leaves."""
     L = stack.shape[0]
+    bits = rules.quant_bits if bits is None else bits
     block = pattern.block
     blk_list, scale_list = [], []
     total_bytes = 0
     nnz = 0
     for wl, ml in zip(stack, masks):
         if rules.quantize_sparse:
-            qt = quantize(wl * ml, rules.quant_bits, axis=1)
+            qt = quantize(wl * ml, bits, axis=1)
             cl = compress(wl, ml, block, pattern=pattern,
                           quant_scales=np.asarray(qt.scales).reshape(-1),
-                          quant_bits=rules.quant_bits)
+                          quant_bits=bits)
             scale_list.append(np.asarray(cl.scales))
             total_bytes += cl.scales.size * cl.scales.dtype.itemsize
         else:
@@ -320,6 +335,7 @@ class _LeafPlan:
     block: Optional[Tuple[int, int]]
     bitmap: Optional[np.ndarray]  # this leaf's own block bitmap (sparse only)
     policy: str
+    bits: int                    # quant storage bit-width for this leaf
     bd: float
     ed: float
 
@@ -447,14 +463,15 @@ def compile_model(
         else:
             bd = rules.block_density
             ed = rules.block_density * rules.in_block_density
-        policy = _decide_policy(path, _override_for(path, key), K, N, rules,
-                                block=block, block_density=bd,
-                                element_density=ed)
+        policy, bits = _decide_policy(path, _override_for(path, key), K, N,
+                                      rules, block=block, block_density=bd,
+                                      element_density=ed)
         if policy == "sparse" and bitmap is None:
             bitmap = _shared_bitmap(stack, block, rules.block_density)
             bd = bitmap.sum() / bitmap.size
         plans.append(_LeafPlan(path, parent, key, stack, stacked, mask,
-                               block, bitmap, policy, float(bd), float(ed)))
+                               block, bitmap, policy, bits, float(bd),
+                               float(ed)))
 
     valid = sorted(pl.path for pl in plans)
     unused = set(masks or {}) - consumed_mask_keys
@@ -507,7 +524,7 @@ def compile_model(
                 out["w"] = jnp.asarray(w, np.asarray(leaf["w"]).dtype)
             comp_bytes = dense_bytes
         elif pl.policy == "quant":
-            w_q, w_s = _quantize_stack(masked_stack, rules.quant_bits)
+            w_q, w_s = _quantize_stack(masked_stack, pl.bits)
             if not pl.stacked:
                 w_q, w_s = w_q[0], w_s[0]
             out["w_q"], out["w_s"] = w_q, w_s
@@ -521,7 +538,7 @@ def compile_model(
                     for wl in pl.stack])
             pattern = patterns[(K, N)]
             leaves, comp_bytes, ed = _compress_stack(pl.stack, mask,
-                                                     pattern, rules)
+                                                     pattern, rules, pl.bits)
             bd = pattern.block_density
             if not pl.stacked:
                 leaves = {k: v[0] for k, v in leaves.items()}
@@ -684,9 +701,9 @@ def compile_lenet(
         else:
             bd = rules.block_density
             ed = rules.block_density * rules.in_block_density
-        policy = _decide_policy(name, (rules.policies or {}).get(name),
-                                K, N, rules, block=block,
-                                block_density=bd, element_density=ed)
+        policy, bits = _decide_policy(name, (rules.policies or {}).get(name),
+                                      K, N, rules, block=block,
+                                      block_density=bd, element_density=ed)
         dense_bytes = K * N * 4
         # as in compile_model: a user mask is honoured under every policy
         if policy in ("dense", "quant"):
@@ -697,21 +714,20 @@ def compile_lenet(
                 layers[name] = jnp.asarray(w * mask, jnp.float32)
             comp_bytes = dense_bytes
         elif policy == "quant":
-            qt = quantize(w if mask is None else w * mask,
-                          rules.quant_bits, axis=1)
+            qt = quantize(w if mask is None else w * mask, bits, axis=1)
             layers[name] = QuantizedTensor(
                 values=qt.values, scales=qt.scales.reshape(N), axis=1,
-                bits=rules.quant_bits)
+                bits=bits)
             comp_bytes = K * N + N * 4
         else:
             if mask is None:
                 bitmap = _shared_bitmap(w[None], block, rules.block_density)
                 mask = _element_mask(w, bitmap, block, rules.in_block_density)
             if rules.quantize_sparse:
-                qt = quantize(w * mask, rules.quant_bits, axis=1)
+                qt = quantize(w * mask, bits, axis=1)
                 cl = compress(w, mask, block,
                               quant_scales=np.asarray(qt.scales).reshape(-1),
-                              quant_bits=rules.quant_bits)
+                              quant_bits=bits)
             else:
                 cl = compress(w, mask, block, dtype=rules.dtype)
             layers[name] = cl

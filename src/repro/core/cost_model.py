@@ -26,6 +26,8 @@ __all__ = [
     "layer_resource",
     "network_estimate",
     "NetworkEstimate",
+    "tile_roofline",
+    "tile_vmem_bytes",
 ]
 
 
@@ -73,6 +75,62 @@ class LayerSpec:
 
 # Double-buffered 128x128 bf16 tile: the VMEM cost of one streaming lane.
 LANE_UNIT_BYTES = 2 * 128 * 128 * 2
+
+# Per-invocation overheads of the Pallas kernels, used by the autotuner to
+# *rank* tile candidates before measuring (seed order, never a final score):
+# one launch cost plus a per-grid-step cost (index-map evaluation, DMA issue).
+KERNEL_LAUNCH_S = 2e-6
+GRID_STEP_S = 5e-8
+
+
+def tile_vmem_bytes(bm: int, bk: int, bn: int, *, x_bytes: int = 4,
+                    w_bytes: int = 4) -> int:
+    """VMEM claim of one (bm, bk) x (bk, bn) kernel step: double-buffered
+    input/weight/output tiles plus the f32 accumulator.  The autotuner uses
+    this as a feasibility gate — candidates that cannot fit on chip are
+    never timed."""
+    return (2 * (bm * bk * x_bytes + bk * bn * w_bytes + bm * bn * 4)
+            + bm * bn * 4)
+
+
+def tile_roofline(
+    *,
+    M: int,
+    K: int,
+    N: int,
+    bm: int,
+    bk: int,
+    bn: int,
+    n_blocks: Optional[int] = None,
+    weight_bits: int = 32,
+    hw: HWSpec = TPU_V5E,
+    launch: bool = True,
+) -> float:
+    """Roofline latency of ONE kernel invocation under explicit tiles.
+
+    The per-layer analogue of :func:`layer_latency` at kernel granularity —
+    the autotuner seeds its measurement order with this prediction (the
+    paper's Fig. 1 estimates-before-measurement loop, mapped onto tiles).
+
+    ``n_blocks`` is the number of (bk, bn) weight tiles actually visited:
+    the static schedule length for the block-sparse kernel (present blocks
+    only — eliminated blocks cost nothing), or the full ``(K//bk)*(N//bn)``
+    for the dense/quant kernel.  ``M`` is padded up to ``bm``, so the model
+    charges thin decode batches for the rows the MXU pass wastes — this is
+    exactly the term that makes small row tiles win at decode shapes.
+    """
+    if n_blocks is None:
+        n_blocks = -(-K // bk) * (-(-N // bn))
+    m_tiles = max(1, -(-M // bm))
+    m_pad = m_tiles * bm
+    grid = m_tiles * n_blocks
+    flops = 2.0 * m_pad * n_blocks * bk * bn
+    w_bytes = n_blocks * bk * bn * weight_bits / 8.0
+    act_bytes = 4.0 * m_pad * (K + N)
+    compute = flops / hw.peak_flops(weight_bits)
+    memory = (w_bytes + act_bytes) / hw.hbm_bw
+    t = grid * GRID_STEP_S + max(compute, memory)
+    return t + (KERNEL_LAUNCH_S if launch else 0.0)
 
 
 def layer_latency(spec: LayerSpec, cfg: FoldingConfig, hw: HWSpec) -> Dict[str, float]:

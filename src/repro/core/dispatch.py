@@ -24,6 +24,9 @@ Selection policy (:func:`resolve` / :class:`DispatchConfig`):
   compiled (on-TPU) execution, shapes that cannot satisfy the hardware
   tile minima still take the jnp twin — same numerics, no Mosaic crash.
 * ``jnp``   — force the reference path (oracle, and the CPU prod path).
+* ``autotune`` — ``auto`` plus the on-disk :class:`TunedTable`
+  (:mod:`repro.core.autotune`): per-leaf measured tile/backend choices,
+  looked up at trace time — zero per-call overhead, identical numerics.
 
 The mode comes from (highest wins): an explicit ``dispatch=`` argument
 threaded through ``forward`` / ``decode_step`` / ``ServeEngine`` /
@@ -32,9 +35,9 @@ else ``auto``.  Everything here is resolved at trace time — the choice is
 baked into the jitted step, exactly like the pattern side-table.
 
 The fused bias+activation epilogue rides the same dispatch: pass
-``activation=`` and a ``"b"`` leaf and the sparse Pallas path emits
-``act(x @ W + b)`` in one launch; every other path applies the identical
-f32 formula (:data:`repro.kernels.sparse_matmul.kernel.ACTIVATIONS`).
+``activation=`` and a ``"b"`` leaf and both the sparse and quant Pallas
+paths emit ``act(x @ W + b)`` in one launch; every other path applies the
+identical f32 formula (:data:`repro.kernels.sparse_matmul.kernel.ACTIVATIONS`).
 """
 from __future__ import annotations
 
@@ -52,6 +55,7 @@ from ..kernels.sparse_matmul.kernel import (
     _check_activation,
     _pad_rows,
     _row_tile,
+    _sublane,
 )
 from ..kernels.sparse_matmul.ops import sparse_linear
 from .quant import QuantizedTensor
@@ -71,6 +75,13 @@ Params = Dict[str, Any]
 
 DISPATCH_ENV = "REPRO_FORCE_DISPATCH"
 DISPATCH_MODES = ("auto", "pallas", "jnp")
+# accepted by resolve() on top of DISPATCH_MODES: loads the tuned table
+AUTOTUNE_MODE = "autotune"
+
+# Legal user row-tile overrides: sublane multiples up to the 128-row MXU
+# pass (the f32 rule; bf16/int8 activations are rounded up to their larger
+# sublane at dispatch time — see _effective_bm).
+_LEGAL_BM = tuple(range(8, 129, 8))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,17 +90,30 @@ class DispatchConfig:
 
     ``interpret=None`` means "interpret iff the backend is not a TPU" —
     forced-pallas runs stay runnable (and differentially testable) on CPU.
+    ``tuned`` is an optional :class:`repro.core.autotune.TunedTable`
+    (identity-hashed, so this dataclass stays hashable): per-leaf measured
+    tile/backend choices consulted at trace time in ``auto`` mode.
     """
 
     mode: str = "auto"
     interpret: Optional[bool] = None
     bm: Optional[int] = None  # sparse row-tile override (None = auto)
+    tuned: Optional[Any] = None  # autotune.TunedTable
 
     def __post_init__(self):
         if self.mode not in DISPATCH_MODES:
             raise ValueError(
                 f"unknown dispatch mode {self.mode!r} — valid: "
-                f"{DISPATCH_MODES} (from {DISPATCH_ENV} or dispatch=)")
+                f"{DISPATCH_MODES} or {AUTOTUNE_MODE!r} (from {DISPATCH_ENV} "
+                "or dispatch=)")
+        if self.bm is not None and self.bm not in _LEGAL_BM:
+            # an unvalidated bm reaches Mosaic lowering on the compiled path
+            # and dies there with an opaque tiling error — fail loudly here
+            raise ValueError(
+                f"illegal sparse row tile bm={self.bm!r} — the Pallas kernel "
+                f"needs a sublane multiple no larger than the 128-row MXU "
+                f"pass; legal values: {list(_LEGAL_BM)} (bf16 activations "
+                "are rounded up to a multiple of 16, int8 to 32)")
 
     @property
     def run_interpret(self) -> bool:
@@ -102,15 +126,21 @@ def resolve(dispatch: Union[None, str, DispatchConfig] = None) -> DispatchConfig
     """Normalise a dispatch override to a DispatchConfig.
 
     ``None`` reads ``REPRO_FORCE_DISPATCH`` (default ``auto``); a string is
-    a mode name; a DispatchConfig passes through.  Unknown modes raise
-    loudly — a typo'd env var silently running the wrong path would defeat
-    the CI matrix this variable exists for.
+    a mode name; a DispatchConfig passes through.  ``"autotune"`` resolves
+    to ``auto`` with the on-disk tuned table attached (missing cache = an
+    empty table = plain auto).  Unknown modes raise loudly — a typo'd env
+    var silently running the wrong path would defeat the CI matrix this
+    variable exists for.
     """
     if isinstance(dispatch, DispatchConfig):
         return dispatch
     if dispatch is None:
         dispatch = os.environ.get(DISPATCH_ENV, "auto").strip() or "auto"
-    return DispatchConfig(mode=str(dispatch).lower())
+    mode = str(dispatch).lower()
+    if mode == AUTOTUNE_MODE:
+        from .autotune import load_table
+        return DispatchConfig(mode="auto", tuned=load_table())
+    return DispatchConfig(mode=mode)
 
 
 # ------------------------------------------------------------- eligibility
@@ -146,6 +176,37 @@ def _use_pallas(cfg: DispatchConfig, eligible: bool) -> bool:
         return cfg.run_interpret or eligible
     # auto: compiled Pallas on TPU when the shape tiles; jnp twin otherwise
     return jax.default_backend() == "tpu" and eligible
+
+
+def _tuned_entry(cfg: DispatchConfig, kind: str, M: int, K: int, N: int,
+                 x_dtype, pattern: Optional[BlockSparsePattern] = None):
+    """Trace-time tuned-table lookup (None when no table / no entry)."""
+    if cfg.tuned is None:
+        return None
+    from .autotune import tune_key
+    return cfg.tuned.get(tune_key(kind=kind, M=M, K=K, N=N, dtype=x_dtype,
+                                  pattern=pattern))
+
+
+def _pick_backend(cfg: DispatchConfig, entry, eligible: bool) -> bool:
+    """Kernel-vs-twin choice: a tuned entry decides in auto mode (still
+    hardware-gated for compiled execution); forced modes always win."""
+    if cfg.mode == "auto" and entry is not None:
+        return entry.use_pallas and (cfg.run_interpret or eligible)
+    return _use_pallas(cfg, eligible)
+
+
+def _effective_bm(bm: Optional[int], x_dtype) -> Optional[int]:
+    """Round a validated row-tile override up to the activation dtype's
+    sublane multiple (f32 8 / bf16 16 / int8 32), capped at 128."""
+    if bm is None:
+        return None
+    sub = _sublane(jnp.dtype(x_dtype))
+    return min(128, -(-int(bm) // sub) * sub)
+
+
+def _lead_rows(x: jnp.ndarray) -> int:
+    return int(np.prod(x.shape[:-1], dtype=int))
 
 
 # ----------------------------------------------------------- jnp fallbacks
@@ -222,19 +283,28 @@ def _quant_apply_jnp(p: Params, x, compute_dtype):
     return jnp.dot(x.astype(compute_dtype), w)
 
 
-def _quant_apply_pallas(p: Params, x, cfg: DispatchConfig, out_dtype):
-    """quant_matmul kernel path; tiles fall back to whole-dim blocks when
-    128 does not divide — legal only in interpret mode, which is the sole
-    way here for such shapes (_use_pallas gates compiled execution on
-    quant_kernel_eligible)."""
+def _quant_apply_pallas(p: Params, x, cfg: DispatchConfig, out_dtype,
+                        bias, activation: Optional[str], entry=None):
+    """quant_matmul kernel path with the fused bias/activation epilogue.
+
+    Tiles come from the tuned entry when present, else the defaults; tiles
+    fall back to whole-dim blocks when 128 does not divide — legal only in
+    interpret mode, which is the sole way here for such shapes (_use_pallas
+    gates compiled execution on quant_kernel_eligible)."""
     K, N = p["w_q"].shape
     lead = x.shape[:-1]
     xm = x.reshape(-1, K)
-    bm = _row_tile(xm.shape[0], xm.dtype)
+    bm = bn = bk = None
+    if entry is not None:
+        bm, bn, bk = entry.bm, entry.bn, entry.bk
+    bm = _effective_bm(bm, xm.dtype) or _row_tile(xm.shape[0], xm.dtype)
+    if bn is None or N % bn:
+        bn = 128 if N % 128 == 0 else N
+    if bk is None or K % bk:
+        bk = 128 if K % 128 == 0 else K
     xm, M = _pad_rows(xm, bm)
-    bn = 128 if N % 128 == 0 else N
-    bk = 128 if K % 128 == 0 else K
-    y = quant_matmul(xm, p["w_q"], p["w_s"].reshape(N), bm=bm, bn=bn, bk=bk,
+    y = quant_matmul(xm, p["w_q"], p["w_s"].reshape(N), bias,
+                     bm=bm, bn=bn, bk=bk, activation=activation,
                      out_dtype=out_dtype, interpret=cfg.run_interpret)[:M]
     return y.reshape(*lead, N)
 
@@ -255,8 +325,10 @@ def linear_dispatch(
 
     Dispatches on the parameter leaves (see module docstring) and on the
     resolved dispatch mode.  The bias leaf ``p["b"]`` and ``activation``
-    are fused into the sparse kernel's epilogue on the Pallas path and
-    applied by the identical f32 formula on every other path.
+    are fused into the sparse and quant kernels' epilogues on the Pallas
+    path and applied by the identical f32 formula on every other path.
+    A tuned table on the config supplies per-leaf backend and tile choices
+    (trace-time lookup — nothing here is a traced value).
     """
     _check_activation(activation)
     cfg = resolve(dispatch)
@@ -269,10 +341,13 @@ def linear_dispatch(
         return _epilogue(y, bias, activation, compute_dtype)
 
     if "w_q" in p:
-        if _use_pallas(cfg, quant_kernel_eligible(*p["w_q"].shape)):
-            y = _quant_apply_pallas(p, x, cfg, compute_dtype)
-        else:
-            y = _quant_apply_jnp(p, x, compute_dtype)
+        K, N = p["w_q"].shape
+        entry = _tuned_entry(cfg, "quant", _lead_rows(x), K, N, x.dtype)
+        if _pick_backend(cfg, entry, quant_kernel_eligible(K, N)):
+            # epilogue fused into the kernel's emit step — no extra pass
+            return _quant_apply_pallas(p, x, cfg, compute_dtype, bias,
+                                       activation, entry)
+        y = _quant_apply_jnp(p, x, compute_dtype)
         return _epilogue(y, bias, activation, compute_dtype)
 
     if "w_grp" in p:
@@ -285,13 +360,20 @@ def linear_dispatch(
                 "sparse linear needs its static pattern — pass the "
                 "compile_sparse pattern table through forward/decode_step "
                 "(patterns=cm.patterns) or a cfg-derived shared pattern")
-        if _use_pallas(cfg, sparse_kernel_eligible(pattern, p["w_blk"].dtype)):
+        K, N = pattern.shape
+        entry = _tuned_entry(cfg, "sparse", _lead_rows(x), K, N, x.dtype,
+                             pattern)
+        use_k = _pick_backend(
+            cfg, entry, sparse_kernel_eligible(pattern, p["w_blk"].dtype))
+        bm = cfg.bm if cfg.bm is not None else \
+            (entry.bm if entry is not None else None)
+        if use_k:
             cl = CompressedLinear(pattern=pattern, blocks=p["w_blk"],
                                   scales=p.get("w_s"))
             return sparse_linear(
-                x, cl, bm=cfg.bm, bias=bias, activation=activation,
-                out_dtype=compute_dtype, interpret=cfg.run_interpret,
-                use_kernel=True)
+                x, cl, bm=_effective_bm(bm, x.dtype), bias=bias,
+                activation=activation, out_dtype=compute_dtype,
+                interpret=cfg.run_interpret, use_kernel=True)
         y = _sparse_apply_jnp(p, x, pattern, compute_dtype)
         return _epilogue(y, bias, activation, compute_dtype)
 
@@ -305,24 +387,37 @@ def payload_dispatch(
     dispatch: Union[None, str, DispatchConfig] = None,
     bias: Optional[jnp.ndarray] = None,
     activation: Optional[str] = None,
+    compute_dtype=None,
 ) -> jnp.ndarray:
     """Dispatch over a compile_lenet layer payload (CompressedLinear /
     QuantizedTensor / masked-dense array) — the per-name analogue of
-    :func:`linear_dispatch` for non-pytree models."""
+    :func:`linear_dispatch` for non-pytree models.
+
+    ``compute_dtype`` defaults to ``x.dtype`` on every payload family,
+    exactly like :func:`linear_dispatch` — bf16 activations stay bf16
+    instead of being silently upcast to f32 on the quant/dense payloads
+    (which made the payload path diverge from the pytree path).
+    """
     cfg = resolve(dispatch)
     if isinstance(payload, CompressedLinear):
-        use_k = _use_pallas(cfg, sparse_kernel_eligible(payload.pattern,
-                                                        payload.blocks.dtype))
-        return sparse_linear(x, payload, bm=cfg.bm, bias=bias,
-                             activation=activation,
-                             interpret=cfg.run_interpret, use_kernel=use_k)
+        p: Params = {"w_blk": payload.blocks}
+        if payload.scales is not None:
+            p["w_s"] = payload.scales
+        if bias is not None:
+            p["b"] = bias
+        return linear_dispatch(p, x, pattern=payload.pattern, dispatch=cfg,
+                               compute_dtype=compute_dtype,
+                               activation=activation)
     if isinstance(payload, QuantizedTensor):
         K, N = payload.values.shape
         p = {"w_q": payload.values, "w_s": payload.scales.reshape(N)}
         if bias is not None:
             p["b"] = bias
         return linear_dispatch(p, x, dispatch=cfg, activation=activation,
-                               compute_dtype=jnp.float32)
+                               compute_dtype=compute_dtype)
     # masked dense payload (plain array)
-    y = jnp.dot(x.astype(jnp.float32), payload.astype(jnp.float32))
-    return _epilogue(y, bias, activation, jnp.float32)
+    p = {"w": payload}
+    if bias is not None:
+        p["b"] = bias
+    return linear_dispatch(p, x, dispatch=cfg, activation=activation,
+                           compute_dtype=compute_dtype)

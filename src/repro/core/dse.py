@@ -20,7 +20,7 @@ per-layer shard/tile selection for the LM archs (TPU adaptation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .cost_model import HWSpec, LayerSpec, NetworkEstimate, TPU_V5E, network_estimate
 from .folding import FoldingConfig
@@ -144,7 +144,14 @@ def run_dse(
     hw: HWSpec = TPU_V5E,
     resource_budget: Optional[float] = None,
     max_iters: int = 256,
+    retune: Optional[Callable[[LayerSpec, FoldingConfig, HWSpec],
+                              Optional[FoldingConfig]]] = None,
 ) -> DSEResult:
+    """Fig. 1 DSE.  ``retune`` (e.g. :func:`repro.core.autotune.dse_retune`)
+    lets step 3's bottleneck elimination propose a tuner move: given the
+    bottleneck layer's spec and current folding config it may return a
+    refined config (re-ranked bit-width / tiles), competing against
+    sparse-/factor-unfold on the same Δlatency/Δresource rule."""
     specs = list(specs)
     budget = resource_budget if resource_budget is not None else hw.hbm_bytes * 0.5
     trace: List[Dict] = []
@@ -181,6 +188,11 @@ def run_dse(
         if fu is not None:
             t = list(cfgs); t[b] = fu
             candidates.append(("factor-unfold", t))
+        if retune is not None:
+            rt = retune(spec, cfgs[b], hw)
+            if rt is not None and rt != cfgs[b]:
+                t = list(cfgs); t[b] = rt
+                candidates.append(("retune", t))
 
         best = None
         for move, trial in candidates:

@@ -7,21 +7,30 @@ direct roofline win), dequantised in-register against the per-output-channel
 scale, accumulated in f32 on the MXU.
 
 Grid: (m, n, k) with k innermost; the (bm, bn) f32 accumulator lives in
-VMEM scratch and is emitted once at k == n_k - 1.
+VMEM scratch and is emitted once at k == n_k - 1, through the same fused
+**bias + activation** epilogue as the sparse kernel (f32: ``acc*scale + b``
+then ``act``) — a whole ``act(x @ dequant(W) + b)`` layer is one launch,
+with no extra HBM round-trip for the epilogue.  The formulas are imported
+from :data:`repro.kernels.sparse_matmul.kernel.ACTIVATIONS`, so the quant
+and sparse paths stay numerically symmetric.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..sparse_matmul.kernel import ACTIVATIONS, _check_activation
+
 __all__ = ["quant_matmul"]
 
 
-def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int):
+def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
+            activation: Optional[str]):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -35,34 +44,45 @@ def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int):
     @pl.when(k == n_k - 1)
     def _emit():
         scale = s_ref[0].astype(jnp.float32)  # (bn,) per-out-channel
-        o_ref[...] = (acc_ref[...] * scale[None, :]).astype(o_ref.dtype)
+        out = acc_ref[...] * scale[None, :] + b_ref[0].astype(jnp.float32)[None, :]
+        if activation is not None:
+            out = ACTIVATIONS[activation](out)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret", "out_dtype", "activation"),
 )
 def quant_matmul(
     x: jnp.ndarray,      # (M, K) f32/bf16
     w_q: jnp.ndarray,    # (K, N) int8
     scales: jnp.ndarray, # (N,)   f32
+    bias: Optional[jnp.ndarray] = None,  # (N,) f32 or None
     *,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    activation: Optional[str] = None,
 ) -> jnp.ndarray:
+    """y = act(x @ dequant(W) + b) in one launch (epilogue fused at emit)."""
+    _check_activation(activation)
     M, K = x.shape
     K2, N = w_q.shape
     assert K == K2 and scales.shape == (N,)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
     n_k = K // bk
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
+        functools.partial(_kernel, n_k=n_k, activation=activation),
         grid=(M // bm, N // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
             pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
             pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
@@ -70,4 +90,4 @@ def quant_matmul(
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         interpret=interpret,
         name="logicsparse_quant_matmul",
-    )(x, w_q, scales.reshape(1, N))
+    )(x, w_q, scales.reshape(1, N), bias.reshape(1, N).astype(jnp.float32))

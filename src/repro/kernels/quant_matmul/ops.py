@@ -1,6 +1,8 @@
 """Public op: quantised linear over a QuantizedTensor weight."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from ...core.quant import QuantizedTensor
@@ -15,11 +17,15 @@ def quant_linear(
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
     out_dtype=jnp.float32,
     interpret: bool = False,
     use_kernel: bool = True,
 ) -> jnp.ndarray:
-    """y = x @ dequant(W). x may be (..., K)."""
+    """y = act(x @ dequant(W) + b). x may be (..., K); bias/activation ride
+    the kernel's fused emit-step epilogue (f32, same formulas as the jnp
+    oracle)."""
     K, N = qt.values.shape
     lead = x.shape[:-1]
     xm = x.reshape(-1, K)
@@ -29,10 +35,12 @@ def quant_linear(
         pad = (-M) % bm
         if pad:
             xm = jnp.pad(xm, ((0, pad), (0, 0)))
-        y = quant_matmul(xm, qt.values, scales, bm=bm, bn=bn, bk=bk,
-                         out_dtype=out_dtype, interpret=interpret)
+        y = quant_matmul(xm, qt.values, scales, bias, bm=bm, bn=bn, bk=bk,
+                         activation=activation, out_dtype=out_dtype,
+                         interpret=interpret)
         if pad:
             y = y[:M]
     else:
-        y = quant_matmul_ref(xm, qt.values, scales, out_dtype=out_dtype)
+        y = quant_matmul_ref(xm, qt.values, scales, bias=bias,
+                             activation=activation, out_dtype=out_dtype)
     return y.reshape(*lead, N)

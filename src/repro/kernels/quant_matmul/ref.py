@@ -1,9 +1,21 @@
-"""Pure-jnp oracle for the quantised matmul kernel."""
+"""Pure-jnp oracle for the quantised matmul kernel (epilogue included)."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 
+from ..sparse_matmul.kernel import ACTIVATIONS
 
-def quant_matmul_ref(x, w_q, scales, out_dtype=jnp.float32):
+
+def quant_matmul_ref(x, w_q, scales, bias=None,
+                     activation: Optional[str] = None, out_dtype=jnp.float32):
+    """y = act(x @ dequant(W) + b), all in f32 — identical formulas to the
+    kernel's fused emit step (same ACTIVATIONS table)."""
     w = w_q.astype(jnp.float32) * scales.astype(jnp.float32)[None, :]
-    return jnp.dot(x.astype(jnp.float32), w).astype(out_dtype)
+    y = jnp.dot(x.astype(jnp.float32), w)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :]
+    if activation is not None:
+        y = ACTIVATIONS[activation](y)
+    return y.astype(out_dtype)

@@ -6,7 +6,12 @@ from typing import Optional
 import jax.numpy as jnp
 
 from ...core.sparsity import CompressedLinear
-from .kernel import _pad_rows, block_sparse_matmul, block_sparse_matmul_decode
+from .kernel import (
+    _pad_rows,
+    _sublane,
+    block_sparse_matmul,
+    block_sparse_matmul_decode,
+)
 from .ref import block_sparse_matmul_ref
 
 
@@ -30,6 +35,15 @@ def sparse_linear(
     """
     pat = cl.pattern
     K, N = pat.shape
+    if bm is not None:
+        sub = _sublane(x.dtype)
+        if bm % sub or not 0 < bm <= 128:
+            # an illegal row tile dies inside Mosaic lowering with an opaque
+            # error on the compiled path — fail loudly at the op boundary
+            raise ValueError(
+                f"illegal row tile bm={bm} for x dtype {jnp.dtype(x.dtype).name}"
+                f" — legal: multiples of {sub} up to 128 "
+                f"({list(range(sub, 129, sub))})")
     if x.shape[-1] != K:
         raise ValueError(
             f"sparse_linear: activation feature dim {x.shape[-1]} does not "

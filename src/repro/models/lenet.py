@@ -73,9 +73,10 @@ def lenet_forward(
     execution path (deployment form, validates against the masked path).
 
     Compressed FC layers run through :mod:`repro.core.dispatch`: bias and
-    the inter-layer relu ride the sparse kernel's fused epilogue on the
-    Pallas path.  ``dispatch`` selects the path ("auto" | "pallas" |
-    "jnp" | DispatchConfig | None = REPRO_FORCE_DISPATCH); the legacy
+    the inter-layer relu ride the sparse/quant kernels' fused epilogues on
+    the Pallas path.  ``dispatch`` selects the path ("auto" | "pallas" |
+    "jnp" | "autotune" — auto + the on-disk TunedTable of per-leaf tile
+    choices | DispatchConfig | None = REPRO_FORCE_DISPATCH); the legacy
     ``interpret_kernels=True`` flag is shorthand for forced-Pallas
     (interpret mode off-TPU) and only applies when no explicit
     ``dispatch`` is given — an explicit argument always wins."""

@@ -41,19 +41,44 @@ class ServeEngine:
     leaves), with the static pattern table baked into the jitted step.
 
     ``dispatch`` picks the kernel path for the compiled leaves ("auto" |
-    "pallas" | "jnp" | DispatchConfig | None = REPRO_FORCE_DISPATCH env);
-    it is resolved once here and baked into the jitted ``decode_step``
-    alongside the pattern side-table, so every engine step runs the same
-    engine-free datapath as ``forward``."""
+    "pallas" | "jnp" | "autotune" | DispatchConfig | None =
+    REPRO_FORCE_DISPATCH env); it is resolved once here and baked into the
+    jitted ``decode_step`` alongside the pattern side-table, so every
+    engine step runs the same engine-free datapath as ``forward``.
+
+    ``autotune`` couples the engine to :mod:`repro.core.autotune`: ``True``
+    tunes every compiled leaf at this engine's decode shape (M =
+    ``batch_slots``) against the on-disk cache — a warm cache is a pure
+    lookup, zero re-timing — and a :class:`TunedTable` instance is used
+    as-is.  The tuned tiles are baked into the jitted step like everything
+    else (identical numerics, trace-time choice)."""
 
     def __init__(self, params, cfg: ArchConfig, *, batch_slots: int = 4,
-                 max_len: int = 256, patterns=None, dispatch=None):
+                 max_len: int = 256, patterns=None, dispatch=None,
+                 autotune=False, autotune_options=None):
+        import dataclasses as _dc
+
         from ..core.compile_sparse import CompressedModel
         from ..core.dispatch import resolve as resolve_dispatch
-        if isinstance(params, CompressedModel):
-            patterns = params.patterns if patterns is None else patterns
-            params = params.params
+        cm = params if isinstance(params, CompressedModel) else None
+        if cm is not None:
+            patterns = cm.patterns if patterns is None else patterns
+            params = cm.params
         dispatch = resolve_dispatch(dispatch)
+        if autotune is not False and autotune is not None:
+            from ..core.autotune import TunedTable, autotune_model
+            if isinstance(autotune, TunedTable):
+                table = autotune
+            else:
+                if cm is None:
+                    raise ValueError(
+                        "ServeEngine(autotune=True) needs a CompressedModel "
+                        "— raw parameter pytrees carry no compiled leaves "
+                        "to tune")
+                kw = {} if autotune_options is None else \
+                    {"options": autotune_options}
+                table = autotune_model(cm, M=batch_slots, **kw)
+            dispatch = _dc.replace(dispatch, tuned=table)
         self.params = params
         self.patterns = patterns
         self.dispatch = dispatch

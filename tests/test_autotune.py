@@ -1,0 +1,319 @@
+"""DSE-coupled autotuner: key/cache semantics, end-to-end tuned serving
+equivalence (the acceptance surface), policy="autotune" compilation, and
+the run_dse retune hook."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompileRules,
+    FoldingConfig,
+    LayerSpec,
+    TuneOptions,
+    TunedConfig,
+    TunedTable,
+    autotune_model,
+    compile_lenet,
+    compile_model,
+    decompress_model,
+    dse_retune,
+    run_dse,
+    tune_key,
+    tuned_policy,
+)
+from repro.core.autotune import load_table, schedule_hash
+from repro.core.dispatch import DispatchConfig, resolve
+from repro.core.sparsity import shared_pattern
+from repro.models.config import ArchConfig
+from repro.models.lenet import init_lenet, lenet_forward
+from repro.models.model import decode_step, forward, init_cache, init_params
+from repro.serve.engine import Request, ServeEngine
+
+CFG = ArchConfig(name="tune", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab=211,
+                 param_dtype="float32", remat=False)
+FORCE_KEYS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+FAST = TuneOptions(iters=2, warmup=1, max_measured=2)
+
+
+def _compiled(policy="sparse"):
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    rules = CompileRules(block=(32, 32), min_weight_elems=0,
+                         block_density=0.5,
+                         policies={k: policy for k in FORCE_KEYS})
+    return compile_model(params, CFG, rules=rules)
+
+
+# ------------------------------------------------------------------- keys
+
+
+def test_tune_key_deterministic_and_schedule_sensitive():
+    pat_a = shared_pattern(64, 128, (32, 32), 0.5)
+    pat_b = shared_pattern(64, 128, (32, 32), 0.25)
+    k1 = tune_key(kind="sparse", M=4, K=64, N=128, dtype=jnp.float32,
+                  backend="cpu", pattern=pat_a)
+    k2 = tune_key(kind="sparse", M=4, K=64, N=128, dtype=jnp.float32,
+                  backend="cpu", pattern=pat_a)
+    k3 = tune_key(kind="sparse", M=4, K=64, N=128, dtype=jnp.float32,
+                  backend="cpu", pattern=pat_b)
+    assert k1 == k2
+    assert k1 != k3, "different schedules must not share a cache entry"
+    assert schedule_hash(pat_a) != schedule_hash(pat_b)
+    # backend and dtype are part of the key: CPU timings never serve TPU
+    assert tune_key(kind="sparse", M=4, K=64, N=128, dtype=jnp.float32,
+                    backend="tpu", pattern=pat_a) != k1
+    assert tune_key(kind="sparse", M=4, K=64, N=128, dtype=jnp.bfloat16,
+                    backend="cpu", pattern=pat_a) != k1
+
+
+# ------------------------------------------------------------ table + cache
+
+
+def test_table_round_trip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    t = TunedTable(path=path)
+    t.put("a", TunedConfig(use_pallas=True, bm=16, measured_us=3.5))
+    t.put("b", TunedConfig(use_pallas=False, measured_us=1.0))
+    t.save()
+    loaded = TunedTable.load(path)
+    assert loaded.get("a") == TunedConfig(use_pallas=True, bm=16,
+                                          measured_us=3.5)
+    assert loaded.get("b") == TunedConfig(use_pallas=False, measured_us=1.0)
+    assert len(loaded) == 2
+
+
+@pytest.mark.parametrize("garbage", [
+    "", "not json {{{", '{"version": 99, "entries": {}}',
+    '{"version": 1, "entries": {"k": {"bm": "x"}}}',
+    '{"version": 1, "entries": "nope"}',
+    # JSON-valid but value-corrupted tiles: out-of-range bm/bn must mean
+    # retune, never a crash inside a later forward pass
+    '{"version": 1, "entries": {"k": {"use_pallas": true, "bm": -8}}}',
+    '{"version": 1, "entries": {"k": {"use_pallas": true, "bm": 7}}}',
+    '{"version": 1, "entries": {"k": {"use_pallas": true, "bn": 64}}}',
+])
+def test_corrupted_cache_is_empty_not_crash(tmp_path, garbage):
+    path = str(tmp_path / "cache.json")
+    with open(path, "w") as f:
+        f.write(garbage)
+    t = TunedTable.load(path)
+    assert len(t) == 0
+    # and the tuner retunes straight through it
+    cm = _compiled("sparse")
+    table = autotune_model(cm, M=2, options=FAST, path=path)
+    assert len(table) > 0 and table.n_timings() > 0
+
+
+def test_second_run_hits_cache_zero_retiming(tmp_path):
+    """Acceptance: same key -> same config, no re-timing on a warm cache."""
+    path = str(tmp_path / "cache.json")
+    cm = _compiled("sparse")
+    t1 = autotune_model(cm, M=2, options=FAST, path=path)
+    assert t1.n_timings() > 0
+    t2 = autotune_model(cm, M=2, options=FAST, path=path)
+    assert t2.n_timings() == 0, "warm cache must not re-measure"
+    assert t1.entries == t2.entries
+    # a different decode shape is a different problem: cold keys again
+    t3 = autotune_model(cm, M=8, options=FAST, path=path)
+    assert t3.n_timings() > 0
+
+
+def test_resolve_autotune_mode_loads_table(tmp_path, monkeypatch):
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    cfg = resolve("autotune")
+    assert cfg.mode == "auto" and cfg.tuned is not None
+    assert len(cfg.tuned) == 0  # missing cache = empty table = plain auto
+    t = TunedTable(path=path)
+    t.put("k", TunedConfig(use_pallas=False))
+    t.save()
+    cfg = resolve("autotune")
+    assert len(cfg.tuned) == 1
+    assert load_table(path).get("k") == TunedConfig(use_pallas=False)
+
+
+# ------------------------------------------------- end-to-end equivalence
+
+
+def test_tuned_decode_and_serve_identical_to_default(tmp_path, monkeypatch):
+    """Acceptance: tuned ServeEngine decode is numerically identical to
+    the default path (the table only swaps kernels/tiles, never math)."""
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)  # engine autotune=True
+    cm = _compiled("sparse")
+    slots = 2
+    table = autotune_model(cm, M=slots, options=FAST, path=path)
+    toks = jnp.asarray([[3], [7]], jnp.int32)
+    l_def, _ = decode_step(cm.params, CFG, init_cache(CFG, slots, 16), toks,
+                           patterns=cm.patterns)
+    l_tun, _ = decode_step(cm.params, CFG, init_cache(CFG, slots, 16), toks,
+                           patterns=cm.patterns,
+                           dispatch=DispatchConfig(mode="auto", tuned=table))
+    np.testing.assert_array_equal(np.asarray(l_def), np.asarray(l_tun))
+
+    def run(**kw):
+        eng = ServeEngine(cm, CFG, batch_slots=slots, max_len=32, **kw)
+        reqs = [Request(uid=i, prompt=np.asarray([2 + i, 5], np.int32),
+                        max_new_tokens=4) for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return [r.out for r in reqs]
+
+    assert run() == run(autotune=table)
+    # autotune=True tunes at the engine's slot count against the same cache
+    assert run(autotune=True, autotune_options=FAST) == run()
+
+
+def test_tuned_forward_matches_oracle(tmp_path):
+    cm = _compiled("quant")
+    table = autotune_model(cm, M=16, options=FAST,
+                           path=str(tmp_path / "c.json"))
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(0, CFG.vocab, (2, 8)))}
+    l_tun = forward(cm.params, CFG, batch, patterns=cm.patterns,
+                    dispatch=DispatchConfig(mode="auto", tuned=table))
+    l_den = forward(decompress_model(cm), CFG, batch)
+    np.testing.assert_allclose(np.asarray(l_tun), np.asarray(l_den),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tuned_lenet_forward_identical(tmp_path):
+    """Acceptance: tuned LeNet forward == default path, and the tuner
+    covers payload-style (compile_lenet) models."""
+    params = init_lenet(jax.random.PRNGKey(0))
+    cm = compile_lenet(params, rules=CompileRules(
+        block=(8, 4), min_weight_elems=0, block_density=0.5,
+        policies={"fc1": "sparse", "fc2": "quant"}))
+    table = autotune_model(cm, M=4, options=FAST,
+                           path=str(tmp_path / "c.json"))
+    assert len(table) >= 2  # fc1 sparse + fc2 quant
+    img = jnp.asarray(np.random.default_rng(1).normal(size=(4, 28, 28, 1)),
+                      jnp.float32)
+    y_def = lenet_forward(params, img, compressed=cm.layers)
+    y_tun = lenet_forward(params, img, compressed=cm.layers,
+                          dispatch=DispatchConfig(mode="auto", tuned=table))
+    np.testing.assert_array_equal(np.asarray(y_def), np.asarray(y_tun))
+
+
+def test_tuned_entry_drives_kernel_choice(monkeypatch):
+    """A tuned entry decides the backend in auto mode — pallas on the
+    tuned key, untouched auto elsewhere — and forced modes still win."""
+    import repro.core.dispatch as disp
+    from repro.models.layers import linear_apply, linear_init
+    calls = []
+    real = disp.sparse_linear
+    monkeypatch.setattr(disp, "sparse_linear",
+                        lambda *a, **k: calls.append(k.get("bm")) or
+                        real(*a, **k))
+    monkeypatch.delenv("REPRO_FORCE_DISPATCH", raising=False)
+    pat = shared_pattern(64, 128, (32, 32), 0.5)
+    p = linear_init(jax.random.PRNGKey(0), 64, 128, dtype=jnp.float32,
+                    mode="sparse", pattern=pat)
+    x = jnp.ones((4, 64), jnp.float32)
+    key = tune_key(kind="sparse", M=4, K=64, N=128, dtype=jnp.float32,
+                   pattern=pat)
+    table = TunedTable()
+    table.put(key, TunedConfig(use_pallas=True, bm=16))
+    tuned = DispatchConfig(mode="auto", tuned=table)
+    linear_apply(p, x, pattern=pat, dispatch=tuned)
+    assert calls == [16], "tuned entry must select the kernel + its bm"
+    calls.clear()
+    linear_apply(p, x, pattern=pat, dispatch="auto")  # no table: CPU auto
+    assert calls == []
+    linear_apply(p, x, pattern=pat,
+                 dispatch=DispatchConfig(mode="jnp", tuned=table))
+    assert calls == [], "forced jnp beats the tuned entry"
+
+
+# ----------------------------------------------------- policy="autotune"
+
+
+def test_policy_autotune_compiles_and_matches_oracle():
+    cm = _compiled("autotune")
+    pols = {r.policy for r in cm.report if r.name != "head"}
+    assert pols <= {"dense", "quant", "sparse"} and pols
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(2).integers(0, CFG.vocab, (2, 8)))}
+    l_c = forward(cm.params, CFG, batch, patterns=cm.patterns)
+    l_d = forward(decompress_model(cm), CFG, batch)
+    np.testing.assert_allclose(np.asarray(l_c), np.asarray(l_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tuned_policy_reranks_bits():
+    rules = CompileRules(batch_tokens=1, min_weight_elems=0)
+    pol, bits = tuned_policy(512, 512, rules=rules, block_density=0.25,
+                             element_density=0.1, sparse_eligible=True)
+    assert pol in ("dense", "quant", "sparse") and bits in (16, 8, 4)
+    # decode-shaped large layers are weight-streaming bound: never dense-16
+    assert (pol, bits) != ("dense", 16)
+    # storage floor: tiny layers stay dense
+    assert tuned_policy(8, 8, rules=CompileRules(min_weight_elems=4096),
+                        block_density=1.0, element_density=1.0,
+                        sparse_eligible=True) == ("dense", 16)
+
+
+def test_policy_autotune_lenet():
+    params = init_lenet(jax.random.PRNGKey(0))
+    cm = compile_lenet(params, rules=CompileRules(
+        block=(8, 4), min_weight_elems=0, block_density=0.5,
+        policies={n: "autotune" for n in ("fc1", "fc2", "fc3")}))
+    assert all(r.policy in ("dense", "quant", "sparse") for r in cm.report)
+    img = jnp.asarray(np.random.default_rng(3).normal(size=(2, 28, 28, 1)),
+                      jnp.float32)
+    y_c = lenet_forward(params, img, compressed=cm.layers)
+    dense = decompress_model(cm)
+    y_d = lenet_forward(dense, img)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_d),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------ DSE coupling
+
+
+def _specs():
+    return [
+        LayerSpec("a", "linear", flops=2e8, weight_elems=4_000_000,
+                  act_bytes=1e5, max_block_density=0.4,
+                  max_element_density=0.1),
+        LayerSpec("b", "linear", flops=8e8, weight_elems=8_000_000,
+                  act_bytes=2e5, max_block_density=0.5,
+                  max_element_density=0.15),
+    ]
+
+
+def test_dse_retune_proposes_lower_bits():
+    spec = _specs()[0]
+    cfg = FoldingConfig(parallelism=64, unroll="factor", quant_bits=16)
+    out = dse_retune(spec, cfg)
+    assert out is not None and out.quant_bits < 16
+    # already-optimal config: no move proposed (keeps run_dse monotone)
+    assert dse_retune(spec, out) is None
+
+
+def test_run_dse_with_retune_hook_never_worse():
+    specs = _specs()
+    base = run_dse(specs, resource_budget=32e6)
+    tuned = run_dse(specs, resource_budget=32e6, retune=dse_retune)
+    assert tuned.estimate.ii <= base.estimate.ii + 1e-18
+    assert tuned.estimate.resource <= 32e6
+    iis = [t["ii"] for t in tuned.trace]
+    assert all(b <= a + 1e-18 for a, b in zip(iis, iis[1:]))
+
+
+def test_run_dse_retune_move_recorded_in_trace():
+    # start all layers at 16-bit so a bit-width retune is always available
+    specs = _specs()
+    res = run_dse(specs, resource_budget=32e6, retune=dse_retune)
+    # the hook competes with unfold moves; it must at least have been
+    # consulted without corrupting the result (trace stays well-formed)
+    assert all(set(t) >= {"iter", "move", "ii", "resource"}
+               for t in res.trace)
+    retunes = [t for t in res.trace if t["move"].startswith("retune")]
+    for t in retunes:
+        assert ":" in t["move"]

@@ -210,16 +210,20 @@ def test_serve_engine_equivalence_sparse():
 
 def test_lenet_explicit_dispatch_beats_legacy_flag(monkeypatch):
     """lenet_forward(dispatch='jnp', interpret_kernels=True): the explicit
-    argument wins — the legacy flag must not force the kernel path."""
+    argument wins — the legacy flag must not force the kernel path.  The
+    payload route is unified through linear_dispatch, so 'jnp' runs the
+    static-gather twin (_sparse_apply_jnp), never the kernel op."""
     import repro.core.dispatch as disp
     from repro.core import CompileRules as CR, compile_lenet
     from repro.models.lenet import init_lenet, lenet_forward
-    kernel_uses = []
-    real = disp.sparse_linear
-    monkeypatch.setattr(
-        disp, "sparse_linear",
-        lambda *a, **k: kernel_uses.append(k.get("use_kernel")) or
-        real(*a, **k))
+    kernel_calls, twin_calls = [], []
+    real_k, real_t = disp.sparse_linear, disp._sparse_apply_jnp
+    monkeypatch.setattr(disp, "sparse_linear",
+                        lambda *a, **k: kernel_calls.append(1) or
+                        real_k(*a, **k))
+    monkeypatch.setattr(disp, "_sparse_apply_jnp",
+                        lambda *a, **k: twin_calls.append(1) or
+                        real_t(*a, **k))
     params = init_lenet(jax.random.PRNGKey(0))
     cm = compile_lenet(params, rules=CR(block=(8, 4), min_weight_elems=0,
                                         block_density=0.5,
@@ -229,10 +233,10 @@ def test_lenet_explicit_dispatch_beats_legacy_flag(monkeypatch):
                       jnp.float32)
     lenet_forward(params, img, compressed=cm.layers, dispatch="jnp",
                   interpret_kernels=True)
-    assert kernel_uses and not any(kernel_uses)
-    kernel_uses.clear()
+    assert twin_calls and not kernel_calls
+    twin_calls.clear()
     lenet_forward(params, img, compressed=cm.layers, interpret_kernels=True)
-    assert kernel_uses and all(kernel_uses)
+    assert kernel_calls and not twin_calls
 
 
 def test_decode_thin_batch_uses_decode_entry(monkeypatch):
@@ -248,3 +252,108 @@ def test_decode_thin_batch_uses_decode_entry(monkeypatch):
     decode_step(cm.params, CFG, init_cache(CFG, 2, 16), toks,
                 patterns=cm.patterns, dispatch="pallas")
     assert calls, "thin-M sparse dispatch skipped the decode entry point"
+
+
+# ------------------------------------------------------- bm override rules
+
+
+@pytest.mark.parametrize("bad", [7, 100, 130, 0, -8, 12])
+def test_bm_override_validation_rejects_illegal(bad):
+    """Regression: an unvalidated bm used to flow straight into the kernel
+    and die in Mosaic lowering on the compiled path — now a loud ValueError
+    at config construction, listing the legal choices."""
+    with pytest.raises(ValueError, match="row tile"):
+        DispatchConfig(bm=bad)
+
+
+@pytest.mark.parametrize("ok", [8, 16, 24, 64, 128])
+def test_bm_override_validation_accepts_legal(ok):
+    assert DispatchConfig(bm=ok).bm == ok
+
+
+def test_bm_override_rounded_to_dtype_sublane(monkeypatch):
+    """A legal f32 bm (multiple of 8) used with bf16 activations must be
+    rounded up to the bf16 sublane (16) before reaching the kernel."""
+    import repro.core.dispatch as disp
+    seen = []
+    real = disp.sparse_linear
+    monkeypatch.setattr(disp, "sparse_linear",
+                        lambda *a, **k: seen.append(k.get("bm")) or
+                        real(*a, **k))
+    p, pat = _sparse_leaf()
+    p = {k: (v.astype(jnp.bfloat16) if k == "w_blk" else v)
+         for k, v in p.items()}
+    x16 = jnp.ones((4, 64), jnp.bfloat16)
+    linear_apply(p, x16, pattern=pat,
+                 dispatch=DispatchConfig(mode="pallas", bm=8))
+    assert seen == [16], seen
+    seen.clear()
+    x32 = jnp.ones((4, 64), jnp.float32)
+    linear_apply({k: v.astype(jnp.float32) if k == "w_blk" else v
+                  for k, v in p.items()}, x32, pattern=pat,
+                 dispatch=DispatchConfig(mode="pallas", bm=8))
+    assert seen == [8], seen
+
+
+# ------------------------------------------- payload compute_dtype parity
+
+
+def test_payload_quant_compute_dtype_matches_pytree(monkeypatch):
+    """Regression: payload_dispatch hard-coded compute_dtype=f32 for the
+    QuantizedTensor path while linear_dispatch defaults to x.dtype — bf16
+    inputs silently upcast and diverged from the pytree path."""
+    from repro.core.dispatch import payload_dispatch
+    from repro.core.quant import QuantizedTensor, quantize
+    rng = np.random.default_rng(5)
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    q = quantize(w, 8, axis=1)
+    qt = QuantizedTensor(values=q.values, scales=q.scales.reshape(64),
+                         axis=1, bits=8)
+    p = {"w_q": q.values, "w_s": q.scales.reshape(64)}
+    b = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    for dtype in (jnp.bfloat16, jnp.float32):
+        x = jnp.asarray(rng.normal(size=(4, 64)), dtype)
+        for mode in ("jnp", "pallas"):
+            yp = payload_dispatch(qt, x, dispatch=mode, bias=b,
+                                  activation="relu")
+            yl = linear_apply(dict(p, b=b), x, dispatch=mode,
+                              activation="relu")
+            assert yp.dtype == yl.dtype == dtype
+            assert np.array_equal(np.asarray(yp, np.float32),
+                                  np.asarray(yl, np.float32)), (dtype, mode)
+
+
+def test_payload_masked_dense_follows_x_dtype():
+    from repro.core.dispatch import payload_dispatch
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                    jnp.float32)
+    x = jnp.ones((2, 8), jnp.bfloat16)
+    assert payload_dispatch(w, x).dtype == jnp.bfloat16
+    assert payload_dispatch(w, x.astype(jnp.float32)).dtype == jnp.float32
+
+
+# ----------------------------------------------------- quant fused epilogue
+
+
+def test_quant_pallas_branch_fuses_epilogue(monkeypatch):
+    """linear_dispatch's quant Pallas branch must route bias/activation
+    into the kernel's emit step (one launch), matching the jnp twin."""
+    import repro.core.dispatch as disp
+    seen = []
+    real = disp.quant_matmul
+    monkeypatch.setattr(
+        disp, "quant_matmul",
+        lambda *a, **k: seen.append((a[3] is not None, k.get("activation")))
+        or real(*a, **k))
+    rng = np.random.default_rng(9)
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    from repro.core.quant import quantize
+    q = quantize(w, 8, axis=1)
+    p = {"w_q": q.values, "w_s": q.scales.reshape(64),
+         "b": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    y_pal = linear_apply(p, x, dispatch="pallas", activation="relu")
+    assert seen == [(True, "relu")], seen
+    y_jnp = linear_apply(p, x, dispatch="jnp", activation="relu")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
+                               rtol=1e-4, atol=1e-3)

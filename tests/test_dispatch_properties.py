@@ -183,3 +183,91 @@ def test_fuzz_differential(M, nR, nC, block, density, in_density, quant,
     _check_case(M=M, nR=nR, nC=nC, bk=bk, bn=bn, density=density,
                 in_density=in_density, quant=quant, bias=bias,
                 activation=activation, seed=seed)
+
+
+# ------------------------------------------------- tuned-tile properties
+
+
+def _tuned_cell(density, bk, bn, quant, seed):
+    """One (density x block x dtype) leaf + its pattern and input."""
+    rng = np.random.default_rng(seed)
+    nR, nC = 3, 2
+    K, N = nR * bk, nC * bn
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    bitmap = rng.random((nR, nC)) < density
+    mask = np.kron(bitmap, np.ones((bk, bn), bool))
+    if quant:
+        q = quantize(w, 8, axis=1)
+        cl = compress(w, mask, (bk, bn),
+                      quant_scales=np.asarray(q.scales).reshape(-1),
+                      quant_bits=8)
+    else:
+        cl = compress(w, mask, (bk, bn), dtype=jnp.float32)
+    p = {"w_blk": cl.blocks}
+    if cl.scales is not None:
+        p["w_s"] = cl.scales
+    x = jnp.asarray(rng.normal(size=(6, K)), jnp.float32)
+    return p, cl.pattern, x
+
+
+@pytest.mark.parametrize("density", [0.0, 0.4, 1.0])
+@pytest.mark.parametrize("bk,bn", [(8, 16), (16, 8)])
+@pytest.mark.parametrize("quant", [False, True])
+def test_tuned_tiles_bitwise_identical_to_default(density, bk, bn, quant):
+    """Property (acceptance): for every (density x block shape x dtype)
+    cell, dispatching through a TunedTable — any legal row tile, either
+    backend — is BITWISE identical to the default-tile output.  Row tiling
+    only splits the M axis; each output element's accumulation order is
+    fixed by the static schedule, so tuning must never move a single bit."""
+    from repro.core.autotune import TunedConfig, TunedTable, tune_key
+    from repro.core.dispatch import DispatchConfig, linear_dispatch
+
+    p, pat, x = _tuned_cell(density, bk, bn, quant, seed=bk + bn + quant)
+    key = tune_key(kind="sparse", M=x.shape[0], K=pat.shape[0],
+                   N=pat.shape[1], dtype=x.dtype, pattern=pat)
+
+    # default-tile references, one per backend
+    y_jnp = linear_dispatch(p, x, pattern=pat, dispatch="jnp")
+    y_pal = linear_dispatch(p, x, pattern=pat,
+                            dispatch=DispatchConfig(mode="pallas"))
+
+    for cand in (TunedConfig(use_pallas=False),
+                 TunedConfig(use_pallas=True, bm=None),
+                 TunedConfig(use_pallas=True, bm=8),
+                 TunedConfig(use_pallas=True, bm=32),
+                 TunedConfig(use_pallas=True, bm=128)):
+        table = TunedTable()
+        table.put(key, cand)
+        y = linear_dispatch(p, x, pattern=pat,
+                            dispatch=DispatchConfig(mode="auto",
+                                                    tuned=table))
+        ref = y_pal if cand.use_pallas else y_jnp
+        np.testing.assert_array_equal(
+            np.asarray(y), np.asarray(ref),
+            err_msg=f"tuned {cand} diverged from the default tile")
+
+
+def test_tuned_cache_round_trips_deterministically(tmp_path):
+    """Property (acceptance): same key -> same config across a disk round
+    trip; a corrupted cache means retune, never a crash or a wrong entry."""
+    from repro.core.autotune import (
+        TuneOptions, TunedTable, autotune_model)
+
+    params = init_lenet(jax.random.PRNGKey(0))
+    cm = compile_lenet(params, rules=CompileRules(
+        block=(8, 4), min_weight_elems=0, block_density=0.5,
+        policies={"fc1": "sparse", "fc2": "quant"}))
+    path = str(tmp_path / "cache.json")
+    opts = TuneOptions(iters=2, warmup=1, max_measured=2)
+    t1 = autotune_model(cm, M=4, options=opts, path=path)
+    assert t1.n_timings() > 0
+    # round trip: identical entries, and a warm run never re-times
+    t2 = autotune_model(cm, M=4, options=opts, path=path)
+    assert t2.entries == t1.entries and t2.n_timings() == 0
+    # corruption: retune, not crash — and the cache heals on disk
+    with open(path, "w") as f:
+        f.write("{corrupted!")
+    t3 = autotune_model(cm, M=4, options=opts, path=path)
+    assert set(t3.entries) == set(t1.entries) and t3.n_timings() > 0
+    t4 = autotune_model(cm, M=4, options=opts, path=path)
+    assert t4.n_timings() == 0

@@ -303,3 +303,38 @@ def test_ops_wrappers_pad_and_reshape():
     y2ref = quant_linear(x2, q, use_kernel=False)
     np.testing.assert_allclose(np.asarray(y2), np.asarray(y2ref),
                                rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("activation", [None, "relu", "silu", "gelu"])
+@pytest.mark.parametrize("bias", [False, True])
+def test_quant_matmul_fused_epilogue(activation, bias):
+    """quant_matmul's emit-step epilogue (acc*scale + b, act) must match
+    the jnp oracle — the quant path no longer needs an f32 epilogue pass
+    outside the kernel (numerics symmetry with the sparse kernel)."""
+    rng = np.random.default_rng(31)
+    K, N, M = 256, 128, 64
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    q = quantize(w, 8, axis=1)
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(N,)), jnp.float32) if bias else None
+    y = quant_matmul(x, q.values, q.scales.reshape(N), b, bm=64, bn=128,
+                     bk=128, activation=activation, interpret=True)
+    yref = quant_matmul_ref(x, q.values, q.scales.reshape(N), bias=b,
+                            activation=activation)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=2e-3, atol=2e-2)
+
+
+def test_quant_linear_epilogue_and_padding():
+    """ops wrapper: non-multiple M + fused bias/relu through the kernel."""
+    rng = np.random.default_rng(32)
+    w = rng.normal(size=(128, 128)).astype(np.float32)
+    q = quantize(w, 8, axis=1)
+    x = jnp.asarray(rng.normal(size=(5, 128)), jnp.float32)  # pads to bm
+    b = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    y = quant_linear(x, q, bias=b, activation="relu", interpret=True,
+                     use_kernel=True)
+    yref = quant_linear(x, q, bias=b, activation="relu", use_kernel=False)
+    assert y.shape == (5, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-3)

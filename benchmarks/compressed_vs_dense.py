@@ -246,19 +246,26 @@ def run(dispatch: str = "auto", autotune: bool = True) -> Dict:
 
     layer_rows = _layer_kernel_vs_gather(variants["block_sparse"], dispatch)
 
-    # LeNet Table-1 workload: storage reduction at 8-bit / 25% blocks
+    # LeNet Table-1 workload: FC-only storage reduction at 8-bit / 25%
+    # blocks.  Convs are pinned dense so this row stays the FC-only
+    # reference the whole-model benchmark (table1_lenet ->
+    # BENCH_lenet_table1.json) must strictly beat; the report covers the
+    # whole model now, so the dense conv rows sit in the denominator.
     lp = init_lenet(jax.random.PRNGKey(1))
     blocks = {"fc1": (8, 4), "fc2": (8, 4), "fc3": (4, 2)}
     masks = {n: block_aware_prune(np.asarray(lp[n + "_w"]), blocks[n],
                                   block_density=0.25, in_block_density=0.5)
              for n in blocks}
-    cm = compile_lenet(lp, masks, blocks=blocks)
+    cm = compile_lenet(lp, masks, blocks=blocks,
+                       rules=CompileRules(block=(8, 4), min_weight_elems=512,
+                                          policies={"conv1": "dense",
+                                                    "conv2": "dense"}))
     rows.append({
         "variant": "lenet_fc_8bit_25pct",
         "step_us": None,  # storage-only row (no decode step); null in JSON
         "storage_bytes": cm.storage_bytes,
         "compression": cm.compression,
-        "policies": ",".join(r.policy for r in cm.report),
+        "policies": ",".join(f"{r.name}={r.policy}" for r in cm.report),
     })
 
     at = _autotune_section(variants["block_sparse"]) if autotune else None

@@ -26,7 +26,12 @@ from .cost_model import (
     network_estimate,
     NetworkEstimate,
 )
-from .dse import DSEResult, run_dse, balanced_folding_baseline
+from .dse import (
+    DSEResult,
+    apply_realised_densities,
+    balanced_folding_baseline,
+    run_dse,
+)
 from .autotune import (
     TuneOptions,
     TunedConfig,
@@ -39,8 +44,12 @@ from .autotune import (
 )
 from .dispatch import (
     DISPATCH_ENV,
+    ConvPayload,
     DispatchConfig,
+    conv_dispatch,
+    conv_im2col,
     linear_dispatch,
+    payload_dispatch,
     quant_kernel_eligible,
     resolve as resolve_dispatch,
     sparse_kernel_eligible,
@@ -52,5 +61,8 @@ from .compile_sparse import (
     choose_policy,
     compile_lenet,
     compile_model,
+    conv_weight_matrix,
+    conv_weight_unmatrix,
     decompress_model,
+    realised_densities,
 )

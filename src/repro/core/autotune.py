@@ -56,6 +56,7 @@ from .cost_model import (
     HWSpec,
     LayerSpec,
     TPU_V5E,
+    decode_linear_spec,
     layer_latency,
     network_estimate,
     tile_roofline,
@@ -231,17 +232,25 @@ def schedule_hash(pattern: BlockSparsePattern) -> str:
 
 def tune_key(*, kind: str, M: int, K: int, N: int, dtype,
              backend: Optional[str] = None,
-             pattern: Optional[BlockSparsePattern] = None) -> str:
-    """Cache key: (shape, dtype, backend, pattern-schedule hash).
+             pattern: Optional[BlockSparsePattern] = None,
+             leaf: Optional[str] = None) -> str:
+    """Cache key: (kind, shape, dtype, backend, pattern-schedule hash).
 
     ``M`` is part of the shape — tile choice at decode M=4 and prefill
     M=2048 are different problems.  ``backend`` defaults to the current
     ``jax.default_backend()``: CPU timings must never serve TPU lookups.
+    ``kind`` carries the op family too: an im2col'd conv tunes under
+    ``conv_sparse`` / ``conv_quant``, so it never collides with a linear
+    leaf at the same (M, K, N).  ``leaf`` appends a per-leaf suffix — the
+    override path for two leaves that share the whole base key (same
+    shape, dtype, backend AND schedule) but should be tuned apart; the
+    dispatch lookup consults the per-leaf key first, then the shared one.
     """
     backend = backend or jax.default_backend()
     sched = schedule_hash(pattern) if pattern is not None else "dense"
-    return (f"{kind}:M{int(M)}:K{int(K)}:N{int(N)}:"
+    base = (f"{kind}:M{int(M)}:K{int(K)}:N{int(N)}:"
             f"{jnp.dtype(dtype).name}:{backend}:{sched}")
+    return base if leaf is None else f"{base}:leaf={leaf}"
 
 
 # --------------------------------------------------------------- candidates
@@ -391,14 +400,20 @@ def autotune_leaf(
 ) -> TunedConfig:
     """Tune one compiled leaf: roofline-seeded search, measured refinement.
 
-    ``kind`` is "sparse" (needs ``pattern``) or "quant".  A pre-existing
+    ``kind`` is "sparse" (needs ``pattern``) or "quant", optionally
+    prefixed ``conv_`` for an im2col'd conv leaf — the search space and
+    runner are those of the underlying matmul (a conv IS that matmul at
+    M = B*H_out*W_out), only the cache key differs.  A pre-existing
     ``table`` entry for ``key`` short-circuits everything (zero timings —
     the on-disk cache contract).  Off-TPU, interpret-mode Pallas timings
     are never trusted: Pallas candidates keep their roofline score and the
     measured XLA twin wins unless ``options.measure_interpret`` is set.
     """
+    family = kind[len("conv_"):] if kind.startswith("conv_") else kind
+    if family not in ("sparse", "quant"):
+        raise ValueError(f"unknown tune kind {kind!r}")
     M, K_x = int(np.prod(x.shape[:-1], dtype=int)), x.shape[-1]
-    if kind == "sparse":
+    if family == "sparse":
         K, N = pattern.shape
     else:
         K, N = leaf["w_q"].shape
@@ -416,11 +431,11 @@ def autotune_leaf(
     interpret = not on_tpu
     measurable_pallas = on_tpu or options.measure_interpret
 
-    if kind == "sparse":
+    if family == "sparse":
         cands = sparse_candidates(M, pattern, x.dtype)
     else:
         cands = quant_candidates(M, K, N, x.dtype, options.hw)
-    scored = [(c, _predict_us(kind, c, M=M, K=K, N=N, pattern=pattern,
+    scored = [(c, _predict_us(family, c, M=M, K=K, N=N, pattern=pattern,
                               weight_bits=weight_bits, x_dtype=x.dtype,
                               hw=options.hw)) for c in cands]
     scored.sort(key=lambda cp: cp[1])
@@ -438,7 +453,7 @@ def autotune_leaf(
         forced = (not cand.use_pallas) or _is_default(cand)
         if not forced and n_timed >= options.max_measured:
             continue
-        us = _time_fn(_runner(kind, cand, x, leaf, pattern, interpret),
+        us = _time_fn(_runner(family, cand, x, leaf, pattern, interpret),
                       options.iters, options.warmup)
         measured.append((cand, us, pred))
         n_timed += 1
@@ -488,6 +503,7 @@ def autotune_model(
     path: Optional[str] = None,
     save: bool = True,
     seed: int = 0,
+    per_leaf: bool = False,
 ) -> TunedTable:
     """Tune every compiled (sparse / quant) leaf of a CompressedModel at
     batch-rows ``M`` (decode: the engine's slot count; prefill: B*T).
@@ -495,7 +511,16 @@ def autotune_model(
     Loads the on-disk table first — already-tuned keys are never re-timed
     (``table.n_timings() == 0`` on a warm cache) — and saves the merged
     table back.  One key serves every same-shape leaf: the schedule hash
-    is shared by construction (one pattern per (K, N) shape).
+    is shared by construction (one pattern per (K, N) shape).  Conv
+    leaves tune as their im2col matmul — ``conv_sparse`` / ``conv_quant``
+    kinds at ``M * H_out*W_out`` rows (``LayerReport.m_scale``) — so their
+    entries never collide with linears at the same shape.
+
+    ``per_leaf=True`` writes every entry under its per-leaf key
+    (``...:leaf=<name>``) instead of the shared shape key: the override
+    path for models whose same-shape leaves should be tuned apart.  The
+    dispatch lookup prefers a per-leaf entry when the caller names its
+    leaf, falling back to the shared one.
     """
     path = path or default_cache_path()
     table = TunedTable.load(path)
@@ -506,10 +531,11 @@ def autotune_model(
         if r.policy not in ("sparse", "quant"):
             continue
         K, N = r.shape
-        kind = r.policy
-        pattern = cm.patterns.get((K, N)) if kind == "sparse" else None
-        key = tune_key(kind=kind, M=M, K=K, N=N, dtype=x_dtype,
-                       pattern=pattern)
+        kind = ("conv_" if r.kind == "conv" else "") + r.policy
+        M_leaf = M * max(1, int(r.m_scale))
+        pattern = cm.patterns.get((K, N)) if r.policy == "sparse" else None
+        key = tune_key(kind=kind, M=M_leaf, K=K, N=N, dtype=x_dtype,
+                       pattern=pattern, leaf=r.name if per_leaf else None)
         if key in done:
             continue
         done.add(key)
@@ -519,7 +545,7 @@ def autotune_model(
                 continue
         else:
             leaf = _representative(_leaf_by_path(cm.params, r.name))
-        x = jnp.asarray(rng.normal(size=(M, K)), x_dtype)
+        x = jnp.asarray(rng.normal(size=(M_leaf, K)), x_dtype)
         w_arr = leaf.get("w_blk", leaf.get("w_q"))
         wbits = 8 if w_arr.dtype == jnp.int8 else 32
         autotune_leaf(kind, x, leaf, pattern=pattern, weight_bits=wbits,
@@ -530,6 +556,10 @@ def autotune_model(
 
 
 def _payload_leaf(payload) -> Optional[Dict[str, jnp.ndarray]]:
+    from .dispatch import ConvPayload
+
+    if isinstance(payload, ConvPayload):  # conv leaf: tune its im2col matmul
+        payload = payload.payload
     if isinstance(payload, CompressedLinear):
         leaf = {"w_blk": payload.blocks}
         if payload.scales is not None:
@@ -558,6 +588,7 @@ def tuned_policy(
     block_density: float,
     element_density: float,
     sparse_eligible: bool,
+    spec: Optional[LayerSpec] = None,
 ) -> Tuple[str, int]:
     """Per-layer (policy, quant_bits) pick behind ``policy="autotune"``.
 
@@ -565,16 +596,14 @@ def tuned_policy(
     sparse(8), sparse(4)} by ``cost_model.network_estimate`` over a
     decode-shaped one-layer network — the same estimator the DSE trusts,
     instead of compile_sparse's fixed three-way latency compare.  The
-    storage floor still keeps tiny layers dense.
+    storage floor still keeps tiny layers dense.  ``spec`` overrides the
+    default linear-shaped LayerSpec (conv leaves pass their own: MACs
+    scaled by output H·W, real activation traffic).
     """
     if K * N < rules.min_weight_elems:
         return "dense", 16
-    spec = LayerSpec(
-        name="_", kind="linear",
-        flops=2.0 * K * N * rules.batch_tokens,
-        weight_elems=K * N,
-        act_bytes=4.0 * rules.batch_tokens * (K + N),
-    )
+    if spec is None:
+        spec = decode_linear_spec(K, N, rules.batch_tokens)
     hw = rules.hw
     cands: List[Tuple[str, int, FoldingConfig]] = [
         ("dense", 16, FoldingConfig(parallelism=hw.lanes, unroll="factor",

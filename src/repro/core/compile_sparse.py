@@ -3,8 +3,8 @@
 ``compile_model`` (transformer pytrees) and ``compile_lenet`` (the paper's
 Table-1 workload) take trained params + per-layer masks (from
 :func:`repro.core.pruning.block_aware_prune`) + quant scales (from
-:mod:`repro.core.quant`) and lower every eligible (K, N) linear onto the
-engine-free datapath:
+:mod:`repro.core.quant`) and lower every eligible layer — linear *and*
+convolution — onto the engine-free datapath:
 
 * ``dense``  — weight kept as-is (small / awkward shapes);
 * ``quant``  — int8 storage with per-output-channel scales, executed by the
@@ -16,6 +16,17 @@ engine-free datapath:
 The per-layer policy is chosen by a roofline heuristic over
 :mod:`repro.core.cost_model` (decode-shaped by default: weight streaming
 dominates, so eliminated blocks pay off immediately).
+
+Convolutions are *the same thing*: a ``(kh, kw, cin, cout)`` conv weight
+is reshaped (statically, at compile time) to the ``(K = cin*kh*kw, N =
+cout)`` im2col matrix — in the patch-feature order of
+``lax.conv_general_dilated_patches`` — and runs through the identical
+shared-pattern / compress / quantize pipeline.  The resulting payload is
+wrapped in :class:`repro.core.dispatch.ConvPayload` (payload + static conv
+geometry) and executed by ``conv_dispatch``: im2col at trace time, then
+the very same sparse/quant kernels the FC layers use.  The policy pick is
+conv-aware — a conv leaf's MACs scale by its output H·W (its reuse of the
+streamed weight), which is exactly what its LayerSpec encodes.
 
 Representation invariant (what makes this pass composable with scan /
 sharding): **one BlockSparsePattern per (K, N) linear shape**, shared by
@@ -34,7 +45,14 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .cost_model import HWSpec, LayerSpec, TPU_V5E, layer_latency
+from .cost_model import (
+    HWSpec,
+    LayerSpec,
+    TPU_V5E,
+    decode_linear_spec,
+    layer_latency,
+)
+from .dispatch import ConvPayload
 from .folding import FoldingConfig
 from .quant import QuantizedTensor, dequantize, quantize
 from .sparsity import (
@@ -53,7 +71,10 @@ __all__ = [
     "choose_policy",
     "compile_model",
     "compile_lenet",
+    "conv_weight_matrix",
+    "conv_weight_unmatrix",
     "decompress_model",
+    "realised_densities",
 ]
 
 POLICIES = ("dense", "quant", "sparse")
@@ -71,7 +92,14 @@ _LINEAR_SUBTREES = ("attn", "mlp", "shared")
 
 @dataclasses.dataclass(frozen=True)
 class CompileRules:
-    """Knobs of the compression pass (all compile-time)."""
+    """Knobs of the compression pass (all compile-time).
+
+    The same rules govern linear and conv leaves: a conv's ``block`` /
+    ``policies`` / ``masks`` entries apply to its im2col matrix
+    ``(cin*kh*kw, cout)``.  Conv masks may be given kernel-shaped
+    ``(kh, kw, cin, cout)`` (as produced by pruning the raw weight) or
+    already im2col-shaped ``(K, N)`` — both are accepted.
+    """
 
     block: Tuple[int, int] = (128, 128)   # clipped per-shape to (K, N)
     quant_bits: int = 8
@@ -89,12 +117,14 @@ class CompileRules:
 class LayerReport:
     name: str
     policy: str
-    shape: Tuple[int, int]
+    shape: Tuple[int, int]       # im2col (K, N) for conv leaves
     n_layers: int
     dense_bytes: int
     compressed_bytes: int
     block_density: float
     element_density: float
+    kind: str = "linear"         # "linear" | "conv"
+    m_scale: int = 1             # matmul rows per batch row (conv: H_out*W_out)
 
 
 @dataclasses.dataclass
@@ -138,6 +168,24 @@ class CompressedModel:
         raise KeyError(name)
 
 
+# ------------------------------------------------------- conv <-> matrix
+
+
+def conv_weight_matrix(w4):
+    """(kh, kw, cin, cout) conv weight -> its (cin*kh*kw, cout) im2col
+    matrix, in the patch-feature order of
+    ``lax.conv_general_dilated_patches`` (channel major, then kh, kw).
+    Works on numpy and jnp arrays (boolean masks included)."""
+    kh, kw, cin, cout = w4.shape
+    return w4.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+
+
+def conv_weight_unmatrix(w2, kernel: Tuple[int, int, int, int]):
+    """Inverse of :func:`conv_weight_matrix`: (K, N) -> (kh, kw, cin, cout)."""
+    kh, kw, cin, cout = kernel
+    return w2.reshape(cin, kh, kw, cout).transpose(1, 2, 0, 3)
+
+
 # ------------------------------------------------------------------ policy
 
 
@@ -149,21 +197,22 @@ def choose_policy(
     block_density: float,
     element_density: float,
     sparse_eligible: bool,
+    spec: Optional[LayerSpec] = None,
 ) -> str:
     """Roofline-based per-layer policy pick (cost_model heuristic).
 
     Builds a decode-shaped LayerSpec and compares the three datapaths'
     latencies; storage-floor gates keep tiny layers dense (metadata and
-    kernel launch overheads dominate real wins there).
+    kernel launch overheads dominate real wins there).  ``spec`` overrides
+    the default linear-shaped LayerSpec — conv leaves pass their own
+    (MACs scaled by output H·W, real activation traffic), so the compare
+    sees the conv's weight reuse instead of pretending it is a decode
+    linear.
     """
     if K * N < rules.min_weight_elems:
         return "dense"
-    spec = LayerSpec(
-        name="_", kind="linear",
-        flops=2.0 * K * N * rules.batch_tokens,
-        weight_elems=K * N,
-        act_bytes=4.0 * rules.batch_tokens * (K + N),
-    )
+    if spec is None:
+        spec = decode_linear_spec(K, N, rules.batch_tokens)
     hw = rules.hw
     lat = {
         "dense": layer_latency(
@@ -241,12 +290,14 @@ def _decide_policy(
     block: Optional[Tuple[int, int]],
     block_density: float,
     element_density: float,
+    spec: Optional[LayerSpec] = None,
 ) -> Tuple[str, int]:
     """Per-layer (policy, quant_bits) gate shared by compile_model and
     compile_lenet: explicit override, else cost model; the ``"autotune"``
     override defers both the policy and the bit-width to the tuner's
     network_estimate re-ranking; sparse downgrades to quant when the rule
-    block cannot tile the shape."""
+    block cannot tile the shape.  ``spec`` carries conv-aware cost inputs
+    (see :func:`choose_policy`)."""
     if override is not None and override not in POLICIES + (AUTOTUNE_POLICY,):
         raise ValueError(
             f"{name}: unknown policy {override!r} — valid: "
@@ -261,10 +312,11 @@ def _decide_policy(
         return tuned_policy(
             K, N, rules=rules, block_density=block_density,
             element_density=element_density,
-            sparse_eligible=block is not None)
+            sparse_eligible=block is not None, spec=spec)
     policy = override or choose_policy(
         K, N, rules=rules, block_density=block_density,
-        element_density=element_density, sparse_eligible=block is not None)
+        element_density=element_density, sparse_eligible=block is not None,
+        spec=spec)
     if policy == "sparse" and block is None:  # cost-model fallback only
         policy = "quant"
     return policy, rules.quant_bits
@@ -626,14 +678,20 @@ def decompress_model(cm: CompressedModel, *, dtype=jnp.float32) -> Any:
     its dequantised / scattered dense weight.
     """
     if cm.layers:  # compile_lenet result: rebuild <name>_w from payloads
+        def _payload_dense(payload):
+            if isinstance(payload, CompressedLinear):
+                return decompress(payload).astype(dtype)
+            if isinstance(payload, QuantizedTensor):
+                return dequantize(payload).astype(dtype)
+            return jnp.asarray(payload, dtype)  # masked dense array
+
         out = dict(cm.params)
         for name, payload in cm.layers.items():
-            if isinstance(payload, CompressedLinear):
-                out[name + "_w"] = decompress(payload).astype(dtype)
-            elif isinstance(payload, QuantizedTensor):
-                out[name + "_w"] = dequantize(payload).astype(dtype)
-            else:  # masked dense array
-                out[name + "_w"] = jnp.asarray(payload, dtype)
+            if isinstance(payload, ConvPayload):  # scatter back to 4-d
+                out[name + "_w"] = conv_weight_unmatrix(
+                    _payload_dense(payload.payload), payload.kernel)
+            else:
+                out[name + "_w"] = _payload_dense(payload)
         return out
     shape_of = {r.name: r.shape for r in cm.report}
     out = _copy_spine(cm.params)
@@ -658,43 +716,71 @@ def compile_lenet(
     rules: CompileRules = CompileRules(block=(8, 4), min_weight_elems=512),
     blocks: Optional[Dict[str, Tuple[int, int]]] = None,
 ) -> CompressedModel:
-    """Compress the LeNet-5 FC layers (the paper's Table-1 workload).
+    """Compress the whole LeNet-5 — convs AND FC layers (Table-1 workload).
 
-    Returns a CompressedModel whose ``layers`` dict plugs straight into
-    ``lenet_forward(params, x, compressed=cm.layers)``: CompressedLinear for
-    sparse layers, QuantizedTensor for quant-dense, a masked dense array
-    for dense-with-mask, absent for unmasked dense.
+    Every layer runs through the same analyze→decide→pack pipeline; convs
+    are lowered onto their im2col matrix (``conv_weight_matrix``) so the
+    identical CompressedLinear / QuantizedTensor / masked-dense payload
+    families apply.  Returns a CompressedModel whose ``layers`` dict plugs
+    straight into ``lenet_forward(params, x, compressed=cm.layers)``:
+
+    * linear — CompressedLinear (sparse), QuantizedTensor (quant), masked
+      dense array (dense-with-mask), absent (unmasked dense);
+    * conv   — the same payload wrapped in a
+      :class:`repro.core.dispatch.ConvPayload` (payload + static conv
+      geometry), executed via ``conv_dispatch``; an unmasked dense conv
+      stays a plain ``lax.conv`` passthrough (absent from ``layers``).
+
+    Conv masks are accepted kernel-shaped ``(kh, kw, cin, cout)`` or
+    im2col-shaped ``(K, N)``; a key matching no LeNet layer at all raises
+    loudly (a typo would silently drop pruning).  ``patterns`` is keyed by
+    the im2col (K, N) — distinct for every LeNet layer.
     """
-    from ..models.lenet import LAYERS
+    from ..models.lenet import CONV_OUT_HW, LAYERS, lenet_layer_specs
 
-    linear_names = [n for n, kind, _ in LAYERS if kind == "linear"]
-    unknown = set(masks or {}) - set(linear_names)
-    if unknown:
-        raise ValueError(
-            f"masks keys matched no LeNet linear layer: {sorted(unknown)} — "
-            f"compile_lenet compresses {linear_names}; conv masks are "
-            "applied at forward time via lenet_forward(masks=...)")
-    unknown = set(rules.policies or {}) - set(linear_names)
-    if unknown:
-        raise ValueError(
-            f"policies keys matched no LeNet linear layer: "
-            f"{sorted(unknown)} — valid names: {linear_names}")
-    unknown = set(blocks or {}) - set(linear_names)
-    if unknown:
-        raise ValueError(
-            f"blocks keys matched no LeNet linear layer: {sorted(unknown)} "
-            f"— valid names: {linear_names}")
+    names = [n for n, _, _ in LAYERS]
+    for label, d in (("masks", masks), ("policies", rules.policies),
+                     ("blocks", blocks)):
+        unknown = set(d or {}) - set(names)
+        if unknown:
+            raise ValueError(
+                f"{label} keys matched no LeNet layer: {sorted(unknown)} — "
+                f"compile_lenet lowers every layer of {names} (convs "
+                "included, via the im2col datapath); a typo here would "
+                "silently drop the override")
 
+    specs = {s.name: s for s in lenet_layer_specs(batch=rules.batch_tokens)}
     patterns: Dict[Tuple[int, int], BlockSparsePattern] = {}
     report: List[LayerReport] = []
     layers: Dict[str, Any] = {}
     for name, kind, shape in LAYERS:
-        if kind != "linear":
-            continue
-        K, N = shape
-        w = np.asarray(params[name + "_w"], np.float32)
+        if kind == "conv":
+            kh, kw, cin, cout = shape
+            K, N = kh * kw * cin, cout
+            w = conv_weight_matrix(np.asarray(params[name + "_w"],
+                                              np.float32))
+            spec = specs[name]
+            m_scale = int(np.prod(CONV_OUT_HW[name]))
+        else:
+            K, N = shape
+            w = np.asarray(params[name + "_w"], np.float32)
+            spec = None  # linear leaves keep the default decode-shaped spec
+            m_scale = 1
         block = _fit_block(K, N, (blocks or {}).get(name, rules.block))
         mask = np.asarray(masks[name], bool) if masks and name in masks else None
+        if mask is not None:
+            if kind == "conv" and mask.ndim == 4:
+                if mask.shape != shape:
+                    raise ValueError(
+                        f"{name}: conv mask shape {mask.shape} does not "
+                        f"match the kernel {shape}")
+                mask = conv_weight_matrix(mask)
+            if mask.shape != (K, N):
+                raise ValueError(
+                    f"{name}: mask shape {mask.shape} does not match the "
+                    f"layer — expected {(K, N)}"
+                    + (f" (im2col) or kernel-shaped {shape}"
+                       if kind == "conv" else ""))
         if mask is not None and block is not None:
             bitmap = _mask_bitmap(mask, block)
             bd, ed = bitmap.sum() / bitmap.size, mask.sum() / mask.size
@@ -703,19 +789,21 @@ def compile_lenet(
             ed = rules.block_density * rules.in_block_density
         policy, bits = _decide_policy(name, (rules.policies or {}).get(name),
                                       K, N, rules, block=block,
-                                      block_density=bd, element_density=ed)
+                                      block_density=bd, element_density=ed,
+                                      spec=spec)
         dense_bytes = K * N * 4
         # as in compile_model: a user mask is honoured under every policy
         if policy in ("dense", "quant"):
             bd = 1.0
             ed = 1.0 if mask is None else mask.sum() / mask.size
+        payload = None
         if policy == "dense":
             if mask is not None:  # masked dense payload (plain array)
-                layers[name] = jnp.asarray(w * mask, jnp.float32)
+                payload = jnp.asarray(w * mask, jnp.float32)
             comp_bytes = dense_bytes
         elif policy == "quant":
             qt = quantize(w if mask is None else w * mask, bits, axis=1)
-            layers[name] = QuantizedTensor(
+            payload = QuantizedTensor(
                 values=qt.values, scales=qt.scales.reshape(N), axis=1,
                 bits=bits)
             comp_bytes = K * N + N * 4
@@ -730,15 +818,29 @@ def compile_lenet(
                               quant_bits=bits)
             else:
                 cl = compress(w, mask, block, dtype=rules.dtype)
-            layers[name] = cl
+            payload = cl
             patterns[(K, N)] = cl.pattern
             # payload only; schedule metadata added once per pattern by
             # CompressedModel.storage_bytes
             comp_bytes = cl.storage_bytes - cl.pattern.meta_bytes
             bd, ed = cl.pattern.block_density, cl.pattern.element_density
+        if payload is not None:
+            layers[name] = (ConvPayload(payload=payload, kernel=shape)
+                            if kind == "conv" else payload)
         report.append(LayerReport(
             name=name, policy=policy, shape=(K, N), n_layers=1,
             dense_bytes=dense_bytes, compressed_bytes=int(comp_bytes),
-            block_density=float(bd), element_density=float(ed)))
+            block_density=float(bd), element_density=float(ed),
+            kind=kind, m_scale=m_scale))
     return CompressedModel(params=params, patterns=patterns, report=report,
                            layers=layers)
+
+
+def realised_densities(cm: CompressedModel) -> Dict[str, Tuple[float, float]]:
+    """{layer name: (block_density, element_density)} realised by the
+    compression pass — the DSE's LayerSpec path feeds these back (via
+    :func:`repro.core.dse.apply_realised_densities`) so bottleneck
+    elimination iterates against what the pass actually packed, conv
+    leaves included, instead of the reference-pruning estimates."""
+    return {r.name: (float(r.block_density), float(r.element_density))
+            for r in cm.report}

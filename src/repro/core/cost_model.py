@@ -22,6 +22,7 @@ __all__ = [
     "HWSpec",
     "TPU_V5E",
     "LayerSpec",
+    "decode_linear_spec",
     "layer_latency",
     "layer_resource",
     "network_estimate",
@@ -71,6 +72,20 @@ class LayerSpec:
     prunable: bool = True
     max_block_density: float = 1.0   # from reference pruning (accuracy-safe)
     max_element_density: float = 1.0
+
+
+def decode_linear_spec(K: int, N: int, batch_tokens: int = 1) -> LayerSpec:
+    """Decode-shaped LayerSpec for an anonymous (K, N) linear — the shared
+    default of ``compile_sparse.choose_policy`` and
+    ``autotune.tuned_policy``, kept here so the heuristic pick and the
+    autotune re-ranking always cost the same layer identically.  Conv
+    leaves pass their own spec instead (MACs scale by output H·W)."""
+    return LayerSpec(
+        name="_", kind="linear",
+        flops=2.0 * K * N * batch_tokens,
+        weight_elems=K * N,
+        act_bytes=4.0 * batch_tokens * (K + N),
+    )
 
 
 # Double-buffered 128x128 bf16 tile: the VMEM cost of one streaming lane.

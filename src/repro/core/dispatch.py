@@ -38,12 +38,23 @@ The fused bias+activation epilogue rides the same dispatch: pass
 ``activation=`` and a ``"b"`` leaf and both the sparse and quant Pallas
 paths emit ``act(x @ W + b)`` in one launch; every other path applies the
 identical f32 formula (:data:`repro.kernels.sparse_matmul.kernel.ACTIVATIONS`).
+
+Convolutions ride the SAME datapath: :func:`conv_dispatch` lowers an NHWC
+conv to a matmul at trace time via ``lax.conv_general_dilated_patches``
+(static im2col — the patch extraction is a strided identity conv XLA folds
+into data movement) and funnels the ``(B*H_out*W_out, kh*kw*cin)`` patch
+matrix into :func:`payload_dispatch`.  A compiled conv leaf
+(:class:`ConvPayload`, from ``compile_sparse``) therefore executes on the
+identical sparse/quant Pallas kernels, fused epilogue included, with zero
+conv-specific kernel code.  Conv tuned-table entries are keyed with a
+``conv_``-prefixed kind so they never collide with a linear leaf at the
+same ``(M, K, N)``.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Any, Dict, Optional, Union
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -64,11 +75,15 @@ from .sparsity import BlockSparsePattern, CompressedLinear
 __all__ = [
     "DISPATCH_ENV",
     "DISPATCH_MODES",
+    "ConvPayload",
     "DispatchConfig",
     "resolve",
     "sparse_kernel_eligible",
     "quant_kernel_eligible",
     "linear_dispatch",
+    "payload_dispatch",
+    "conv_dispatch",
+    "conv_im2col",
 ]
 
 Params = Dict[str, Any]
@@ -179,11 +194,24 @@ def _use_pallas(cfg: DispatchConfig, eligible: bool) -> bool:
 
 
 def _tuned_entry(cfg: DispatchConfig, kind: str, M: int, K: int, N: int,
-                 x_dtype, pattern: Optional[BlockSparsePattern] = None):
-    """Trace-time tuned-table lookup (None when no table / no entry)."""
+                 x_dtype, pattern: Optional[BlockSparsePattern] = None,
+                 leaf: Optional[str] = None):
+    """Trace-time tuned-table lookup (None when no table / no entry).
+
+    When the caller names its ``leaf``, a per-leaf entry (same base key
+    suffixed ``:leaf=<name>``) takes precedence over the shared per-shape
+    entry — two leaves that collide on (kind, M, K, N, dtype, backend,
+    schedule) can still be tuned apart.
+    """
     if cfg.tuned is None:
         return None
     from .autotune import tune_key
+    if leaf is not None:
+        entry = cfg.tuned.get(tune_key(kind=kind, M=M, K=K, N=N,
+                                       dtype=x_dtype, pattern=pattern,
+                                       leaf=leaf))
+        if entry is not None:
+            return entry
     return cfg.tuned.get(tune_key(kind=kind, M=M, K=K, N=N, dtype=x_dtype,
                                   pattern=pattern))
 
@@ -320,6 +348,8 @@ def linear_dispatch(
     dispatch: Union[None, str, DispatchConfig] = None,
     compute_dtype=None,
     activation: Optional[str] = None,
+    leaf: Optional[str] = None,
+    op: str = "linear",
 ) -> jnp.ndarray:
     """Apply one compiled linear leaf: y = act(x @ W + b).
 
@@ -328,9 +358,15 @@ def linear_dispatch(
     are fused into the sparse and quant kernels' epilogues on the Pallas
     path and applied by the identical f32 formula on every other path.
     A tuned table on the config supplies per-leaf backend and tile choices
-    (trace-time lookup — nothing here is a traced value).
+    (trace-time lookup — nothing here is a traced value); ``leaf`` names
+    the leaf for per-leaf tuned overrides, and ``op`` ("linear" | "conv")
+    tags the tuned key so im2col'd convs never share entries with linears
+    at the same shape.
     """
     _check_activation(activation)
+    if op not in ("linear", "conv"):
+        raise ValueError(f"unknown dispatch op {op!r} — 'linear' or 'conv'")
+    tag = "conv_" if op == "conv" else ""
     cfg = resolve(dispatch)
     if compute_dtype is None:
         compute_dtype = x.dtype
@@ -342,7 +378,8 @@ def linear_dispatch(
 
     if "w_q" in p:
         K, N = p["w_q"].shape
-        entry = _tuned_entry(cfg, "quant", _lead_rows(x), K, N, x.dtype)
+        entry = _tuned_entry(cfg, tag + "quant", _lead_rows(x), K, N,
+                             x.dtype, leaf=leaf)
         if _pick_backend(cfg, entry, quant_kernel_eligible(K, N)):
             # epilogue fused into the kernel's emit step — no extra pass
             return _quant_apply_pallas(p, x, cfg, compute_dtype, bias,
@@ -361,8 +398,8 @@ def linear_dispatch(
                 "compile_sparse pattern table through forward/decode_step "
                 "(patterns=cm.patterns) or a cfg-derived shared pattern")
         K, N = pattern.shape
-        entry = _tuned_entry(cfg, "sparse", _lead_rows(x), K, N, x.dtype,
-                             pattern)
+        entry = _tuned_entry(cfg, tag + "sparse", _lead_rows(x), K, N,
+                             x.dtype, pattern, leaf=leaf)
         use_k = _pick_backend(
             cfg, entry, sparse_kernel_eligible(pattern, p["w_blk"].dtype))
         bm = cfg.bm if cfg.bm is not None else \
@@ -388,6 +425,8 @@ def payload_dispatch(
     bias: Optional[jnp.ndarray] = None,
     activation: Optional[str] = None,
     compute_dtype=None,
+    leaf: Optional[str] = None,
+    op: str = "linear",
 ) -> jnp.ndarray:
     """Dispatch over a compile_lenet layer payload (CompressedLinear /
     QuantizedTensor / masked-dense array) — the per-name analogue of
@@ -397,8 +436,15 @@ def payload_dispatch(
     exactly like :func:`linear_dispatch` — bf16 activations stay bf16
     instead of being silently upcast to f32 on the quant/dense payloads
     (which made the payload path diverge from the pytree path).
+    ``leaf``/``op`` thread through to the tuned-table lookup (per-leaf
+    overrides, conv-vs-linear key separation).
     """
     cfg = resolve(dispatch)
+    if isinstance(payload, ConvPayload):
+        raise TypeError(
+            "ConvPayload must go through conv_dispatch (it carries the "
+            "kernel geometry the im2col lowering needs), not "
+            "payload_dispatch")
     if isinstance(payload, CompressedLinear):
         p: Params = {"w_blk": payload.blocks}
         if payload.scales is not None:
@@ -407,17 +453,127 @@ def payload_dispatch(
             p["b"] = bias
         return linear_dispatch(p, x, pattern=payload.pattern, dispatch=cfg,
                                compute_dtype=compute_dtype,
-                               activation=activation)
+                               activation=activation, leaf=leaf, op=op)
     if isinstance(payload, QuantizedTensor):
         K, N = payload.values.shape
         p = {"w_q": payload.values, "w_s": payload.scales.reshape(N)}
         if bias is not None:
             p["b"] = bias
         return linear_dispatch(p, x, dispatch=cfg, activation=activation,
-                               compute_dtype=compute_dtype)
+                               compute_dtype=compute_dtype, leaf=leaf, op=op)
     # masked dense payload (plain array)
     p = {"w": payload}
     if bias is not None:
         p["b"] = bias
     return linear_dispatch(p, x, dispatch=cfg, activation=activation,
-                           compute_dtype=compute_dtype)
+                           compute_dtype=compute_dtype, leaf=leaf, op=op)
+
+
+# ------------------------------------------------------------ convolutions
+
+
+@dataclasses.dataclass
+class ConvPayload:
+    """A compiled convolution leaf: one linear-family payload plus the
+    static conv geometry the im2col lowering needs.
+
+    ``payload`` is exactly the linear payload family compile_sparse emits
+    (CompressedLinear / QuantizedTensor / masked-dense ``(K, N)`` array)
+    over the im2col weight matrix — ``(kh, kw, cin, cout)`` reshaped to
+    ``(K = cin*kh*kw, N = cout)`` in the *patch feature order* of
+    ``lax.conv_general_dilated_patches`` (cin major, then kh, kw).
+
+    ``strides``/``padding`` record the conv the leaf was compiled (and
+    cost-modelled) for; :func:`conv_dispatch` rejects a mismatching call
+    loudly instead of silently running a differently-shaped conv.
+    """
+
+    payload: Any
+    kernel: Tuple[int, int, int, int]   # (kh, kw, cin, cout)
+    strides: Tuple[int, int] = (1, 1)
+    padding: str = "VALID"
+
+    @property
+    def K(self) -> int:
+        kh, kw, cin, _ = self.kernel
+        return kh * kw * cin
+
+    @property
+    def N(self) -> int:
+        return self.kernel[3]
+
+
+def conv_im2col(x: jnp.ndarray, kernel_hw: Tuple[int, int], *,
+                strides: Tuple[int, int] = (1, 1),
+                padding: str = "VALID") -> jnp.ndarray:
+    """Static im2col: NHWC image -> (B, H_out, W_out, cin*kh*kw) patches.
+
+    Trace-time lowering via ``lax.conv_general_dilated_patches`` — XLA sees
+    a strided identity convolution it folds into pure data movement, so
+    the conv becomes exactly the matmul the engine-free datapath executes.
+    Patch features are ordered (cin, kh, kw) — channel major — matching
+    the weight packing of ``compile_sparse``'s conv leaves.
+    """
+    if x.ndim != 4:
+        raise ValueError(
+            f"conv_im2col expects NHWC input, got shape {x.shape}")
+    return jax.lax.conv_general_dilated_patches(
+        x, tuple(kernel_hw), tuple(strides), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv_dispatch(
+    cp: ConvPayload,
+    x: jnp.ndarray,
+    *,
+    strides: Optional[Tuple[int, int]] = None,
+    padding: Optional[str] = None,
+    dispatch: Union[None, str, DispatchConfig] = None,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
+    compute_dtype=None,
+    leaf: Optional[str] = None,
+) -> jnp.ndarray:
+    """Apply one compiled conv leaf: y = act(conv(x, W) + b), engine-free.
+
+    Lowers the NHWC input to im2col patches at trace time and funnels the
+    ``(B, H_out, W_out, K)`` patch tensor into the exact same
+    :func:`payload_dispatch` machinery the FC layers use — the sparse /
+    quant Pallas kernels (fused bias+activation epilogue included) and
+    their jnp twins serve convs with zero conv-specific kernel code.  The
+    leading ``(B, H_out, W_out)`` dims flatten to the matmul's M, so the
+    tuned table sees ``M = B*H_out*W_out`` under a ``conv_``-tagged kind.
+
+    ``strides``/``padding`` default to the compiled geometry; passing a
+    *different* value raises — the payload was packed and cost-modelled
+    for one specific conv, and silently running another would be a wrong
+    answer with the right shape.
+    """
+    if not isinstance(cp, ConvPayload):
+        raise TypeError(
+            f"conv_dispatch needs a ConvPayload (from compile_sparse), got "
+            f"{type(cp).__name__}")
+    kh, kw, cin, cout = cp.kernel
+    if strides is not None and tuple(strides) != tuple(cp.strides):
+        raise ValueError(
+            f"conv_dispatch strides {tuple(strides)} do not match the "
+            f"compiled payload's strides {tuple(cp.strides)} — the leaf was "
+            "packed and cost-modelled for that geometry; recompile instead "
+            "of overriding")
+    if padding is not None and padding != cp.padding:
+        raise ValueError(
+            f"conv_dispatch padding {padding!r} does not match the compiled "
+            f"payload's padding {cp.padding!r} — recompile instead of "
+            "overriding")
+    if x.ndim != 4 or x.shape[-1] != cin:
+        raise ValueError(
+            f"conv_dispatch: input shape {x.shape} does not match the "
+            f"compiled kernel (kh={kh}, kw={kw}, cin={cin}, cout={cout}) — "
+            "expected NHWC with trailing channel dim "
+            f"{cin}")
+    patches = conv_im2col(x, (kh, kw), strides=cp.strides,
+                          padding=cp.padding)
+    return payload_dispatch(cp.payload, patches, dispatch=dispatch,
+                            bias=bias, activation=activation,
+                            compute_dtype=compute_dtype, leaf=leaf,
+                            op="conv")

@@ -25,7 +25,34 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from .cost_model import HWSpec, LayerSpec, NetworkEstimate, TPU_V5E, network_estimate
 from .folding import FoldingConfig
 
-__all__ = ["DSEResult", "run_dse", "balanced_folding_baseline"]
+__all__ = ["DSEResult", "run_dse", "balanced_folding_baseline",
+           "apply_realised_densities"]
+
+
+def apply_realised_densities(
+    specs: Sequence[LayerSpec],
+    realised: Dict[str, Tuple[float, float]],
+) -> List[LayerSpec]:
+    """Feed a compression pass's *realised* densities back into the layer IR.
+
+    ``realised`` maps layer name -> (block_density, element_density) — the
+    output of :func:`repro.core.compile_sparse.realised_densities`, which
+    covers conv leaves (im2col-packed) and linears alike.  Layers absent
+    from ``realised`` keep their reference-pruning caps.  This closes the
+    estimate→realise→re-estimate loop of the paper's Fig. 1: a second
+    ``run_dse`` over the returned specs iterates against what the pass
+    actually packed instead of what the pruner hoped for.
+    """
+    out: List[LayerSpec] = []
+    for s in specs:
+        de = realised.get(s.name)
+        if de is None:
+            out.append(s)
+            continue
+        bd, ed = de
+        out.append(dataclasses.replace(
+            s, max_block_density=float(bd), max_element_density=float(ed)))
+    return out
 
 
 @dataclasses.dataclass

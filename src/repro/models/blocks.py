@@ -83,6 +83,43 @@ def lin_apply(cfg: ArchConfig, p: Params, x, K: int, N: int, patterns=None,
     return linear_apply(p, x, pattern=pat, dispatch=dispatch)
 
 
+def patch_embed_apply(p, x, *, bias=None, dispatch=None, activation=None,
+                      leaf=None):
+    """Conv-bearing embedding hook (ViT/VLM patch embed, CNN stems).
+
+    ``p`` is either a compiled :class:`~repro.core.dispatch.ConvPayload`
+    (from a compile_sparse conv leaf — executes through the engine-free
+    im2col datapath, same kernels as every linear) or a raw dense leaf
+    ``{"w": (kh, kw, cin, cout)[, "b"]}`` (plain ``lax.conv`` — the
+    training form).  Both branches run the SAME conv: non-overlapping
+    (kh, kw)-strided VALID patches.  A ConvPayload compiled with any other
+    geometry is rejected loudly by ``conv_dispatch``'s mismatch guard
+    (compile it with ``strides=(kh, kw)``), never silently executed as a
+    stride-1 conv.  ``bias`` applies on both branches (the raw leaf's own
+    ``"b"`` is used when no explicit bias is given).  NHWC in, NHWC
+    feature map out; callers flatten to tokens themselves.
+    """
+    from ..core.dispatch import ConvPayload, conv_dispatch
+
+    if isinstance(p, ConvPayload):
+        kh, kw = p.kernel[0], p.kernel[1]
+        return conv_dispatch(p, x, strides=(kh, kw), padding="VALID",
+                             bias=bias, activation=activation,
+                             dispatch=dispatch, leaf=leaf)
+    w = p["w"]
+    kh, kw = int(w.shape[0]), int(w.shape[1])
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(kh, kw), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    b = bias if bias is not None else p.get("b")
+    if b is not None:
+        y = y + b
+    if activation is not None:
+        from ..kernels.sparse_matmul.kernel import ACTIVATIONS
+        y = ACTIVATIONS[activation](y)
+    return y
+
+
 # ----------------------------------------------------------------- attention
 
 

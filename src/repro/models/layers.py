@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.dispatch import linear_dispatch
+from ..core.dispatch import conv_dispatch, linear_dispatch
 from ..core.sparsity import BlockSparsePattern
 
 Params = Dict[str, Any]
@@ -109,6 +109,30 @@ def linear_apply(
     """
     return linear_dispatch(p, x, pattern=pattern, dispatch=dispatch,
                            compute_dtype=compute_dtype, activation=activation)
+
+
+def conv_apply(
+    cp,
+    x: jnp.ndarray,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
+    compute_dtype=None,
+    dispatch=None,
+    leaf: Optional[str] = None,
+) -> jnp.ndarray:
+    """Apply one compiled conv leaf: y = act(conv(x, W) + b), NHWC.
+
+    Thin alias for :func:`repro.core.dispatch.conv_dispatch` — the same
+    hook LeNet's conv1/conv2 use, exposed here so any conv-bearing config
+    (CNN stems, ViT patch embeddings) routes its compiled
+    :class:`~repro.core.dispatch.ConvPayload` leaves through the identical
+    engine-free im2col datapath: trace-time patch extraction, then the
+    sparse/quant kernels with their fused bias+activation epilogues.
+    """
+    return conv_dispatch(cp, x, dispatch=dispatch, bias=bias,
+                         activation=activation, compute_dtype=compute_dtype,
+                         leaf=leaf)
 
 
 # --------------------------------------------------------------------- norms

@@ -1,8 +1,10 @@
 """LeNet-5 — the paper's evaluation network (MNIST, Table I / Fig 2).
 
 Standard LeNet-5: conv(1→6,5×5) → avgpool → conv(6→16,5×5) → avgpool →
-fc(400→120) → fc(120→84) → fc(84→10).  Convs are expressible as matmuls
-(im2col) so the LogicSparse datapath (masked / compressed / quantised)
+fc(400→120) → fc(120→84) → fc(84→10).  Convs ARE matmuls here: a
+compressed conv executes through ``repro.core.dispatch.conv_dispatch`` —
+trace-time im2col into the identical sparse/quant kernel path the FC
+layers use — so the LogicSparse datapath (masked / compressed / quantised)
 applies to every layer; the per-layer mode is selected by the DSE result.
 
 ``apply_fn`` modes per layer: 'dense' (masked dense — training & accuracy
@@ -19,7 +21,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.cost_model import LayerSpec
-from ..core.dispatch import payload_dispatch, resolve as resolve_dispatch
+from ..core.dispatch import (
+    conv_dispatch,
+    payload_dispatch,
+    resolve as resolve_dispatch,
+)
 from ..core.sparsity import CompressedLinear
 
 Params = Dict[str, jnp.ndarray]
@@ -33,6 +39,16 @@ LAYERS = [
     ("fc2", "linear", (120, 84)),
     ("fc3", "linear", (84, 10)),
 ]
+
+# Static conv geometry on the 28x28 input (VALID, stride 1): spatial output
+# sizes and activation element counts.  compile_lenet consumes these for
+# conv-aware policy costing (MACs scale by H_out*W_out) and for the
+# autotuner's M scaling (an im2col'd conv is a (B*H_out*W_out, K, N) leaf).
+CONV_OUT_HW = {"conv1": (24, 24), "conv2": (8, 8)}
+ACT_IN_ELEMS = {"conv1": 28 * 28 * 1, "conv2": 12 * 12 * 6,
+                "fc1": 256, "fc2": 120, "fc3": 84}
+ACT_OUT_ELEMS = {"conv1": 24 * 24 * 6, "conv2": 8 * 8 * 16,
+                 "fc1": 120, "fc2": 84, "fc3": 10}
 
 
 def init_lenet(key) -> Params:
@@ -69,17 +85,21 @@ def lenet_forward(
     """Forward pass. ``masks`` applies static pruning (training / eval);
     ``qat_bits`` applies straight-through fake quantisation per layer (the
     paper's mixed-precision QNN datapath during re-sparse fine-tuning);
-    ``compressed`` switches named FC layers to the engine-free compacted
-    execution path (deployment form, validates against the masked path).
+    ``compressed`` switches named layers — convs AND FCs — to the
+    engine-free compacted execution path (deployment form, validates
+    against the masked path).
 
-    Compressed FC layers run through :mod:`repro.core.dispatch`: bias and
-    the inter-layer relu ride the sparse/quant kernels' fused epilogues on
-    the Pallas path.  ``dispatch`` selects the path ("auto" | "pallas" |
-    "jnp" | "autotune" — auto + the on-disk TunedTable of per-leaf tile
-    choices | DispatchConfig | None = REPRO_FORCE_DISPATCH); the legacy
-    ``interpret_kernels=True`` flag is shorthand for forced-Pallas
-    (interpret mode off-TPU) and only applies when no explicit
-    ``dispatch`` is given — an explicit argument always wins."""
+    Compressed layers run through :mod:`repro.core.dispatch`: bias and the
+    inter-layer relu ride the sparse/quant kernels' fused epilogues on the
+    Pallas path.  Compressed convs (``ConvPayload`` from ``compile_lenet``)
+    lower via trace-time im2col (``conv_dispatch``) into the same kernels;
+    the dense masked conv path is unchanged for training.  ``dispatch``
+    selects the path ("auto" | "pallas" | "jnp" | "autotune" — auto + the
+    on-disk TunedTable of per-leaf tile choices | DispatchConfig | None =
+    REPRO_FORCE_DISPATCH); the legacy ``interpret_kernels=True`` flag is
+    shorthand for forced-Pallas (interpret mode off-TPU) and only applies
+    when no explicit ``dispatch`` is given — an explicit argument always
+    wins."""
     from ..core.quant import fake_quant
 
     if dispatch is None and interpret_kernels:
@@ -94,18 +114,25 @@ def lenet_forward(
             ww = fake_quant(ww, qat_bits[name], axis=-1)
         return ww
 
+    def conv_block(name, x):
+        cw = compressed.get(name) if compressed is not None else None
+        if cw is not None:  # ConvPayload: engine-free im2col datapath
+            return conv_dispatch(cw, x, dispatch=dcfg,
+                                 bias=params[name + "_b"],
+                                 activation="relu", leaf=name)
+        return jax.nn.relu(_conv(x, w(name), params[name + "_b"]))
+
     x = images
-    x = jax.nn.relu(_conv(x, w("conv1"), params["conv1_b"]))
-    x = _pool(x)
-    x = jax.nn.relu(_conv(x, w("conv2"), params["conv2_b"]))
-    x = _pool(x)
+    x = _pool(conv_block("conv1", x))
+    x = _pool(conv_block("conv2", x))
     x = x.reshape(x.shape[0], -1)  # (B, 256)
     for name in ("fc1", "fc2", "fc3"):
         act = "relu" if name != "fc3" else None
         cw = compressed.get(name) if compressed is not None else None
         if cw is not None:  # CompressedLinear / QuantizedTensor / masked dense
             x = payload_dispatch(cw, x, dispatch=dcfg,
-                                 bias=params[name + "_b"], activation=act)
+                                 bias=params[name + "_b"], activation=act,
+                                 leaf=name)
         else:
             y = x @ w(name) + params[name + "_b"]
             x = jax.nn.relu(y) if name != "fc3" else y
@@ -128,23 +155,17 @@ def lenet_layer_specs(
     reference global-magnitude pruning pass.
     """
     densities = densities or {}
-    # spatial output sizes for conv MAC counts on 28x28 input
-    out_hw = {"conv1": 24 * 24, "conv2": 8 * 8}
-    act_in = {"conv1": 28 * 28 * 1, "conv2": 12 * 12 * 6,
-              "fc1": 256, "fc2": 120, "fc3": 84}
-    act_out = {"conv1": 24 * 24 * 6, "conv2": 8 * 8 * 16,
-               "fc1": 120, "fc2": 84, "fc3": 10}
     specs = []
     for name, kind, shape in LAYERS:
         wel = int(np.prod(shape))
         if kind == "conv":
-            flops = 2.0 * wel * out_hw[name] * batch
+            flops = 2.0 * wel * int(np.prod(CONV_OUT_HW[name])) * batch
         else:
             flops = 2.0 * wel * batch
         bd, ed = densities.get(name, (1.0, 1.0))
         specs.append(LayerSpec(
             name=name, kind=kind, flops=flops, weight_elems=wel,
-            act_bytes=4.0 * batch * (act_in[name] + act_out[name]),
+            act_bytes=4.0 * batch * (ACT_IN_ELEMS[name] + ACT_OUT_ELEMS[name]),
             max_block_density=bd, max_element_density=ed,
         ))
     return specs

@@ -317,3 +317,100 @@ def test_run_dse_retune_move_recorded_in_trace():
     retunes = [t for t in res.trace if t["move"].startswith("retune")]
     for t in retunes:
         assert ":" in t["move"]
+
+
+# --------------------------------------------- conv kinds + per-leaf keys
+
+
+def test_conv_kind_and_leaf_suffix_never_collide():
+    """An im2col'd conv and a linear at the same (M, K, N, dtype, backend,
+    schedule) must key apart (kind tag), and a per-leaf key must extend —
+    never equal — the shared shape key."""
+    pat = shared_pattern(64, 128, (32, 32), 0.5)
+    base = tune_key(kind="sparse", M=4, K=64, N=128, dtype=jnp.float32,
+                    backend="cpu", pattern=pat)
+    conv = tune_key(kind="conv_sparse", M=4, K=64, N=128, dtype=jnp.float32,
+                    backend="cpu", pattern=pat)
+    leafed = tune_key(kind="sparse", M=4, K=64, N=128, dtype=jnp.float32,
+                      backend="cpu", pattern=pat, leaf="blocks/attn/wq")
+    assert conv != base
+    assert leafed != base and leafed.startswith(base)
+    assert tune_key(kind="conv_quant", M=4, K=64, N=128,
+                    dtype=jnp.float32, backend="cpu") != \
+        tune_key(kind="quant", M=4, K=64, N=128, dtype=jnp.float32,
+                 backend="cpu")
+
+
+def test_per_leaf_override_beats_shared_shape_entry(monkeypatch):
+    """Two leaves share the whole base key (same shape AND schedule); a
+    per-leaf entry must drive the named leaf while the other still takes
+    the shared entry — the ROADMAP per-layer-keys follow-on."""
+    import repro.core.dispatch as disp
+    from repro.models.layers import linear_apply, linear_init
+
+    calls = []
+    real = disp.sparse_linear
+    monkeypatch.setattr(disp, "sparse_linear",
+                        lambda *a, **k: calls.append(k.get("bm")) or
+                        real(*a, **k))
+    monkeypatch.delenv("REPRO_FORCE_DISPATCH", raising=False)
+    pat = shared_pattern(64, 128, (32, 32), 0.5)
+    p = linear_init(jax.random.PRNGKey(0), 64, 128, dtype=jnp.float32,
+                    mode="sparse", pattern=pat)
+    x = jnp.ones((4, 64), jnp.float32)
+    shared_key = tune_key(kind="sparse", M=4, K=64, N=128,
+                          dtype=jnp.float32, pattern=pat)
+    leaf_key = tune_key(kind="sparse", M=4, K=64, N=128, dtype=jnp.float32,
+                        pattern=pat, leaf="special")
+    table = TunedTable()
+    table.put(shared_key, TunedConfig(use_pallas=True, bm=8))
+    table.put(leaf_key, TunedConfig(use_pallas=True, bm=32))
+    tuned = DispatchConfig(mode="auto", tuned=table)
+
+    disp.linear_dispatch(p, x, pattern=pat, dispatch=tuned, leaf="special")
+    disp.linear_dispatch(p, x, pattern=pat, dispatch=tuned, leaf="other")
+    disp.linear_dispatch(p, x, pattern=pat, dispatch=tuned)  # anonymous
+    assert calls == [32, 8, 8], (
+        "per-leaf entry must override only the named leaf; unnamed and "
+        "other leaves fall back to the shared shape entry")
+
+
+def test_autotune_model_covers_conv_leaves(tmp_path):
+    """Conv leaves tune under conv_* kinds at M * H_out*W_out rows, the
+    tuned table drives lenet_forward bitwise-identically, and per_leaf=True
+    writes the override keys."""
+    from repro.core import block_aware_prune
+    from repro.core.compile_sparse import conv_weight_matrix
+
+    params = init_lenet(jax.random.PRNGKey(0))
+    blocks = {"conv1": (5, 2), "conv2": (10, 4), "fc1": (8, 4),
+              "fc2": (8, 4), "fc3": (4, 2)}
+    masks = {}
+    from repro.models.lenet import LAYERS
+    for name, kind, _ in LAYERS:
+        w = np.asarray(params[name + "_w"])
+        w2 = np.asarray(conv_weight_matrix(w)) if kind == "conv" else w
+        masks[name] = block_aware_prune(w2, blocks[name], block_density=0.5)
+    cm = compile_lenet(params, masks, blocks=blocks,
+                       rules=CompileRules(block=(8, 4), min_weight_elems=0))
+    assert {r.kind for r in cm.report} == {"conv", "linear"}
+
+    path = str(tmp_path / "c.json")
+    table = autotune_model(cm, M=2, options=FAST, path=path)
+    conv_keys = [k for k in table.entries if k.startswith("conv_")]
+    assert conv_keys, "conv leaves must be tuned under conv_* kinds"
+    # conv1 tunes at its im2col M: 2 batch rows x 24x24 output positions
+    assert any(":M1152:" in k for k in conv_keys), sorted(conv_keys)
+
+    img = jnp.asarray(np.random.default_rng(1).normal(size=(2, 28, 28, 1)),
+                      jnp.float32)
+    y_def = lenet_forward(params, img, compressed=cm.layers)
+    y_tun = lenet_forward(params, img, compressed=cm.layers,
+                          dispatch=DispatchConfig(mode="auto", tuned=table))
+    np.testing.assert_array_equal(np.asarray(y_def), np.asarray(y_tun))
+
+    # per-leaf run: every entry lands under its own :leaf= key
+    t2 = autotune_model(cm, M=2, options=FAST, path=path, per_leaf=True)
+    leaf_keys = [k for k in t2.entries if ":leaf=" in k]
+    assert {k.rsplit("leaf=", 1)[1] for k in leaf_keys} >= \
+        {"conv1", "conv2"}

@@ -262,14 +262,22 @@ def test_unmatched_mask_keys_rejected():
     mask = block_aware_prune(w0, (32, 32), block_density=0.5)
     with pytest.raises(ValueError, match="matched no linear leaf"):
         compile_model(params, cfg, masks={"Wq": mask}, rules=_rules())
-    with pytest.raises(ValueError, match="matched no LeNet linear layer"):
+    with pytest.raises(ValueError, match="matched no LeNet layer"):
         compile_lenet(init_lenet(jax.random.PRNGKey(0)),
                       {"fc9": np.ones((256, 120), bool)})
-    # conv masks are a forward-time concern — passing one here would be
-    # silently dropped, so it must be rejected too
-    with pytest.raises(ValueError, match="conv masks are applied"):
+    # conv layers are first-class now (im2col datapath): a kernel-shaped
+    # conv mask compiles, only a genuinely unknown name is rejected
+    cm = compile_lenet(init_lenet(jax.random.PRNGKey(0)),
+                       {"conv1": np.ones((5, 5, 1, 6), bool)})
+    assert {r.name for r in cm.report} >= {"conv1", "conv2"}
+    with pytest.raises(ValueError, match="matched no LeNet layer"):
         compile_lenet(init_lenet(jax.random.PRNGKey(0)),
-                      {"conv1": np.ones((5, 5, 1, 6), bool)})
+                      {"conv9": np.ones((5, 5, 1, 6), bool)})
+    # and a conv mask whose shape matches neither the kernel nor the
+    # im2col matrix is rejected with the layer named
+    with pytest.raises(ValueError, match="conv1.*mask shape"):
+        compile_lenet(init_lenet(jax.random.PRNGKey(0)),
+                      {"conv1": np.ones((6, 5, 1, 6), bool)})
 
 
 def test_unknown_policy_value_rejected():
@@ -381,9 +389,13 @@ def _lenet_setup():
 
 def test_compile_lenet_float_matches_masked_forward():
     params, blocks, masks, x = _lenet_setup()
+    # convs pinned dense (no conv masks here): this test checks the FC
+    # payloads are float-exact against the masked-dense forward
     cm = compile_lenet(params, masks, blocks=blocks,
                        rules=CompileRules(block=(8, 4), min_weight_elems=512,
-                                          quantize_sparse=False))
+                                          quantize_sparse=False,
+                                          policies={"conv1": "dense",
+                                                    "conv2": "dense"}))
     assert set(cm.layers) == {"fc1", "fc2", "fc3"}
     y_comp = lenet_forward(params, x, compressed=cm.layers)
     y_masked = lenet_forward(params, x, masks=masks)
@@ -395,7 +407,9 @@ def test_compile_lenet_float_matches_masked_forward():
     cm_d = compile_lenet(params, masks, blocks=blocks,
                          rules=CompileRules(block=(8, 4), min_weight_elems=512,
                                             quantize_sparse=False,
-                                            policies={"fc2": "dense"}))
+                                            policies={"fc2": "dense",
+                                                      "conv1": "dense",
+                                                      "conv2": "dense"}))
     assert isinstance(cm_d.layers["fc2"], jnp.ndarray)
     y_d = lenet_forward(params, x, compressed=cm_d.layers)
     np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_masked),
@@ -435,12 +449,50 @@ def test_decompress_model_lenet_oracle():
 
 
 def test_compile_lenet_storage_reduction():
-    """Acceptance: >= 4x storage reduction at 8-bit / 25% block density."""
+    """Acceptance: >= 4x storage reduction at 8-bit / 25% block density.
+
+    Convs are pinned dense here (no conv masks) and the report now covers
+    the WHOLE model, so the ratio is the honest whole-model number — the
+    dense conv rows sit in the denominator."""
     params, blocks, masks, x = _lenet_setup()
-    cm = compile_lenet(params, masks, blocks=blocks)  # int8 sparse default
-    assert all(r.policy == "sparse" for r in cm.report)
+    cm = compile_lenet(params, masks, blocks=blocks,
+                       rules=CompileRules(block=(8, 4), min_weight_elems=512,
+                                          policies={"conv1": "dense",
+                                                    "conv2": "dense"}))
+    rep = {r.name: r for r in cm.report}
+    assert set(rep) == {"conv1", "conv2", "fc1", "fc2", "fc3"}
+    assert all(rep[n].policy == "sparse" for n in ("fc1", "fc2", "fc3"))
+    assert all(rep[n].policy == "dense" for n in ("conv1", "conv2"))
     assert cm.compression >= 4.0, cm.compression
     # quantised path still tracks the masked forward closely
     y_comp = lenet_forward(params, x, compressed=cm.layers)
     y_masked = lenet_forward(params, x, masks=masks)
     assert float(jnp.abs(y_comp - y_masked).max()) < 0.05
+
+
+def test_decompress_model_conv_round_trip():
+    """Conv leaves scatter back to their exact (kh, kw, cin, cout) masked
+    weight (float path) — the dense oracle for the im2col datapath."""
+    from repro.core import block_aware_prune
+    from repro.core.compile_sparse import conv_weight_matrix
+    from repro.core.dispatch import ConvPayload
+
+    params = init_lenet(jax.random.PRNGKey(3))
+    blocks = {"conv1": (5, 2), "conv2": (10, 4)}
+    masks = {}
+    for n in ("conv1", "conv2"):
+        w2 = np.asarray(conv_weight_matrix(np.asarray(params[n + "_w"])))
+        masks[n] = block_aware_prune(w2, blocks[n], block_density=0.5)
+    cm = compile_lenet(params, masks, blocks=blocks,
+                       rules=CompileRules(block=(8, 4), min_weight_elems=0,
+                                          quantize_sparse=False,
+                                          policies={"conv1": "sparse",
+                                                    "conv2": "sparse"}))
+    assert isinstance(cm.layers["conv1"], ConvPayload)
+    dense = decompress_model(cm)
+    for n in ("conv1", "conv2"):
+        w4 = np.asarray(params[n + "_w"])
+        m4 = np.asarray(conv_weight_matrix(w4) * masks[n])
+        got = np.asarray(conv_weight_matrix(np.asarray(dense[n + "_w"])))
+        np.testing.assert_allclose(got, m4, atol=1e-6)
+        assert dense[n + "_w"].shape == w4.shape

@@ -22,6 +22,8 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.core import CompileRules, compile_lenet, decompress_model, quantize
+from repro.core.compile_sparse import conv_weight_matrix, conv_weight_unmatrix
+from repro.core.dispatch import ConvPayload, conv_dispatch
 from repro.core.sparsity import compress, decompress
 from repro.kernels.sparse_matmul.kernel import ACTIVATIONS
 from repro.kernels.sparse_matmul.ops import sparse_linear
@@ -128,6 +130,151 @@ def test_wrong_feature_dim_raises_loudly():
         sparse_linear(jnp.ones((4, 96), jnp.float32), cl)  # 4*96 % 128 == 0
 
 
+# ----------------------------------------------------------- conv datapath
+
+
+def _conv_case(density, quant, bias, activation, dispatch, seed):
+    """One conv cell: two-level pattern over the im2col matrix, executed
+    through conv_dispatch, asserted against the dense lax.conv oracle on
+    the decompressed masked weight."""
+    rng = np.random.default_rng(seed)
+    kh, kw, cin, cout = 3, 3, 4, 8
+    K, N = cin * kh * kw, cout        # (36, 8)
+    bk, bn = 6, 4
+    w4 = rng.normal(size=(kh, kw, cin, cout)).astype(np.float32)
+    w2 = np.asarray(conv_weight_matrix(w4))
+    bitmap = rng.random((K // bk, N // bn)) < density
+    mask2 = np.kron(bitmap, np.ones((bk, bn), bool))
+    if quant:
+        q = quantize(w2, 8, axis=1)
+        cl = compress(w2, mask2, (bk, bn),
+                      quant_scales=np.asarray(q.scales).reshape(-1),
+                      quant_bits=8)
+    else:
+        cl = compress(w2, mask2, (bk, bn), dtype=jnp.float32)
+    cp = ConvPayload(payload=cl, kernel=(kh, kw, cin, cout))
+    x = jnp.asarray(rng.normal(size=(2, 7, 7, cin)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(cout,)), jnp.float32) if bias else None
+    y = conv_dispatch(cp, x, dispatch=dispatch, bias=b,
+                      activation=activation)
+    # dense lax.conv oracle over the decompressed (masked, dequantised) W
+    wd = conv_weight_unmatrix(decompress(cl).astype(jnp.float32),
+                              (kh, kw, cin, cout))
+    y0 = jax.lax.conv_general_dilated(
+        x, wd, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        y0 = y0 + b
+    if activation is not None:
+        y0 = ACTIVATIONS[activation](y0)
+    assert y.shape == y0.shape == (2, 5, 5, cout)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                               rtol=1e-4, atol=1e-3)
+
+
+# density regime x storage dtype x epilogue, on every dispatch leg:
+# explicit jnp / pallas plus None (the REPRO_FORCE_DISPATCH env — covers
+# the auto and autotune CI matrix legs)
+@pytest.mark.parametrize("dispatch", ["jnp", "pallas", None])
+@pytest.mark.parametrize("bias,activation", [(False, None), (True, "relu")])
+@pytest.mark.parametrize("quant", [False, True])
+@pytest.mark.parametrize("density", [1.0, 0.5, 0.1])
+def test_conv_dispatch_vs_dense_conv_oracle(density, quant, bias,
+                                            activation, dispatch):
+    _conv_case(density, quant, bias, activation, dispatch,
+               seed=int(density * 10) + 2 * quant + bias)
+
+
+def test_compiled_lenet_convs_not_passthrough():
+    """Acceptance: a block-pruned LeNet compresses conv1/conv2 into
+    ConvPayloads (not dense passthrough), lenet_forward routes them
+    through conv_dispatch, and jnp-vs-pallas-vs-dense-oracle agree."""
+    from repro.core import block_aware_prune
+    import repro.models.lenet as lenet_mod
+
+    params = init_lenet(jax.random.PRNGKey(0))
+    blocks = {"conv1": (5, 2), "conv2": (10, 4),
+              "fc1": (8, 4), "fc2": (8, 4), "fc3": (4, 2)}
+    masks = {}
+    for name, kind, shape in lenet_mod.LAYERS:
+        w = np.asarray(params[name + "_w"])
+        w2 = np.asarray(conv_weight_matrix(w)) if kind == "conv" else w
+        masks[name] = block_aware_prune(w2, blocks[name], block_density=0.5,
+                                        in_block_density=0.8)
+    cm = compile_lenet(params, masks, blocks=blocks,
+                       rules=CompileRules(block=(8, 4), min_weight_elems=0))
+    rep = {r.name: r for r in cm.report}
+    for n in ("conv1", "conv2"):
+        assert rep[n].policy == "sparse", (n, rep[n].policy)
+        assert isinstance(cm.layers[n], ConvPayload)
+    assert rep["conv2"].kind == "conv" and rep["conv2"].m_scale == 64
+
+    img = jnp.asarray(np.random.default_rng(2).normal(size=(4, 28, 28, 1)),
+                      jnp.float32)
+    y_ref = lenet_forward(decompress_model(cm), img)
+    for mode in ("jnp", "pallas"):
+        y = lenet_forward(params, img, compressed=cm.layers, dispatch=mode)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_lenet_forward_routes_convs_through_conv_dispatch(monkeypatch):
+    """Routing assertion: compressed convs go through conv_dispatch (one
+    call per compressed conv), never the plain lax.conv path."""
+    import repro.models.lenet as lenet_mod
+    calls = []
+    real = lenet_mod.conv_dispatch
+    monkeypatch.setattr(lenet_mod, "conv_dispatch",
+                        lambda *a, **k: calls.append(k.get("leaf")) or
+                        real(*a, **k))
+    params = init_lenet(jax.random.PRNGKey(0))
+    cm = compile_lenet(params, rules=CompileRules(
+        block=(5, 2), min_weight_elems=0,
+        policies={"conv1": "sparse", "conv2": "quant"}))
+    img = jnp.asarray(np.random.default_rng(1).normal(size=(2, 28, 28, 1)),
+                      jnp.float32)
+    lenet_forward(params, img, compressed=cm.layers)
+    assert calls == ["conv1", "conv2"]
+    calls.clear()
+    lenet_forward(params, img)  # uncompressed: plain conv path, no dispatch
+    assert calls == []
+
+
+def test_patch_embed_apply_raw_vs_compiled():
+    """The conv-embed hook's two branches run the SAME conv: raw dense
+    leaf (lax.conv, (kh,kw)-strided VALID) vs a ConvPayload compiled at
+    the patch geometry agree with bias+activation; a payload compiled at
+    any other stride is rejected loudly, never run as a stride-1 conv."""
+    from repro.models.blocks import patch_embed_apply
+
+    rng = np.random.default_rng(17)
+    kh = kw = 4
+    cin, cout = 3, 8
+    w4 = rng.normal(size=(kh, kw, cin, cout)).astype(np.float32)
+    w2 = np.asarray(conv_weight_matrix(w4))
+    cl = compress(w2, np.ones_like(w2, bool), (8, 4), dtype=jnp.float32)
+    cp = ConvPayload(payload=cl, kernel=(kh, kw, cin, cout),
+                     strides=(kh, kw))
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, cin)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(cout,)), jnp.float32)
+
+    y_raw = patch_embed_apply({"w": jnp.asarray(w4), "b": b}, x,
+                              activation="relu")
+    y_cp = patch_embed_apply(cp, x, bias=b, activation="relu")
+    assert y_raw.shape == y_cp.shape == (2, 2, 2, cout)
+    np.testing.assert_allclose(np.asarray(y_cp), np.asarray(y_raw),
+                               rtol=1e-4, atol=1e-4)
+    # an explicit bias overrides the leaf's own on the raw branch too
+    y_rb = patch_embed_apply({"w": jnp.asarray(w4)}, x, bias=b,
+                             activation="relu")
+    np.testing.assert_allclose(np.asarray(y_rb), np.asarray(y_raw),
+                               rtol=1e-4, atol=1e-4)
+    # a stride-1-compiled payload must not silently run as a dense conv
+    cp_bad = ConvPayload(payload=cl, kernel=(kh, kw, cin, cout))
+    with pytest.raises(ValueError, match="strides"):
+        patch_embed_apply(cp_bad, x)
+
+
 # -------------------------------------- K/N not divisible by the rule block
 
 
@@ -135,13 +282,17 @@ def test_wrong_feature_dim_raises_loudly():
 def test_nondividing_block_downgrades_not_corrupts(block):
     """compile-level fuzz corner: a rule block that cannot tile a layer
     must downgrade the policy (never sparse), and the compressed model
-    must still match the dense oracle on both dispatch paths."""
+    (convs included — they compile onto their im2col shape now) must
+    still match the dense oracle on both dispatch paths.  The rule block
+    is clipped per shape first (`_fit_block`), so "cannot tile" means the
+    *clipped* block does not divide."""
     params = init_lenet(jax.random.PRNGKey(0))
     cm = compile_lenet(params, rules=CompileRules(
         block=block, min_weight_elems=0, block_density=0.5))
     for r in cm.report:
         K, N = r.shape
-        if K % block[0] or N % block[1]:
+        bk, bn = min(block[0], K), min(block[1], N)
+        if K % bk or N % bn:
             assert r.policy != "sparse", (r.name, r.policy)
     img = jnp.asarray(np.random.default_rng(2).normal(size=(4, 28, 28, 1)),
                       jnp.float32)

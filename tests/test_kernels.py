@@ -325,6 +325,83 @@ def test_quant_matmul_fused_epilogue(activation, bias):
                                rtol=2e-3, atol=2e-2)
 
 
+# ---------------------------------------------------------------------------
+# Conv through the engine-free datapath: empty-schedule epilogue + loud
+# geometry errors (the ConvPayload contract).
+
+
+def _conv_payload(mask_value=True, quant=False, seed=51):
+    from repro.core.compile_sparse import conv_weight_matrix
+    from repro.core.dispatch import ConvPayload
+
+    rng = np.random.default_rng(seed)
+    kh, kw, cin, cout = 3, 3, 2, 4
+    K, N = cin * kh * kw, cout        # (18, 4)
+    w2 = np.asarray(conv_weight_matrix(
+        rng.normal(size=(kh, kw, cin, cout)).astype(np.float32)))
+    mask = np.full((K, N), mask_value, bool)
+    if quant:
+        q = quantize(w2, 8, axis=1)
+        cl = compress(w2, mask, (6, 4),
+                      quant_scales=np.asarray(q.scales).reshape(-1),
+                      quant_bits=8)
+    else:
+        cl = compress(w2, mask, (6, 4), dtype=jnp.float32)
+    return ConvPayload(payload=cl, kernel=(kh, kw, cin, cout)), cl
+
+
+def test_empty_pattern_conv_epilogue():
+    """All conv blocks pruned: no schedule, no kernel launch — the output
+    feature map must still be act(b) at every spatial position, on the
+    kernel and jnp dispatch legs alike."""
+    from repro.core.dispatch import conv_dispatch
+
+    cp, cl = _conv_payload(mask_value=False)
+    assert cl.pattern.n_blocks_present == 0
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(2, 6, 6, 2)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4,)), jnp.float32)
+    for mode in ("jnp", "pallas"):
+        y = conv_dispatch(cp, x, dispatch=mode, bias=b, activation="relu")
+        assert y.shape == (2, 4, 4, 4)
+        expect = np.broadcast_to(np.maximum(np.asarray(b), 0.0),
+                                 (2, 4, 4, 4))
+        np.testing.assert_allclose(np.asarray(y), expect,
+                                   rtol=1e-5, atol=1e-6)
+    # and with no epilogue at all the empty conv is exactly zero
+    y0 = conv_dispatch(cp, x, dispatch="pallas")
+    assert np.abs(np.asarray(y0)).max() == 0.0
+
+
+def test_conv_dispatch_geometry_mismatch_is_loud():
+    """A ConvPayload was packed and cost-modelled for one conv geometry;
+    running it under different strides/padding/channels must raise, not
+    silently compute a differently-shaped conv."""
+    from repro.core.dispatch import conv_dispatch
+
+    cp, _ = _conv_payload()
+    x = jnp.ones((2, 6, 6, 2), jnp.float32)
+    with pytest.raises(ValueError, match="strides"):
+        conv_dispatch(cp, x, strides=(2, 2))
+    with pytest.raises(ValueError, match="padding"):
+        conv_dispatch(cp, x, padding="SAME")
+    with pytest.raises(ValueError, match="does not match the compiled"):
+        conv_dispatch(cp, jnp.ones((2, 6, 6, 3), jnp.float32))  # cin 3 != 2
+    # matching geometry passed explicitly is fine
+    y = conv_dispatch(cp, x, strides=(1, 1), padding="VALID")
+    assert y.shape == (2, 4, 4, 4)
+
+
+def test_conv_payload_rejected_by_payload_dispatch():
+    """payload_dispatch must not silently treat a ConvPayload as a masked
+    dense array — it lacks the geometry and would matmul a 2-d view."""
+    from repro.core.dispatch import payload_dispatch
+
+    cp, _ = _conv_payload()
+    with pytest.raises(TypeError, match="conv_dispatch"):
+        payload_dispatch(cp, jnp.ones((4, 18), jnp.float32))
+
+
 def test_quant_linear_epilogue_and_padding():
     """ops wrapper: non-multiple M + fused bias/relu through the kernel."""
     rng = np.random.default_rng(32)

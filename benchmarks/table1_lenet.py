@@ -15,20 +15,32 @@ engine-free compacted execution paths.
 
 The ``proposed_realised`` row is the whole-model (conv+FC) compile:
 ``compile_lenet`` lowers conv1/conv2 onto their im2col matrices through
-the same compress/quantize pipeline as the FCs, the realised per-layer
-densities feed back into the DSE's LayerSpecs
-(``apply_realised_densities``), and the whole-model compression ratio —
-the paper-comparable Table-I number, target 51.6x — is recorded with the
-per-layer policy table into the stable top-level
-``BENCH_lenet_table1.json``.  Acceptance: the whole-model ratio must be
-strictly greater than the FC-only ratio (convs pinned dense — the
+the same compress/quantize pipeline as the FCs — at the paper's int4
+operating point, so every 4-bit payload lives in a **bit-packed**
+container (two codes per byte; ``repro.core.quant.PackedTensor``) — the
+realised per-layer densities feed back into the DSE's LayerSpecs
+(``apply_realised_densities``), and the whole-model compression ratios —
+stored-bits (paper-comparable Table-I accounting, target 51.6x) AND the
+byte-level container ratio (bytes actually held in memory) — are recorded
+with the per-layer policy table into the stable top-level
+``BENCH_lenet_table1.json``.  Acceptance: the whole-model byte ratio must
+be strictly greater than the FC-only ratio (convs pinned dense — the
 ``lenet_fc_8bit_25pct`` regime of benchmarks/compressed_vs_dense.py).
+
+``--check`` runs the fast structural guard CI uses (no training): compile
+the whole model at the int4 operating point and assert (a) the packed
+containers hold >= 2x fewer payload bytes than the int8-container
+baseline accounting of the *same* compile, and (b) the byte-level
+whole-model ratio clears the committed floor — so the bit-packing can
+never silently regress back to int8 containers.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +92,14 @@ FINETUNE_STEPS = 200
 HW = TPU_V5E
 PAPER_COMPRESSION = 51.6           # Table I, whole-model LeNet-5 target
 BENCH_JSON = "BENCH_lenet_table1.json"  # stable top-level trajectory file
+# committed byte-level (container-bytes) whole-model floor: int4 payloads
+# bit-packed two codes per byte — CI's --check asserts we never fall back
+# to paying int8 containers (which scored 6.0x under the same accounting)
+BYTE_COMPRESSION_FLOOR = 11.0
+# the compile rules of the whole-model int4 operating point (shared by
+# run() and --check): 4-bit codes => every payload is emitted bit-packed
+WHOLE_MODEL_RULES = CompileRules(block=(8, 4), min_weight_elems=0,
+                                 quant_bits=4)
 
 
 def train_lenet(steps=80, masks=None, params=None, seed0=0, lr=2e-3,
@@ -131,6 +151,43 @@ def stored_bits(params, masks=None, quant_bits=32, pruned_bits=None) -> float:
     return total
 
 
+def prune_masks(params) -> Dict[str, np.ndarray]:
+    """The paper's operating-point masks: two-level block-aware pruning on
+    the FCs, block-aware pruning on the convs' im2col matrices (kept
+    kernel-shaped for the masked-dense training/eval path)."""
+    masks = {n: block_aware_prune(np.asarray(params[n + "_w"]), BLOCK[n],
+                                  block_density=0.5,
+                                  in_block_density=FC_IN_BLOCK_DENSITY)
+             for n in ("fc1", "fc2", "fc3")}
+    for n in ("conv1", "conv2"):
+        w4 = np.asarray(params[n + "_w"])
+        m2 = block_aware_prune(np.asarray(conv_weight_matrix(w4)),
+                               CONV_BLOCK[n],
+                               block_density=CONV_BLOCK_DENSITY)
+        masks[n] = np.asarray(conv_weight_unmatrix(m2, w4.shape))
+    return masks
+
+
+def container_vs_int8_bytes(cm) -> Tuple[int, int]:
+    """(logical code count = int8-container bytes, packed buffer bytes)
+    summed over the bit-packed weight containers of a compiled model.
+    Scale vectors are identical under both accountings and excluded."""
+    from repro.core import ConvPayload, PackedTensor
+    from repro.core.sparsity import CompressedLinear
+
+    code = cont = 0
+    for payload in cm.layers.values():
+        if isinstance(payload, ConvPayload):
+            payload = payload.payload
+        if isinstance(payload, CompressedLinear) and payload.packed:
+            code += int(np.prod(payload.blocks.shape))
+            cont += int(payload.blocks.data.size)
+        elif isinstance(payload, PackedTensor):
+            code += int(np.prod(payload.shape))
+            cont += int(payload.data.size)
+    return code, cont
+
+
 def run() -> List[Dict]:
     params, task = train_lenet(80)
     dense_acc = accuracy(params, task)
@@ -169,18 +226,8 @@ def run() -> List[Dict]:
     # -- hardware-aware pruning + re-sparse fine-tuning ---------------------
     # FCs: two-level block-aware pruning (sparse-unfold targets); convs:
     # block-aware pruning on their im2col matrices (the engine-free conv
-    # datapath — eliminated blocks leave the static schedule), kept 4-d
-    # (kernel-shaped) here for the masked-dense training/eval path
-    masks = {n: block_aware_prune(np.asarray(params[n + "_w"]), BLOCK[n],
-                                  block_density=0.5,
-                                  in_block_density=FC_IN_BLOCK_DENSITY)
-             for n in ("fc1", "fc2", "fc3")}
-    for n in ("conv1", "conv2"):
-        w4 = np.asarray(params[n + "_w"])
-        m2 = block_aware_prune(np.asarray(conv_weight_matrix(w4)),
-                               CONV_BLOCK[n],
-                               block_density=CONV_BLOCK_DENSITY)
-        masks[n] = np.asarray(conv_weight_unmatrix(m2, w4.shape))
+    # datapath — eliminated blocks leave the static schedule)
+    masks = prune_masks(params)
     pruned_params = dict(params)
     for n, m in masks.items():
         pruned_params[n + "_w"] = params[n + "_w"] * m
@@ -214,21 +261,32 @@ def run() -> List[Dict]:
     # -- whole-model compile: convs + FCs through the engine-free datapath --
     # compile_lenet lowers conv1/conv2 onto their im2col matrices with the
     # same compress/quantize pipeline as the FCs (cost-model policy pick,
-    # min_weight_elems=0 so the tiny conv1 is eligible too)
-    cm_whole = compile_lenet(
-        pruned_params, masks, blocks={**BLOCK, **CONV_BLOCK},
-        rules=CompileRules(block=(8, 4), min_weight_elems=0))
+    # min_weight_elems=0 so the tiny conv1 is eligible too).  quant_bits=4
+    # = the paper's int4 operating point (the weights were QAT'd at 4
+    # bits), so every payload is emitted in a bit-packed container — the
+    # byte-level ratio finally matches the stored-bits accounting instead
+    # of paying int8 containers per 4-bit code.
+    cm_whole = compile_lenet(pruned_params, masks,
+                             blocks={**BLOCK, **CONV_BLOCK},
+                             rules=WHOLE_MODEL_RULES)
     # FC-only reference: identical rules with the convs pinned dense — the
-    # lenet_fc_8bit_25pct regime of benchmarks/compressed_vs_dense.py
+    # packed analogue of the lenet_fc_8bit_25pct regime of
+    # benchmarks/compressed_vs_dense.py
     cm_fc = compile_lenet(
         pruned_params, {n: masks[n] for n in ("fc1", "fc2", "fc3")},
         blocks=BLOCK,
-        rules=CompileRules(block=(8, 4), min_weight_elems=0,
-                           policies={"conv1": "dense", "conv2": "dense"}))
+        rules=dataclasses.replace(
+            WHOLE_MODEL_RULES,
+            policies={"conv1": "dense", "conv2": "dense"}))
     whole_acc = accuracy(pruned_params, task, compressed=cm_whole.layers)
-    assert cm_whole.compression > cm_fc.compression, (
+    assert cm_whole.byte_compression > cm_fc.byte_compression, (
         "whole-model (conv+fc) compression must strictly beat the FC-only "
-        f"ratio: {cm_whole.compression:.2f}x <= {cm_fc.compression:.2f}x")
+        f"ratio: {cm_whole.byte_compression:.2f}x <= "
+        f"{cm_fc.byte_compression:.2f}x")
+    assert cm_whole.byte_compression >= BYTE_COMPRESSION_FLOOR, (
+        f"byte-level whole-model compression {cm_whole.byte_compression:.2f}x "
+        f"fell below the committed floor {BYTE_COMPRESSION_FLOOR}x — did the "
+        "int4 bit-packing regress to int8 containers?")
 
     # the realised per-layer densities feed back into the DSE's LayerSpecs:
     # bottleneck elimination now iterates against what the pass packed
@@ -242,7 +300,7 @@ def run() -> List[Dict]:
         "latency_us": est_r.latency * 1e6,
         "throughput_fps": est_r.throughput,
         "resource_bytes": est_r.resource,
-        "compression": cm_whole.compression,
+        "compression": cm_whole.byte_compression,
         "bottleneck": est_r.bottleneck,
         "sparse_layers": ",".join(res_r.sparse_layers),
         "bench": {
@@ -252,11 +310,17 @@ def run() -> List[Dict]:
             # quant_bits branch is never taken) over dense fp32 bits
             "stored_bits_compression":
                 stored_bits(params) / stored_bits(params, masks),
-            # realised pipeline accounting: bytes actually held by the
-            # compiled payloads (int8 containers, scales, schedule meta)
-            "whole_model_compression": cm_whole.compression,
-            "fc_only_compression": cm_fc.compression,
-            "whole_model_storage_bytes": cm_whole.storage_bytes,
+            # realised pipeline accounting: bytes actually held in memory
+            # by the compiled payloads — int4 codes BIT-PACKED two per
+            # byte (uint8 containers), scales, schedule metadata
+            "whole_model_compression": cm_whole.byte_compression,
+            # the same compile accounted at one byte per stored code (the
+            # pre-packing int8-container baseline the packing is judged
+            # against; this was the headline number before PR 5)
+            "whole_model_int8_container_compression": cm_whole.compression,
+            "fc_only_compression": cm_fc.byte_compression,
+            "whole_model_storage_bytes": cm_whole.container_storage_bytes,
+            "whole_model_int8_container_bytes": cm_whole.storage_bytes,
             "dense_storage_bytes": cm_whole.dense_bytes,
             "accuracy_dense": dense_acc,
             "accuracy_pruned_masked": pruned_acc,
@@ -267,6 +331,7 @@ def run() -> List[Dict]:
                 "im2col_shape": list(r.shape), "m_scale": r.m_scale,
                 "dense_bytes": r.dense_bytes,
                 "compressed_bytes": r.compressed_bytes,
+                "container_bytes": r.realised_bytes,
                 "block_density": round(r.block_density, 4),
                 "element_density": round(r.element_density, 4),
             } for r in cm_whole.report],
@@ -324,7 +389,48 @@ def write_bench(rows: List[Dict], path: str = BENCH_JSON) -> str:
     return path
 
 
+def check() -> None:
+    """Fast structural guard (CI: ``table1_lenet.py --check``, no training).
+
+    The storage ratios depend only on the layer shapes, the pruning
+    densities and the bit-packing — not on trained weight values — so
+    freshly-initialised weights give the same accounting as the full run.
+    Asserts that (a) the bit-packed int4 containers hold ~2x fewer
+    payload bytes than the int8-container baseline accounting of the same
+    compile — exactly 2x at the committed operating point, with tolerance
+    down to 1.95x for the one pad nibble row a both-odd block shape would
+    cost — and (b) the byte-level whole-model ratio clears the committed
+    floor.
+    """
+    params = init_lenet(jax.random.PRNGKey(0))
+    masks = prune_masks(params)
+    cm = compile_lenet(params, masks, blocks={**BLOCK, **CONV_BLOCK},
+                       rules=WHOLE_MODEL_RULES)
+    code, cont = container_vs_int8_bytes(cm)
+    assert cont > 0, "no bit-packed leaves — int4 packing is not engaged"
+    ratio = code / cont
+    print(f"packed leaves: int8-container codes {code} B -> "
+          f"packed containers {cont} B ({ratio:.3f}x)")
+    print(f"whole-model byte-level compression: "
+          f"{cm.byte_compression:.2f}x (int8-container baseline "
+          f"{cm.compression:.2f}x, floor {BYTE_COMPRESSION_FLOOR}x)")
+    # exact 2x when every leaf packs an even axis (the current operating
+    # point); 1.95 leaves room for the one pad nibble row per both-odd
+    # block shape the docstring allows, while still catching any real
+    # regression to int8 containers (which would score 1.0)
+    assert ratio >= 1.95, (
+        f"packed containers only {ratio:.3f}x under the int8-container "
+        "baseline — expected ~2x (two int4 codes per byte)")
+    assert cm.byte_compression >= BYTE_COMPRESSION_FLOOR, (
+        f"byte-level whole-model compression {cm.byte_compression:.2f}x "
+        f"< committed floor {BYTE_COMPRESSION_FLOOR}x")
+    print("check OK")
+
+
 def main():
+    if "--check" in sys.argv[1:]:
+        check()
+        return None
     rows = run()
     cols = ["strategy", "accuracy", "latency_us", "throughput_fps",
             "resource_bytes", "compression", "bottleneck"]

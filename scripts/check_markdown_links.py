@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Markdown link checker (stdlib only — runs in CI before deps install).
+
+Scans the given markdown files/directories for inline links and images
+``[text](target)`` and validates every *repo-local* target:
+
+* relative paths must exist on disk (anchors after ``#`` are stripped;
+  a pure-anchor link ``#section`` is checked against the file's own
+  headings);
+* absolute URLs (``http://``, ``https://``, ``mailto:``) are skipped —
+  CI must not flake on the network.
+
+Exit code 1 with a per-link report when anything is broken.
+
+Usage:  python scripts/check_markdown_links.py README.md docs
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links/images, tolerating one level of nested brackets in the text
+_LINK = re.compile(r"!?\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _anchor_of(heading: str) -> str:
+    """GitHub-style anchor: lowercase, spaces->dashes, drop punctuation."""
+    a = heading.strip().lower()
+    a = re.sub(r"[^\w\- ]", "", a)
+    return a.replace(" ", "-")
+
+
+def _md_files(args: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            files.append(p)
+        else:
+            print(f"warning: skipping non-markdown argument {a}")
+    return files
+
+
+def check(paths: list[str]) -> list[str]:
+    errors: list[str] = []
+    for md in _md_files(paths):
+        text = md.read_text(encoding="utf-8")
+        anchors = {_anchor_of(h) for h in _HEADING.findall(text)}
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            line = text.count("\n", 0, m.start()) + 1
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            if target.startswith("#"):  # intra-file anchor
+                if target[1:] not in anchors:
+                    errors.append(f"{md}:{line}: missing anchor {target}")
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                errors.append(f"{md}:{line}: broken link {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    errors = check(paths)
+    for e in errors:
+        print(e)
+    n = len(_md_files(paths))
+    if errors:
+        print(f"FAILED: {len(errors)} broken link(s) across {n} file(s)")
+        return 1
+    print(f"OK: all repo-local links resolve across {n} markdown file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

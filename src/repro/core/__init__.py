@@ -15,7 +15,18 @@ from .pruning import (
     masked_update,
     sparsity_of,
 )
-from .quant import QuantizedTensor, quantize, dequantize, fake_quant, qmax
+from .quant import (
+    PACKED_CONTAINER,
+    PackedTensor,
+    QuantizedTensor,
+    quantize,
+    dequantize,
+    fake_quant,
+    pack_int4,
+    pack_quantized,
+    qmax,
+    unpack_int4,
+)
 from .folding import FoldingConfig, UNROLL_LEVELS
 from .cost_model import (
     HWSpec,

@@ -63,7 +63,7 @@ from .cost_model import (
     tile_vmem_bytes,
 )
 from .folding import FoldingConfig
-from .quant import QuantizedTensor
+from .quant import PACKED_CONTAINER, PackedTensor, QuantizedTensor, unpack_int4
 from .sparsity import BlockSparsePattern, CompressedLinear
 
 __all__ = [
@@ -233,6 +233,7 @@ def schedule_hash(pattern: BlockSparsePattern) -> str:
 def tune_key(*, kind: str, M: int, K: int, N: int, dtype,
              backend: Optional[str] = None,
              pattern: Optional[BlockSparsePattern] = None,
+             container: Optional[str] = None,
              leaf: Optional[str] = None) -> str:
     """Cache key: (kind, shape, dtype, backend, pattern-schedule hash).
 
@@ -241,15 +242,22 @@ def tune_key(*, kind: str, M: int, K: int, N: int, dtype,
     ``jax.default_backend()``: CPU timings must never serve TPU lookups.
     ``kind`` carries the op family too: an im2col'd conv tunes under
     ``conv_sparse`` / ``conv_quant``, so it never collides with a linear
-    leaf at the same (M, K, N).  ``leaf`` appends a per-leaf suffix — the
-    override path for two leaves that share the whole base key (same
-    shape, dtype, backend AND schedule) but should be tuned apart; the
-    dispatch lookup consults the per-leaf key first, then the shared one.
+    leaf at the same (M, K, N).  ``container`` names a non-default storage
+    container — bit-packed int4 leaves tag ``int4x2``
+    (:data:`repro.core.quant.PACKED_CONTAINER`) so their tuned entries
+    never cross the int8-container entries: on hardware the two stream
+    different HBM bytes, so a tile choice tuned for one is not evidence
+    for the other.  ``leaf`` appends a per-leaf suffix — the override
+    path for two leaves that share the whole base key (same shape, dtype,
+    backend AND schedule) but should be tuned apart; the dispatch lookup
+    consults the per-leaf key first, then the shared one.
     """
     backend = backend or jax.default_backend()
     sched = schedule_hash(pattern) if pattern is not None else "dense"
     base = (f"{kind}:M{int(M)}:K{int(K)}:N{int(N)}:"
             f"{jnp.dtype(dtype).name}:{backend}:{sched}")
+    if container is not None:
+        base = f"{base}:container={container}"
     return base if leaf is None else f"{base}:leaf={leaf}"
 
 
@@ -397,6 +405,7 @@ def autotune_leaf(
     options: TuneOptions = TuneOptions(),
     table: Optional[TunedTable] = None,
     key: Optional[str] = None,
+    container: Optional[str] = None,
 ) -> TunedConfig:
     """Tune one compiled leaf: roofline-seeded search, measured refinement.
 
@@ -408,11 +417,27 @@ def autotune_leaf(
     the on-disk cache contract).  Off-TPU, interpret-mode Pallas timings
     are never trusted: Pallas candidates keep their roofline score and the
     measured XLA twin wins unless ``options.measure_interpret`` is set.
+
+    Bit-packed leaves (``w_qp``/``w_blkp`` int4x2 containers) tune under a
+    ``container``-tagged key (never shared with int8-container entries);
+    the measurement runner times the unpacked codes — off-TPU that is the
+    only honest signal anyway (interpret timings are untrusted and the XLA
+    twin unpacks at trace time), and on TPU the roofline seed already
+    halves the packed weight traffic.
     """
     family = kind[len("conv_"):] if kind.startswith("conv_") else kind
     if family not in ("sparse", "quant"):
         raise ValueError(f"unknown tune kind {kind!r}")
     M, K_x = int(np.prod(x.shape[:-1], dtype=int)), x.shape[-1]
+    if "w_qp" in leaf:  # packed quant container -> codes for the runner
+        container = container or PACKED_CONTAINER
+        leaf = {**{k: v for k, v in leaf.items() if k != "w_qp"},
+                "w_q": unpack_int4(leaf["w_qp"], K_x, axis=-2)}
+    if "w_blkp" in leaf:  # packed sparse container -> codes for the runner
+        container = container or PACKED_CONTAINER
+        leaf = {**{k: v for k, v in leaf.items() if k != "w_blkp"},
+                "w_blk": unpack_int4(leaf["w_blkp"], pattern.block[0],
+                                     axis=-2)}
     if family == "sparse":
         K, N = pattern.shape
     else:
@@ -420,7 +445,7 @@ def autotune_leaf(
     assert K_x == K, (K_x, K)
     if key is None:
         key = tune_key(kind=kind, M=M, K=K, N=N, dtype=x.dtype,
-                       pattern=pattern)
+                       pattern=pattern, container=container)
     if table is not None:
         hit = table.get(key)
         if hit is not None:
@@ -484,11 +509,11 @@ def _leaf_by_path(tree: Any, path: str) -> Dict[str, Any]:
 def _representative(leaf: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
     """First layer of a stacked leaf — same shape/pattern for the stack."""
     out = {}
-    for k in ("w_blk", "w_q", "w_s"):
+    for k in ("w_blk", "w_blkp", "w_q", "w_qp", "w_s"):
         if k in leaf:
             v = leaf[k]
-            stacked = (k == "w_blk" and v.ndim == 4) or \
-                      (k in ("w_q",) and v.ndim == 3) or \
+            stacked = (k in ("w_blk", "w_blkp") and v.ndim == 4) or \
+                      (k in ("w_q", "w_qp") and v.ndim == 3) or \
                       (k == "w_s" and v.ndim == 2)
             out[k] = v[0] if stacked else v
     return out
@@ -534,22 +559,29 @@ def autotune_model(
         kind = ("conv_" if r.kind == "conv" else "") + r.policy
         M_leaf = M * max(1, int(r.m_scale))
         pattern = cm.patterns.get((K, N)) if r.policy == "sparse" else None
-        key = tune_key(kind=kind, M=M_leaf, K=K, N=N, dtype=x_dtype,
-                       pattern=pattern, leaf=r.name if per_leaf else None)
-        if key in done:
-            continue
-        done.add(key)
         if cm.layers:  # LeNet-style payloads
             leaf = _payload_leaf(cm.layers.get(r.name))
             if leaf is None:
                 continue
         else:
             leaf = _representative(_leaf_by_path(cm.params, r.name))
+        packed = "w_qp" in leaf or "w_blkp" in leaf
+        container = PACKED_CONTAINER if packed else None
+        key = tune_key(kind=kind, M=M_leaf, K=K, N=N, dtype=x_dtype,
+                       pattern=pattern, container=container,
+                       leaf=r.name if per_leaf else None)
+        if key in done:
+            continue
+        done.add(key)
         x = jnp.asarray(rng.normal(size=(M_leaf, K)), x_dtype)
-        w_arr = leaf.get("w_blk", leaf.get("w_q"))
-        wbits = 8 if w_arr.dtype == jnp.int8 else 32
+        if packed:
+            wbits = 4
+        else:
+            w_arr = leaf.get("w_blk", leaf.get("w_q"))
+            wbits = 8 if w_arr.dtype == jnp.int8 else 32
         autotune_leaf(kind, x, leaf, pattern=pattern, weight_bits=wbits,
-                      options=options, table=table, key=key)
+                      options=options, table=table, key=key,
+                      container=container)
     if save:
         table.save(path)
     return table
@@ -561,10 +593,24 @@ def _payload_leaf(payload) -> Optional[Dict[str, jnp.ndarray]]:
     if isinstance(payload, ConvPayload):  # conv leaf: tune its im2col matmul
         payload = payload.payload
     if isinstance(payload, CompressedLinear):
-        leaf = {"w_blk": payload.blocks}
+        if payload.packed and payload.blocks.axis % 3 == 1:
+            # bk-axis container (kernel convention): tune under the
+            # container-tagged key, mirroring the dispatch lookup
+            leaf = {"w_blkp": payload.blocks.data}
+        elif payload.packed:
+            # bn-axis container (odd bk) executes via trace-time unpack,
+            # so it tunes — like it dispatches — under the unpacked key
+            leaf = {"w_blk": payload.block_values()}
+        else:
+            leaf = {"w_blk": payload.blocks}
         if payload.scales is not None:
             leaf["w_s"] = payload.scales
         return leaf
+    if isinstance(payload, PackedTensor):
+        K, N = payload.shape
+        if payload.axis % 2 == 0:
+            return {"w_qp": payload.data, "w_s": payload.scales.reshape(N)}
+        return {"w_q": payload.unpack(), "w_s": payload.scales.reshape(N)}
     if isinstance(payload, QuantizedTensor):
         return {"w_q": payload.values,
                 "w_s": payload.scales.reshape(payload.values.shape[1])}

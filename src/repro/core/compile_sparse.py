@@ -17,6 +17,17 @@ The per-layer policy is chosen by a roofline heuristic over
 :mod:`repro.core.cost_model` (decode-shaped by default: weight streaming
 dominates, so eliminated blocks pay off immediately).
 
+Every **4-bit** leaf — quant and quantised-sparse, linear and conv alike —
+is emitted in a *bit-packed* storage container (two int4 codes per uint8
+byte; :class:`repro.core.quant.PackedTensor` payloads, ``w_qp``/``w_blkp``
+pytree leaves), so the bytes actually held in memory match the stored-bits
+accounting instead of paying an int8 container per code.  Execution is
+bitwise identical to the int8 containers: the kernels decode the nibbles
+in-register, the jnp twins unpack at trace time.  ``LayerReport`` carries
+both accountings (``compressed_bytes`` = int8-container baseline,
+``container_bytes`` = realised), and ``CompressedModel.byte_compression``
+is the honest byte-level ratio.
+
 Convolutions are *the same thing*: a ``(kh, kw, cin, cout)`` conv weight
 is reshaped (statically, at compile time) to the ``(K = cin*kh*kw, N =
 cout)`` im2col matrix — in the patch-feature order of
@@ -54,7 +65,15 @@ from .cost_model import (
 )
 from .dispatch import ConvPayload
 from .folding import FoldingConfig
-from .quant import QuantizedTensor, dequantize, quantize
+from .quant import (
+    PackedTensor,
+    QuantizedTensor,
+    dequantize,
+    pack_int4,
+    pack_quantized,
+    quantize,
+    unpack_int4,
+)
 from .sparsity import (
     BlockSparsePattern,
     CompressedLinear,
@@ -120,11 +139,20 @@ class LayerReport:
     shape: Tuple[int, int]       # im2col (K, N) for conv leaves
     n_layers: int
     dense_bytes: int
-    compressed_bytes: int
+    compressed_bytes: int        # int8-container accounting (codes + scales)
     block_density: float
     element_density: float
     kind: str = "linear"         # "linear" | "conv"
     m_scale: int = 1             # matmul rows per batch row (conv: H_out*W_out)
+    # bytes the payload actually holds in memory: equals compressed_bytes
+    # except for bit-packed 4-bit leaves, whose uint8 containers hold two
+    # codes per byte (None = same as compressed_bytes)
+    container_bytes: Optional[int] = None
+
+    @property
+    def realised_bytes(self) -> int:
+        return self.compressed_bytes if self.container_bytes is None \
+            else self.container_bytes
 
 
 @dataclasses.dataclass
@@ -149,8 +177,18 @@ class CompressedModel:
         metadata exactly once — patterns are shared across same-shape
         leaves, so their bitmap/coord bytes are model-level, not
         per-leaf (LayerReport.compressed_bytes is payload-only for
-        sparse layers)."""
+        sparse layers).  This is the *int8-container* accounting: one
+        byte per stored code regardless of bit-packing — the baseline the
+        byte-level (container) accounting is compared against."""
         return sum(r.compressed_bytes for r in self.report) \
+            + sum(p.meta_bytes for p in self.patterns.values())
+
+    @property
+    def container_storage_bytes(self) -> int:
+        """Bytes the compiled model actually holds in memory: bit-packed
+        4-bit leaves count their uint8 containers (two codes per byte),
+        everything else equals the int8-container accounting."""
+        return sum(r.realised_bytes for r in self.report) \
             + sum(p.meta_bytes for p in self.patterns.values())
 
     @property
@@ -159,7 +197,16 @@ class CompressedModel:
 
     @property
     def compression(self) -> float:
+        """dense fp32 bytes / int8-container bytes (the pre-packing
+        baseline ratio; see :attr:`byte_compression` for realised bytes)."""
         return self.dense_bytes / max(1, self.storage_bytes)
+
+    @property
+    def byte_compression(self) -> float:
+        """dense fp32 bytes / bytes actually held — the honest byte-level
+        ratio the paper's storage claim is judged against.  Equal to
+        :attr:`compression` when nothing is bit-packed."""
+        return self.dense_bytes / max(1, self.container_storage_bytes)
 
     def policy_of(self, name: str) -> str:
         for r in self.report:
@@ -335,19 +382,40 @@ def _quantize_stack(stack: np.ndarray, bits: int):
     return jnp.asarray(np.stack(qs)), jnp.asarray(np.stack(ss).astype(np.float32))
 
 
+def _quant_leaves(stack: np.ndarray, bits: int):
+    """Quantise an (L, K, N) stack into its storage leaves.
+
+    8-bit: ``{"w_q", "w_s"}`` int8 containers.  <=4-bit: the codes are
+    bit-packed two per byte along K into a ``{"w_qp", "w_s"}`` uint8
+    container (the pytree packing convention — K is recovered from the
+    activation at dispatch time, so an odd K just pads one nibble row).
+    Returns (leaves, code_bytes, container_bytes)."""
+    w_q, w_s = _quantize_stack(stack, bits)
+    code_bytes = int(w_q.size + w_s.size * 4)
+    if bits <= 4:
+        w_qp = pack_int4(w_q, axis=1)
+        leaves = {"w_qp": w_qp, "w_s": w_s}
+        return leaves, code_bytes, int(w_qp.size + w_s.size * 4)
+    return {"w_q": w_q, "w_s": w_s}, code_bytes, code_bytes
+
+
 def _compress_stack(
     stack: np.ndarray,
     masks: np.ndarray,
     pattern: BlockSparsePattern,
     rules: CompileRules,
     bits: Optional[int] = None,
-) -> Tuple[Dict[str, jnp.ndarray], int, float]:
+) -> Tuple[Dict[str, jnp.ndarray], int, int, float]:
     """Pack an (L, K, N) stack under the forced shared pattern.
 
-    Returns (leaves, payload_bytes, element_density).  Payload bytes are
-    blocks + scales only: the shared pattern's static metadata is counted
-    once per pattern by CompressedModel.storage_bytes, since one schedule
-    may serve several same-shape leaves."""
+    Returns (leaves, code_bytes, container_bytes, element_density).
+    Payload bytes are blocks + scales only: the shared pattern's static
+    metadata is counted once per pattern by
+    CompressedModel.storage_bytes, since one schedule may serve several
+    same-shape leaves.  <=4-bit quantised blocks are bit-packed two codes
+    per byte along bk into a ``w_blkp`` uint8 leaf (container_bytes then
+    ~halves code_bytes); otherwise leaves are the int8/float ``w_blk``
+    and the two byte counts coincide."""
     L = stack.shape[0]
     bits = rules.quant_bits if bits is None else bits
     block = pattern.block
@@ -367,11 +435,20 @@ def _compress_stack(
         blk_list.append(np.asarray(cl.blocks))
         total_bytes += cl.blocks.size * cl.blocks.dtype.itemsize
         nnz += cl.pattern.nnz
-    leaves: Dict[str, jnp.ndarray] = {"w_blk": jnp.asarray(np.stack(blk_list))}
+    blk = jnp.asarray(np.stack(blk_list))
+    cont_bytes = total_bytes
+    if rules.quantize_sparse and bits <= 4:
+        # bit-packed container: two codes per byte along bk (axis 2 of the
+        # (L, P, bk, bn) stack — the axis the kernel prologue decodes)
+        w_blkp = pack_int4(blk, axis=2)
+        leaves: Dict[str, jnp.ndarray] = {"w_blkp": w_blkp}
+        cont_bytes += int(w_blkp.size) - int(blk.size)
+    else:
+        leaves = {"w_blk": blk}
     if scale_list:
         leaves["w_s"] = jnp.asarray(np.stack(scale_list))
     K, N = pattern.shape
-    return leaves, total_bytes, nnz / (L * K * N)
+    return leaves, total_bytes, cont_bytes, nnz / (L * K * N)
 
 
 @dataclasses.dataclass
@@ -402,7 +479,8 @@ def _iter_linears(tree: Any, path: str = "", in_linear_subtree: bool = False):
     for k, v in tree.items():
         p = f"{path}/{k}" if path else k
         if (in_linear_subtree and k in _LINEAR_KEYS and isinstance(v, dict)
-                and any(lk in v for lk in ("w", "w_q", "w_blk"))):
+                and any(lk in v for lk in ("w", "w_q", "w_qp", "w_blk",
+                                           "w_blkp"))):
             yield p, tree, k
         elif isinstance(v, dict):
             yield from _iter_linears(
@@ -480,7 +558,8 @@ def compile_model(
     for root_name in roots:
         sites.extend(_iter_linears(new_params[root_name], root_name))
     if isinstance(params.get("head"), dict) and any(
-            lk in params["head"] for lk in ("w", "w_q", "w_blk")):
+            lk in params["head"] for lk in ("w", "w_q", "w_qp", "w_blk",
+                                            "w_blkp")):
         sites.append(("head", new_params, "head"))
 
     # Phase A — analyze each leaf: policy + (for sparse) its own bitmap.
@@ -574,13 +653,13 @@ def compile_model(
             else:
                 w = masked_stack if pl.stacked else masked_stack[0]
                 out["w"] = jnp.asarray(w, np.asarray(leaf["w"]).dtype)
-            comp_bytes = dense_bytes
+            comp_bytes = cont_bytes = dense_bytes
         elif pl.policy == "quant":
-            w_q, w_s = _quantize_stack(masked_stack, pl.bits)
+            leaves, comp_bytes, cont_bytes = _quant_leaves(masked_stack,
+                                                           pl.bits)
             if not pl.stacked:
-                w_q, w_s = w_q[0], w_s[0]
-            out["w_q"], out["w_s"] = w_q, w_s
-            comp_bytes = int(w_q.size + w_s.size * 4)
+                leaves = {k: v[0] for k, v in leaves.items()}
+            out.update(leaves)
         else:
             mask = pl.mask
             if mask is None:
@@ -589,8 +668,8 @@ def compile_model(
                                   rules.in_block_density)
                     for wl in pl.stack])
             pattern = patterns[(K, N)]
-            leaves, comp_bytes, ed = _compress_stack(pl.stack, mask,
-                                                     pattern, rules, pl.bits)
+            leaves, comp_bytes, cont_bytes, ed = _compress_stack(
+                pl.stack, mask, pattern, rules, pl.bits)
             bd = pattern.block_density
             if not pl.stacked:
                 leaves = {k: v[0] for k, v in leaves.items()}
@@ -599,7 +678,8 @@ def compile_model(
         report.append(LayerReport(
             name=pl.path, policy=pl.policy, shape=(K, N), n_layers=L,
             dense_bytes=dense_bytes, compressed_bytes=int(comp_bytes),
-            block_density=float(bd), element_density=float(ed)))
+            block_density=float(bd), element_density=float(ed),
+            container_bytes=int(cont_bytes)))
 
     # Honest accounting for weights the pass leaves dense on purpose (MoE
     # routed experts + router: data-dependent dispatch, not lowered) so
@@ -638,7 +718,20 @@ def compile_model(
 
 
 def _decompress_leaf(leaf: Dict[str, Any],
-                     pattern: Optional[BlockSparsePattern], dtype):
+                     pattern: Optional[BlockSparsePattern], dtype,
+                     shape: Optional[Tuple[int, int]] = None):
+    if "w_qp" in leaf:
+        # bit-packed quant container: unpack (exact) then the w_q path.
+        # The logical K comes from the report's (K, N) shape — the
+        # container alone cannot distinguish K from K+1 when K is odd.
+        assert shape is not None, "packed quant leaf without a report shape"
+        w_q = unpack_int4(leaf["w_qp"], shape[0], axis=-2)
+        leaf = {**{k: v for k, v in leaf.items() if k != "w_qp"}, "w_q": w_q}
+    if "w_blkp" in leaf:
+        assert pattern is not None, "compiled sparse leaf without a pattern"
+        w_blk = unpack_int4(leaf["w_blkp"], pattern.block[0], axis=-2)
+        leaf = {**{k: v for k, v in leaf.items() if k != "w_blkp"},
+                "w_blk": w_blk}
     if "w_q" in leaf:
         w_q, w_s = np.asarray(leaf["w_q"]), np.asarray(leaf["w_s"])
         w = w_q.astype(np.float32) * (
@@ -680,7 +773,9 @@ def decompress_model(cm: CompressedModel, *, dtype=jnp.float32) -> Any:
     if cm.layers:  # compile_lenet result: rebuild <name>_w from payloads
         def _payload_dense(payload):
             if isinstance(payload, CompressedLinear):
-                return decompress(payload).astype(dtype)
+                return decompress(payload).astype(dtype)  # packed-aware
+            if isinstance(payload, PackedTensor):
+                return payload.dequantize().astype(dtype)
             if isinstance(payload, QuantizedTensor):
                 return dequantize(payload).astype(dtype)
             return jnp.asarray(payload, dtype)  # masked dense array
@@ -699,10 +794,12 @@ def decompress_model(cm: CompressedModel, *, dtype=jnp.float32) -> Any:
         if isinstance(out.get(root), dict):
             for path, parent, k in _iter_linears(out[root], root):
                 pat = cm.patterns.get(shape_of.get(path))
-                parent[k] = _decompress_leaf(parent[k], pat, dtype)
+                parent[k] = _decompress_leaf(parent[k], pat, dtype,
+                                             shape=shape_of.get(path))
     if isinstance(out.get("head"), dict):
         pat = cm.patterns.get(shape_of.get("head"))
-        out["head"] = _decompress_leaf(out["head"], pat, dtype)
+        out["head"] = _decompress_leaf(out["head"], pat, dtype,
+                                       shape=shape_of.get("head"))
     return out
 
 
@@ -800,13 +897,18 @@ def compile_lenet(
         if policy == "dense":
             if mask is not None:  # masked dense payload (plain array)
                 payload = jnp.asarray(w * mask, jnp.float32)
-            comp_bytes = dense_bytes
+            comp_bytes = cont_bytes = dense_bytes
         elif policy == "quant":
             qt = quantize(w if mask is None else w * mask, bits, axis=1)
-            payload = QuantizedTensor(
+            qt = QuantizedTensor(
                 values=qt.values, scales=qt.scales.reshape(N), axis=1,
                 bits=bits)
-            comp_bytes = K * N + N * 4
+            comp_bytes = cont_bytes = K * N + N * 4
+            if bits <= 4:  # bit-packed int4 container: two codes per byte
+                payload = pack_quantized(qt)
+                cont_bytes = payload.container_bytes
+            else:
+                payload = qt
         else:
             if mask is None:
                 bitmap = _shared_bitmap(w[None], block, rules.block_density)
@@ -815,14 +917,18 @@ def compile_lenet(
                 qt = quantize(w * mask, bits, axis=1)
                 cl = compress(w, mask, block,
                               quant_scales=np.asarray(qt.scales).reshape(-1),
-                              quant_bits=bits)
+                              quant_bits=bits, pack=bits <= 4)
             else:
                 cl = compress(w, mask, block, dtype=rules.dtype)
             payload = cl
             patterns[(K, N)] = cl.pattern
             # payload only; schedule metadata added once per pattern by
-            # CompressedModel.storage_bytes
-            comp_bytes = cl.storage_bytes - cl.pattern.meta_bytes
+            # CompressedModel.storage_bytes / container_storage_bytes
+            cont_bytes = cl.storage_bytes - cl.pattern.meta_bytes
+            comp_bytes = cont_bytes
+            if cl.packed:  # int8-container accounting: one byte per code
+                comp_bytes += int(np.prod(cl.blocks.shape)) \
+                    - int(cl.blocks.data.size)
             bd, ed = cl.pattern.block_density, cl.pattern.element_density
         if payload is not None:
             layers[name] = (ConvPayload(payload=payload, kernel=shape)
@@ -831,7 +937,7 @@ def compile_lenet(
             name=name, policy=policy, shape=(K, N), n_layers=1,
             dense_bytes=dense_bytes, compressed_bytes=int(comp_bytes),
             block_density=float(bd), element_density=float(ed),
-            kind=kind, m_scale=m_scale))
+            kind=kind, m_scale=m_scale, container_bytes=int(cont_bytes)))
     return CompressedModel(params=params, patterns=patterns, report=report,
                            layers=layers)
 

@@ -9,8 +9,22 @@ path per layer:
   -------------------------    ---------------------    -------------------
   dense   {"w"}                —  (XLA matmul IS the engine-free form)
   quant   {"w_q", "w_s"}       quant_matmul kernel      dequant + matmul
+  packed  {"w_qp", "w_s"}      quant_matmul w/ in-      trace-time unpack,
+          (uint8 int4x2)       kernel nibble decode     then dequant+matmul
   gsparse {"w_grp"[, "w_s"]}   —  (factorises into s dense matmuls)
   sparse  {"w_blk"[, "w_s"]}   block_sparse_matmul      static-gather einsum
+  packed  {"w_blkp", "w_s"}    block_sparse_matmul w/   trace-time unpack,
+          (uint8 int4x2)       in-kernel nibble decode  static-gather einsum
+
+The ``w_qp`` / ``w_blkp`` families are the bit-packed int4 storage
+containers (:class:`repro.core.quant.PackedTensor` buffers: two 4-bit
+codes per uint8 byte, packed along the K/bk axis): weights travel
+HBM->VMEM at half the bytes and are decoded in-register in the kernel
+prologue.  Where the packed kernel cannot run (odd K/bk, jnp twin), the
+container is unpacked at trace time into the identical int8 path — the
+numerics are bitwise identical either way, only the realised memory
+footprint differs.  Tuned-table keys carry the container dtype
+(``int4x2``) so tuned entries never cross packed and unpacked leaves.
 
 Selection policy (:func:`resolve` / :class:`DispatchConfig`):
 
@@ -69,7 +83,7 @@ from ..kernels.sparse_matmul.kernel import (
     _sublane,
 )
 from ..kernels.sparse_matmul.ops import sparse_linear
-from .quant import QuantizedTensor
+from .quant import PACKED_CONTAINER, PackedTensor, QuantizedTensor, unpack_int4
 from .sparsity import BlockSparsePattern, CompressedLinear
 
 __all__ = [
@@ -195,13 +209,16 @@ def _use_pallas(cfg: DispatchConfig, eligible: bool) -> bool:
 
 def _tuned_entry(cfg: DispatchConfig, kind: str, M: int, K: int, N: int,
                  x_dtype, pattern: Optional[BlockSparsePattern] = None,
-                 leaf: Optional[str] = None):
+                 leaf: Optional[str] = None,
+                 container: Optional[str] = None):
     """Trace-time tuned-table lookup (None when no table / no entry).
 
     When the caller names its ``leaf``, a per-leaf entry (same base key
     suffixed ``:leaf=<name>``) takes precedence over the shared per-shape
     entry — two leaves that collide on (kind, M, K, N, dtype, backend,
-    schedule) can still be tuned apart.
+    schedule) can still be tuned apart.  ``container`` tags bit-packed
+    storage (``int4x2``) so packed and unpacked leaves never share tuned
+    entries — on hardware they stream different HBM bytes.
     """
     if cfg.tuned is None:
         return None
@@ -209,11 +226,11 @@ def _tuned_entry(cfg: DispatchConfig, kind: str, M: int, K: int, N: int,
     if leaf is not None:
         entry = cfg.tuned.get(tune_key(kind=kind, M=M, K=K, N=N,
                                        dtype=x_dtype, pattern=pattern,
-                                       leaf=leaf))
+                                       container=container, leaf=leaf))
         if entry is not None:
             return entry
     return cfg.tuned.get(tune_key(kind=kind, M=M, K=K, N=N, dtype=x_dtype,
-                                  pattern=pattern))
+                                  pattern=pattern, container=container))
 
 
 def _pick_backend(cfg: DispatchConfig, entry, eligible: bool) -> bool:
@@ -318,8 +335,17 @@ def _quant_apply_pallas(p: Params, x, cfg: DispatchConfig, out_dtype,
     Tiles come from the tuned entry when present, else the defaults; tiles
     fall back to whole-dim blocks when 128 does not divide — legal only in
     interpret mode, which is the sole way here for such shapes (_use_pallas
-    gates compiled execution on quant_kernel_eligible)."""
-    K, N = p["w_q"].shape
+    gates compiled execution on quant_kernel_eligible).  A ``w_qp`` leaf
+    (bit-packed int4 container, K axis, even K — guaranteed by the caller)
+    rides the kernel's packed prologue: half the weight bytes, identical
+    numerics."""
+    packed = "w_qp" in p
+    if packed:
+        w, N = p["w_qp"], int(p["w_qp"].shape[1])
+        K = x.shape[-1]
+    else:
+        w = p["w_q"]
+        K, N = w.shape
     lead = x.shape[:-1]
     xm = x.reshape(-1, K)
     bm = bn = bk = None
@@ -331,9 +357,10 @@ def _quant_apply_pallas(p: Params, x, cfg: DispatchConfig, out_dtype,
     if bk is None or K % bk:
         bk = 128 if K % 128 == 0 else K
     xm, M = _pad_rows(xm, bm)
-    y = quant_matmul(xm, p["w_q"], p["w_s"].reshape(N), bias,
+    y = quant_matmul(xm, w, p["w_s"].reshape(N), bias,
                      bm=bm, bn=bn, bk=bk, activation=activation,
-                     out_dtype=out_dtype, interpret=cfg.run_interpret)[:M]
+                     out_dtype=out_dtype, interpret=cfg.run_interpret,
+                     packed=packed)[:M]
     return y.reshape(*lead, N)
 
 
@@ -387,6 +414,30 @@ def linear_dispatch(
         y = _quant_apply_jnp(p, x, compute_dtype)
         return _epilogue(y, bias, activation, compute_dtype)
 
+    if "w_qp" in p:
+        # bit-packed int4 quant container: uint8 (ceil(K/2), N) along K.
+        # The logical K comes from the activation (the container cannot
+        # distinguish K from K+1 when K is odd).
+        wp = p["w_qp"]
+        K, N = x.shape[-1], int(wp.shape[-1])
+        if wp.shape[-2] != (K + 1) // 2:
+            raise ValueError(
+                f"packed quant container rows {wp.shape[-2]} do not match "
+                f"activation K={K} (expected ceil(K/2)={(K + 1) // 2}) — "
+                "w_qp leaves are packed two codes per byte along K")
+        entry = _tuned_entry(cfg, tag + "quant", _lead_rows(x), K, N,
+                             x.dtype, leaf=leaf, container=PACKED_CONTAINER)
+        if _pick_backend(cfg, entry, quant_kernel_eligible(K, N)):
+            if K % 2 == 0:  # in-kernel nibble decode: half the HBM bytes
+                return _quant_apply_pallas(p, x, cfg, compute_dtype, bias,
+                                           activation, entry)
+            p2 = {"w_q": unpack_int4(wp, K, axis=-2), "w_s": p["w_s"]}
+            return _quant_apply_pallas(p2, x, cfg, compute_dtype, bias,
+                                       activation, entry)
+        p2 = {"w_q": unpack_int4(wp, K, axis=-2), "w_s": p["w_s"]}
+        y = _quant_apply_jnp(p2, x, compute_dtype)
+        return _epilogue(y, bias, activation, compute_dtype)
+
     if "w_grp" in p:
         y = _gsparse_apply_jnp(p, x, compute_dtype)
         return _epilogue(y, bias, activation, compute_dtype)
@@ -414,6 +465,47 @@ def linear_dispatch(
         y = _sparse_apply_jnp(p, x, pattern, compute_dtype)
         return _epilogue(y, bias, activation, compute_dtype)
 
+    if "w_blkp" in p:
+        # bit-packed int4 sparse container: uint8 (P, ceil(bk/2), bn)
+        # along the bk axis; the static pattern supplies the logical bk.
+        if pattern is None:
+            raise ValueError(
+                "sparse linear needs its static pattern — pass the "
+                "compile_sparse pattern table through forward/decode_step "
+                "(patterns=cm.patterns) or a cfg-derived shared pattern")
+        K, N = pattern.shape
+        bk, bn = pattern.block
+        wp = p["w_blkp"]
+        if wp.shape[-2] != (bk + 1) // 2 or wp.shape[-1] != bn:
+            raise ValueError(
+                f"packed sparse container block {tuple(wp.shape[-2:])} does "
+                f"not match the pattern block {(bk, bn)} (expected "
+                f"({(bk + 1) // 2}, {bn})) — w_blkp leaves are packed two "
+                "codes per byte along bk")
+        entry = _tuned_entry(cfg, tag + "sparse", _lead_rows(x), K, N,
+                             x.dtype, pattern, leaf=leaf,
+                             container=PACKED_CONTAINER)
+        use_k = _pick_backend(
+            cfg, entry, sparse_kernel_eligible(pattern, wp.dtype))
+        bm = cfg.bm if cfg.bm is not None else \
+            (entry.bm if entry is not None else None)
+        if use_k:
+            # sparse_linear decodes in-kernel for even bk, else unpacks at
+            # trace time and runs the identical int8 kernel path
+            cl = CompressedLinear(
+                pattern=pattern,
+                blocks=PackedTensor(data=wp, shape=(int(wp.shape[0]), bk, bn),
+                                    axis=1, bits=4),
+                scales=p.get("w_s"), bits=4)
+            return sparse_linear(
+                x, cl, bm=_effective_bm(bm, x.dtype), bias=bias,
+                activation=activation, out_dtype=compute_dtype,
+                interpret=cfg.run_interpret, use_kernel=True)
+        p2 = {k: v for k, v in p.items() if k != "w_blkp"}
+        p2["w_blk"] = unpack_int4(wp, bk, axis=-2)
+        y = _sparse_apply_jnp(p2, x, pattern, compute_dtype)
+        return _epilogue(y, bias, activation, compute_dtype)
+
     raise ValueError(f"unknown linear leaves {list(p)}")
 
 
@@ -428,9 +520,10 @@ def payload_dispatch(
     leaf: Optional[str] = None,
     op: str = "linear",
 ) -> jnp.ndarray:
-    """Dispatch over a compile_lenet layer payload (CompressedLinear /
-    QuantizedTensor / masked-dense array) — the per-name analogue of
-    :func:`linear_dispatch` for non-pytree models.
+    """Dispatch over a compile_lenet layer payload (CompressedLinear —
+    optionally bit-packed — / PackedTensor / QuantizedTensor / masked-dense
+    array) — the per-name analogue of :func:`linear_dispatch` for
+    non-pytree models.
 
     ``compute_dtype`` defaults to ``x.dtype`` on every payload family,
     exactly like :func:`linear_dispatch` — bf16 activations stay bf16
@@ -446,7 +539,14 @@ def payload_dispatch(
             "kernel geometry the im2col lowering needs), not "
             "payload_dispatch")
     if isinstance(payload, CompressedLinear):
-        p: Params = {"w_blk": payload.blocks}
+        if payload.packed and payload.blocks.axis % 3 == 1:
+            # bk-axis container: the kernel's packed prologue understands it
+            p: Params = {"w_blkp": payload.blocks.data}
+        elif payload.packed:
+            # bn-axis container (odd bk): trace-time unpack, identical codes
+            p = {"w_blk": payload.block_values()}
+        else:
+            p = {"w_blk": payload.blocks}
         if payload.scales is not None:
             p["w_s"] = payload.scales
         if bias is not None:
@@ -454,6 +554,16 @@ def payload_dispatch(
         return linear_dispatch(p, x, pattern=payload.pattern, dispatch=cfg,
                                compute_dtype=compute_dtype,
                                activation=activation, leaf=leaf, op=op)
+    if isinstance(payload, PackedTensor):
+        K, N = payload.shape
+        if payload.axis % len(payload.shape) == 0:
+            p = {"w_qp": payload.data, "w_s": payload.scales.reshape(N)}
+        else:  # N-axis container (odd K): trace-time unpack, same codes
+            p = {"w_q": payload.unpack(), "w_s": payload.scales.reshape(N)}
+        if bias is not None:
+            p["b"] = bias
+        return linear_dispatch(p, x, dispatch=cfg, activation=activation,
+                               compute_dtype=compute_dtype, leaf=leaf, op=op)
     if isinstance(payload, QuantizedTensor):
         K, N = payload.values.shape
         p = {"w_q": payload.values, "w_s": payload.scales.reshape(N)}
@@ -478,7 +588,8 @@ class ConvPayload:
     static conv geometry the im2col lowering needs.
 
     ``payload`` is exactly the linear payload family compile_sparse emits
-    (CompressedLinear / QuantizedTensor / masked-dense ``(K, N)`` array)
+    (CompressedLinear — optionally bit-packed — / PackedTensor /
+    QuantizedTensor / masked-dense ``(K, N)`` array)
     over the im2col weight matrix — ``(kh, kw, cin, cout)`` reshaped to
     ``(K = cin*kh*kw, N = cout)`` in the *patch feature order* of
     ``lax.conv_general_dilated_patches`` (cin major, then kh, kw).

@@ -4,17 +4,40 @@
 * ``fake_quant``                — straight-through-estimator fake quant for
   QAT / the paper's re-sparse fine-tuning (prune -> fine-tune with the
   quantised datapath in the loss).
+* ``PackedTensor`` / ``pack_int4`` / ``unpack_int4`` — bit-packed int4
+  storage containers: two 4-bit codes per byte in a uint8 buffer, so the
+  *realised* memory footprint of a 4-bit leaf matches the stored-bits
+  accounting instead of paying an int8 container per code.  Packing is an
+  exact round trip on codes in [-8, 7] (ours are [-7, 7] by symmetric
+  quantisation), so packed and unpacked execution are bitwise identical.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["QuantizedTensor", "quantize", "dequantize", "fake_quant", "qmax"]
+__all__ = [
+    "PACKED_CONTAINER",
+    "PackedTensor",
+    "QuantizedTensor",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "pack_int4",
+    "pack_quantized",
+    "pick_pack_axis",
+    "qmax",
+    "unpack_int4",
+]
+
+# Container-dtype tag for packed int4 payloads (two codes per uint8 byte).
+# Autotune cache keys carry it so tuned entries never cross packed and
+# unpacked containers — on real hardware they have different HBM traffic.
+PACKED_CONTAINER = "int4x2"
 
 
 def qmax(bits: int) -> int:
@@ -48,6 +71,157 @@ def dequantize(qt: QuantizedTensor) -> jnp.ndarray:
     shape = [1] * qt.values.ndim
     shape[qt.axis] = qt.values.shape[qt.axis]
     return qt.values.astype(jnp.float32) * qt.scales.reshape(shape)
+
+
+# ------------------------------------------------------- int4 bit-packing
+
+
+def pack_int4(values: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Pack int4 codes (int8 storage, range [-8, 7]) two-per-byte.
+
+    Adjacent pairs along ``axis`` share one uint8: the even index is the
+    low nibble, the odd index the high nibble.  An odd-length axis is
+    zero-padded by one code (the container then holds ``ceil(n/2)`` bytes;
+    :func:`unpack_int4` slices the pad back off).  Pure jnp — usable on
+    host arrays, under jit, and inside Pallas kernel bodies.
+    """
+    v = jnp.asarray(values)
+    axis = axis % v.ndim
+    if v.shape[axis] % 2:
+        pad = [(0, 0)] * v.ndim
+        pad[axis] = (0, 1)
+        v = jnp.pad(v, pad)
+    nib = jnp.bitwise_and(v.astype(jnp.uint8), jnp.uint8(0x0F))
+    lo = jax.lax.slice_in_dim(nib, 0, None, stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(nib, 1, None, stride=2, axis=axis)
+    return jnp.bitwise_or(lo, jnp.left_shift(hi, jnp.uint8(4)))
+
+
+def unpack_int4(packed: jnp.ndarray, length: int, axis: int = 0) -> jnp.ndarray:
+    """Exact inverse of :func:`pack_int4`: uint8 container -> int8 codes.
+
+    ``length`` is the logical (pre-padding) size of ``axis``.  Nibbles are
+    sign-extended via ``(n ^ 8) - 8``, so the full int4 range [-8, 7]
+    round-trips bit-exactly.
+    """
+    p = jnp.asarray(packed)
+    axis = axis % p.ndim
+    lo = jnp.bitwise_and(p, jnp.uint8(0x0F))
+    hi = jnp.right_shift(p, jnp.uint8(4))
+    both = jnp.stack([lo, hi], axis=axis + 1)      # (..., n/2, 2, ...)
+    shape = list(p.shape)
+    shape[axis] *= 2
+    both = both.reshape(shape)                     # interleave: lo even, hi odd
+    codes = jnp.bitwise_xor(both, jnp.uint8(8)).astype(jnp.int8) - jnp.int8(8)
+    if int(length) != shape[axis]:
+        codes = jax.lax.slice_in_dim(codes, 0, int(length), axis=axis)
+    return codes
+
+
+def pick_pack_axis(shape: Tuple[int, ...], preferred: int = 0) -> int:
+    """Packing axis choice: ``preferred`` when its length is even, else the
+    first even-length axis (exact halving, no pad byte per row), else
+    ``preferred`` with one pad code."""
+    preferred = preferred % len(shape)
+    if shape[preferred] % 2 == 0:
+        return preferred
+    for i, n in enumerate(shape):
+        if n % 2 == 0:
+            return i
+    return preferred
+
+
+@dataclasses.dataclass
+class PackedTensor:
+    """Bit-packed int4 storage container — a first-class payload family.
+
+    ``data`` is the uint8 buffer (two codes per byte along ``axis``);
+    ``shape`` is the logical int4-code shape the buffer unpacks to.  For a
+    quantised-linear payload, ``scales`` carries the per-output-channel
+    dequant scales (shape ``(N,)`` for a logical ``(K, N)`` weight) — the
+    packed analogue of :class:`QuantizedTensor`.  Inside a
+    :class:`repro.core.sparsity.CompressedLinear`, ``scales`` stays None
+    (the CompressedLinear holds them, exactly as on the int8 path).
+
+    Registered as a pytree node, so packed leaves ride jit/scan/tree_map
+    and :mod:`repro.train.checkpoint` round-trips them bit-exactly.
+    """
+
+    data: jnp.ndarray                     # uint8 container
+    shape: Tuple[int, ...]                # logical int4-code shape
+    axis: int = 0                         # packed axis
+    scales: Optional[jnp.ndarray] = None  # (N,) f32 per-out-channel
+    bits: int = 4
+
+    def __post_init__(self):
+        self.shape = tuple(int(s) for s in self.shape)
+        expect = list(self.shape)
+        ax = self.axis % len(expect)
+        expect[ax] = (expect[ax] + 1) // 2
+        if tuple(self.data.shape) != tuple(expect):
+            raise ValueError(
+                f"PackedTensor container shape {tuple(self.data.shape)} does "
+                f"not match logical shape {self.shape} packed along axis "
+                f"{self.axis} (expected {tuple(expect)})")
+
+    @property
+    def container_bytes(self) -> int:
+        """Bytes actually held in memory (buffer + scales)."""
+        b = int(self.data.size) * 1
+        if self.scales is not None:
+            b += int(self.scales.size * self.scales.dtype.itemsize)
+        return b
+
+    def unpack(self) -> jnp.ndarray:
+        """Logical int8 codes (exact round trip)."""
+        return unpack_int4(self.data, self.shape[self.axis % len(self.shape)],
+                           axis=self.axis)
+
+    def dequantize(self) -> jnp.ndarray:
+        """f32 weight: codes x per-output-channel scales (last axis)."""
+        if self.scales is None:
+            raise ValueError("PackedTensor has no scales to dequantize with")
+        return self.unpack().astype(jnp.float32) \
+            * self.scales.reshape((1,) * (len(self.shape) - 1) + (-1,))
+
+    def to_quantized(self) -> "QuantizedTensor":
+        """Unpacked :class:`QuantizedTensor` view (int8 container)."""
+        if self.scales is None:
+            raise ValueError("PackedTensor has no scales")
+        return QuantizedTensor(values=self.unpack(), scales=self.scales,
+                               axis=len(self.shape) - 1, bits=self.bits)
+
+
+def _pt_flatten(pt: PackedTensor):
+    return (pt.data, pt.scales), (pt.shape, pt.axis, pt.bits)
+
+
+def _pt_unflatten(aux, children):
+    shape, axis, bits = aux
+    data, scales = children
+    pt = object.__new__(PackedTensor)  # skip shape check: leaves may be
+    pt.data, pt.scales = data, scales  # tracers/None during tree transforms
+    pt.shape, pt.axis, pt.bits = shape, axis, bits
+    return pt
+
+
+jax.tree_util.register_pytree_node(PackedTensor, _pt_flatten, _pt_unflatten)
+
+
+def pack_quantized(qt: QuantizedTensor, preferred_axis: int = 0) -> PackedTensor:
+    """Pack a 4-bit :class:`QuantizedTensor` into its bit-packed container.
+
+    The packing axis follows :func:`pick_pack_axis` (prefer an even-length
+    axis so the container is exactly half the int8 bytes).  Scales must be
+    per-*last*-axis (out-channel), which is how every 4-bit leaf in this
+    repo is quantised.
+    """
+    if qt.bits > 4:
+        raise ValueError(f"pack_quantized needs <=4-bit codes, got {qt.bits}")
+    ax = pick_pack_axis(qt.values.shape, preferred_axis)
+    return PackedTensor(
+        data=pack_int4(qt.values, axis=ax), shape=tuple(qt.values.shape),
+        axis=ax, scales=qt.scales.reshape(qt.values.shape[-1]), bits=qt.bits)
 
 
 def fake_quant(w: jnp.ndarray, bits: int = 8, axis: int = -1) -> jnp.ndarray:

@@ -19,10 +19,12 @@ Both levels are compile-time constants (host numpy), never traced values.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
+
+from .quant import PackedTensor, pack_int4, pick_pack_axis
 
 __all__ = [
     "BlockSparsePattern",
@@ -44,9 +46,11 @@ class BlockSparsePattern:
     shape:        (K, N) logical dense shape.
     block:        (bm, bn) tile shape; K % bm == 0 and N % bn == 0.
     bitmap:       bool ndarray (K//bm, N//bn); True = block present.
-    block_rows/block_cols: int32 ndarrays of length n_present — coordinates
-                  of present blocks in row-major order.  These are the
-                  *static schedule*: kernels iterate exactly this list.
+    block_rows/block_cols: integer ndarrays of length n_present (int16 for
+                  any realistic grid, int32 above 2**15 rows/cols) —
+                  coordinates of present blocks in row-major order.  These
+                  are the *static schedule*: kernels iterate exactly this
+                  list.
     nnz:          element-level nonzero count (for compression accounting).
     """
 
@@ -101,12 +105,17 @@ def pattern_from_bitmap(
     ``nnz`` defaults to full present blocks (no element-level pruning)."""
     bitmap = np.asarray(bitmap, dtype=bool)
     rows, cols = np.nonzero(bitmap)
+    # int16 coordinates: the schedule indexes block *grids* (dims far below
+    # 2**15 for any realistic shape), and meta_bytes accounts what is
+    # actually stored — half the int32 width.  Fall back to int32 for
+    # absurdly large grids rather than silently overflowing.
+    cdt = np.int16 if max(bitmap.shape, default=0) < 2 ** 15 else np.int32
     return BlockSparsePattern(
         shape=tuple(shape),
         block=tuple(block),
         bitmap=bitmap,
-        block_rows=rows.astype(np.int32),
-        block_cols=cols.astype(np.int32),
+        block_rows=rows.astype(cdt),
+        block_cols=cols.astype(cdt),
         nnz=int(bitmap.sum()) * block[0] * block[1] if nnz is None else nnz,
     )
 
@@ -132,16 +141,35 @@ class CompressedLinear:
 
     If ``scales`` is not None the blocks are stored as int8 and
     ``scales[n]`` is the per-output-channel dequant scale (shape (N,)).
+
+    4-bit blocks may additionally be *bit-packed*: ``blocks`` is then a
+    :class:`repro.core.quant.PackedTensor` (uint8 container, two codes per
+    byte, logical shape ``(n_present, bk, bn)``) and ``scales`` stays on
+    this dataclass exactly like the int8 path.  ``block_values()`` is the
+    container-agnostic accessor (unpacks when needed — bit-exact).
     """
 
     pattern: BlockSparsePattern
-    blocks: jnp.ndarray  # (n_present, bm, bn)  bf16/f32 or int8
+    blocks: Union[jnp.ndarray, PackedTensor]  # (n_present, bm, bn)
     scales: Optional[jnp.ndarray] = None  # (N,) f32 per-out-channel
     bits: int = 16  # storage bits per element (for compression accounting)
 
     @property
+    def packed(self) -> bool:
+        return isinstance(self.blocks, PackedTensor)
+
+    def block_values(self) -> jnp.ndarray:
+        """Logical int8/float block values regardless of container."""
+        return self.blocks.unpack() if self.packed else self.blocks
+
+    @property
     def storage_bytes(self) -> int:
-        b = self.blocks.size * self.blocks.dtype.itemsize
+        """Bytes actually held: the container (packed: half the codes),
+        scales, and the static schedule metadata."""
+        if self.packed:
+            b = self.blocks.container_bytes
+        else:
+            b = self.blocks.size * self.blocks.dtype.itemsize
         if self.scales is not None:
             b += self.scales.size * self.scales.dtype.itemsize
         return int(b) + self.pattern.meta_bytes
@@ -156,6 +184,7 @@ def compress(
     quant_scales: Optional[np.ndarray] = None,
     quant_bits: int = 8,
     dtype=jnp.bfloat16,
+    pack: bool = False,
 ) -> CompressedLinear:
     """Pack a masked dense weight into the static block-compacted format.
 
@@ -166,6 +195,13 @@ def compress(
     shared across a layer stack, from ``compile_sparse``): the mask's own
     block bitmap must be a subset of it; blocks the mask never touches are
     packed as all-zero tiles so stacked leaves stay shape-uniform.
+
+    ``pack=True`` (4-bit quantised blocks only) bit-packs the codes two
+    per byte into a uint8 container (:class:`repro.core.quant.PackedTensor`
+    over the ``(n_present, bk, bn)`` blocks) — half the realised bytes,
+    bitwise-identical execution.  The packing axis prefers the block's bk
+    axis (the kernels decode it in-register), falling back to bn when bk
+    is odd so the container still halves exactly.
     """
     weight = np.asarray(weight)
     mask = np.asarray(mask, dtype=bool)
@@ -189,12 +225,39 @@ def compress(
         col_scale = scales[None, None, :].reshape(1, 1, N)
         col_scale = col_scale.reshape(N // bn, 1, bn)[pattern.block_cols]
         q = np.clip(np.rint(packed / np.maximum(col_scale, 1e-12)), -qmax, qmax)
+        codes = q.astype(np.int8)
+        if pack:
+            if quant_bits > 4:
+                raise ValueError(
+                    f"pack=True needs <=4-bit codes, got quant_bits="
+                    f"{quant_bits} — int8 containers already hold 8-bit "
+                    "codes exactly")
+            # prefer the bk axis (axis 1 of (P, bk, bn)) — the kernel
+            # prologue unpacks along it; bn when bk is odd (exact
+            # halving, trace-time unpack); both odd: pad one nibble row
+            # per block along bk.  Never the P axis — a byte must not
+            # pair codes from two different blocks.
+            if codes.shape[1] % 2 == 0:
+                ax = 1
+            elif codes.shape[2] % 2 == 0:
+                ax = 2
+            else:
+                ax = 1
+            blocks = PackedTensor(
+                data=jnp.asarray(np.asarray(pack_int4(codes, axis=ax))),
+                shape=codes.shape, axis=ax, bits=quant_bits)
+        else:
+            blocks = jnp.asarray(codes)
         return CompressedLinear(
             pattern=pattern,
-            blocks=jnp.asarray(q.astype(np.int8)),
+            blocks=blocks,
             scales=jnp.asarray(scales),
             bits=quant_bits,
         )
+    if pack:
+        raise ValueError(
+            "pack=True needs quantised (<=4-bit) blocks — float blocks "
+            "have no sub-byte container")
     return CompressedLinear(
         pattern=pattern, blocks=jnp.asarray(packed, dtype=dtype), bits=16
     )
@@ -204,7 +267,7 @@ def decompress(cl: CompressedLinear) -> jnp.ndarray:
     """Reconstruct the dense (K, N) weight (oracle / testing path)."""
     K, N = cl.pattern.shape
     bm, bn = cl.pattern.block
-    blocks = cl.blocks
+    blocks = cl.block_values()  # container-agnostic (unpacks bit-packed)
     if cl.scales is not None:
         col_scale = cl.scales.reshape(N // bn, bn)[cl.pattern.block_cols]  # (P, bn)
         blocks = blocks.astype(jnp.float32) * col_scale[:, None, :]

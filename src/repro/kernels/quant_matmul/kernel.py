@@ -24,13 +24,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..sparse_matmul.kernel import ACTIVATIONS, _check_activation
+from ..sparse_matmul.kernel import ACTIVATIONS, _check_activation, _unpack_int4_rows
 
 __all__ = ["quant_matmul"]
 
 
 def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
-            activation: Optional[str]):
+            activation: Optional[str], packed: bool = False):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -38,7 +38,12 @@ def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...].astype(jnp.float32)
-    w = w_ref[...].astype(jnp.float32)
+    w = w_ref[...]
+    if packed:
+        # bit-packed int4 container: (bk/2, bn) uint8 tile decoded to
+        # (bk, bn) int8 codes in-register — HBM->VMEM at half the bytes
+        w = _unpack_int4_rows(w)
+    w = w.astype(jnp.float32)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
@@ -52,11 +57,12 @@ def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bn", "bk", "interpret", "out_dtype", "activation"),
+    static_argnames=("bm", "bn", "bk", "interpret", "out_dtype", "activation",
+                     "packed"),
 )
 def quant_matmul(
     x: jnp.ndarray,      # (M, K) f32/bf16
-    w_q: jnp.ndarray,    # (K, N) int8
+    w_q: jnp.ndarray,    # (K, N) int8 — or (K/2, N) uint8 when packed
     scales: jnp.ndarray, # (N,)   f32
     bias: Optional[jnp.ndarray] = None,  # (N,) f32 or None
     *,
@@ -66,22 +72,40 @@ def quant_matmul(
     interpret: bool = False,
     out_dtype=jnp.float32,
     activation: Optional[str] = None,
+    packed: bool = False,
 ) -> jnp.ndarray:
-    """y = act(x @ dequant(W) + b) in one launch (epilogue fused at emit)."""
+    """y = act(x @ dequant(W) + b) in one launch (epilogue fused at emit).
+
+    ``packed=True`` takes the bit-packed int4 container: ``w_q`` is uint8
+    ``(K/2, N)`` with two codes per byte along K (K and bk must be even);
+    the kernel decodes in-register, so numerics are bitwise identical to
+    the int8 container — only the weight bytes streamed from HBM halve.
+    """
     _check_activation(activation)
     M, K = x.shape
-    K2, N = w_q.shape
+    if packed:
+        if w_q.dtype != jnp.uint8:
+            raise ValueError(
+                f"packed=True needs a uint8 int4x2 container, got {w_q.dtype}")
+        if K % 2 or bk % 2:
+            raise ValueError(
+                f"packed quant_matmul needs even K and bk, got K={K} bk={bk}")
+        K2, N = w_q.shape[0] * 2, w_q.shape[1]
+    else:
+        K2, N = w_q.shape
     assert K == K2 and scales.shape == (N,)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
     if bias is None:
         bias = jnp.zeros((N,), jnp.float32)
     n_k = K // bk
+    w_bk = bk // 2 if packed else bk
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, activation=activation),
+        functools.partial(_kernel, n_k=n_k, activation=activation,
+                          packed=packed),
         grid=(M // bm, N // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
-            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((w_bk, bn), lambda m, n, k: (k, n)),
             pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
             pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
         ],

@@ -1,18 +1,19 @@
-"""Public op: quantised linear over a QuantizedTensor weight."""
+"""Public op: quantised linear over a QuantizedTensor (or bit-packed
+PackedTensor) weight."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax.numpy as jnp
 
-from ...core.quant import QuantizedTensor
+from ...core.quant import PackedTensor, QuantizedTensor
 from .kernel import quant_matmul
 from .ref import quant_matmul_ref
 
 
 def quant_linear(
     x: jnp.ndarray,
-    qt: QuantizedTensor,
+    qt: Union[QuantizedTensor, PackedTensor],
     *,
     bm: int = 128,
     bn: int = 128,
@@ -25,22 +26,38 @@ def quant_linear(
 ) -> jnp.ndarray:
     """y = act(x @ dequant(W) + b). x may be (..., K); bias/activation ride
     the kernel's fused emit-step epilogue (f32, same formulas as the jnp
-    oracle)."""
-    K, N = qt.values.shape
+    oracle).
+
+    A :class:`PackedTensor` weight (int4 codes two per byte) rides the
+    kernel's packed prologue when packed along an even K with an even bk
+    tile; otherwise it is unpacked at trace time into the identical int8
+    path — bitwise-equal numerics either way.
+    """
+    packed_kernel = False
+    if isinstance(qt, PackedTensor):
+        K, N = qt.shape
+        if use_kernel and qt.axis % len(qt.shape) == 0 and K % 2 == 0 \
+                and bk % 2 == 0:
+            packed_kernel = True
+            values, scales = qt.data, qt.scales.reshape(N)
+        else:
+            qt = qt.to_quantized()
+    if not packed_kernel:
+        K, N = qt.values.shape
+        values, scales = qt.values, qt.scales.reshape(N)
     lead = x.shape[:-1]
     xm = x.reshape(-1, K)
-    scales = qt.scales.reshape(N)
     if use_kernel:
         M = xm.shape[0]
         pad = (-M) % bm
         if pad:
             xm = jnp.pad(xm, ((0, pad), (0, 0)))
-        y = quant_matmul(xm, qt.values, scales, bias, bm=bm, bn=bn, bk=bk,
+        y = quant_matmul(xm, values, scales, bias, bm=bm, bn=bn, bk=bk,
                          activation=activation, out_dtype=out_dtype,
-                         interpret=interpret)
+                         interpret=interpret, packed=packed_kernel)
         if pad:
             y = y[:M]
     else:
-        y = quant_matmul_ref(xm, qt.values, scales, bias=bias,
+        y = quant_matmul_ref(xm, values, scales, bias=bias,
                              activation=activation, out_dtype=out_dtype)
     return y.reshape(*lead, N)

@@ -62,8 +62,24 @@ def _check_activation(activation: Optional[str]) -> None:
             f"supported: {sorted(ACTIVATIONS)} or None")
 
 
+def _unpack_int4_rows(w: jnp.ndarray) -> jnp.ndarray:
+    """(bk/2, bn) uint8 container -> (bk, bn) int8 codes, in-register.
+
+    Two int4 codes per byte along the sublane (row) axis: even logical row
+    = low nibble, odd = high nibble; sign-extension via ``(n ^ 8) - 8``
+    (exact for the full [-8, 7] range).  This is the kernel-prologue twin
+    of :func:`repro.core.quant.unpack_int4` — duplicated here (6 lines)
+    so the kernel modules stay import-cycle-free from ``repro.core``;
+    tests pin the two bit-exact against each other.
+    """
+    lo = jnp.bitwise_and(w, jnp.uint8(0x0F))
+    hi = jnp.right_shift(w, jnp.uint8(4))
+    both = jnp.stack([lo, hi], axis=1).reshape(w.shape[0] * 2, w.shape[1])
+    return jnp.bitwise_xor(both, jnp.uint8(8)).astype(jnp.int8) - jnp.int8(8)
+
+
 def _kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
-            activation: Optional[str]):
+            activation: Optional[str], packed: bool = False):
     """meta_ref rows: [row, col, packed_idx, is_first, is_last] per step."""
     p = pl.program_id(1)
     is_first = meta_ref[3, p]
@@ -75,6 +91,10 @@ def _kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
 
     x = x_ref[...]
     w = w_ref[0]
+    if packed:
+        # bit-packed int4 container: weights travelled HBM->VMEM at half
+        # the bytes; decode to int8 codes in-register before the dequant
+        w = _unpack_int4_rows(w)
     if w.dtype == jnp.int8:
         # fused dequant: scale is per output channel (bn,)
         w = w.astype(jnp.float32) * scale_ref[0].astype(jnp.float32)[None, :]
@@ -109,7 +129,7 @@ def _schedule(block_rows: np.ndarray, block_cols: np.ndarray):
 @functools.partial(
     jax.jit,
     static_argnames=("block_rows", "block_cols", "block", "n_cols", "bm",
-                     "interpret", "out_dtype", "activation"),
+                     "interpret", "out_dtype", "activation", "packed"),
 )
 def _call(
     x: jnp.ndarray,
@@ -125,15 +145,16 @@ def _call(
     interpret: bool,
     out_dtype,
     activation: Optional[str],
+    packed: bool = False,
 ):
     M, K = x.shape
     bk, bn = block
     N = n_cols * bn
-    rows, cols, packed, first, last = _schedule(
+    rows, cols, packed_idx, first, last = _schedule(
         np.asarray(block_rows, np.int32), np.asarray(block_cols, np.int32)
     )
     P = rows.size
-    meta = jnp.asarray(np.stack([rows, cols, packed, first, last]))  # (5, P)
+    meta = jnp.asarray(np.stack([rows, cols, packed_idx, first, last]))  # (5, P)
 
     if scales is None:
         scales = jnp.ones((n_cols, bn), jnp.float32)  # unused for float blocks
@@ -145,7 +166,10 @@ def _call(
         bias = bias.reshape(n_cols, bn).astype(jnp.float32)
 
     grid = (M // bm, P)
-    kernel = functools.partial(_kernel, activation=activation)
+    # packed containers stream (1, bk/2, bn) uint8 tiles — half the HBM
+    # bytes per block; the kernel prologue decodes them in-register
+    w_bk = bk // 2 if packed else bk
+    kernel = functools.partial(_kernel, activation=activation, packed=packed)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -153,7 +177,7 @@ def _call(
             grid=grid,
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda m, p, meta: (m, meta[0, p])),
-                pl.BlockSpec((1, bk, bn), lambda m, p, meta: (meta[2, p], 0, 0)),
+                pl.BlockSpec((1, w_bk, bn), lambda m, p, meta: (meta[2, p], 0, 0)),
                 pl.BlockSpec((1, bn), lambda m, p, meta: (meta[1, p], 0)),
                 pl.BlockSpec((1, bn), lambda m, p, meta: (meta[1, p], 0)),
             ],
@@ -191,6 +215,7 @@ def block_sparse_matmul(
     bm: int = 128,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    packed: bool = False,
 ) -> jnp.ndarray:
     """y = act(x @ W + b) for a block-compacted W. See module docstring.
 
@@ -198,9 +223,21 @@ def block_sparse_matmul(
     is one of :data:`ACTIVATIONS` (or None).  Output columns whose
     block-column is entirely absent — including the fully-empty pattern —
     still go through the epilogue: they come back as ``act(b)``.
+
+    ``packed=True`` takes a bit-packed int4 container: ``blocks`` is uint8
+    ``(n_present, bk/2, bn)``, two codes per byte along the bk axis (bk
+    must be even).  The prologue decodes in-register, so the schedule,
+    epilogue and numerics are identical to the int8 path — only the
+    HBM->VMEM bytes halve.
     """
     _check_activation(activation)
     bk, bn = int(blocks.shape[1]), int(blocks.shape[2])
+    if packed:
+        if blocks.dtype != jnp.uint8:
+            raise ValueError(
+                f"packed=True needs a uint8 int4x2 container, got "
+                f"{blocks.dtype}")
+        bk *= 2
     M, K = x.shape
     if K != n_row_blocks * bk:
         raise ValueError(f"K={K} != n_row_blocks*bk={n_row_blocks*bk}")
@@ -230,6 +267,7 @@ def block_sparse_matmul(
         interpret=interpret,
         out_dtype=out_dtype,
         activation=activation,
+        packed=packed,
     )
     if present_cols.size != n_col_blocks:
         # columns never visited by the grid hold uninitialised memory (which
@@ -281,6 +319,7 @@ def block_sparse_matmul_decode(
     activation: Optional[str] = None,
     out_dtype=jnp.float32,
     interpret: bool = False,
+    packed: bool = False,
 ) -> jnp.ndarray:
     """Batched-RHS (decode) entry point: same static schedule, thin M.
 
@@ -298,6 +337,6 @@ def block_sparse_matmul_decode(
         x, blocks, block_rows, block_cols,
         n_row_blocks=n_row_blocks, n_col_blocks=n_col_blocks,
         scales=scales, bias=bias, activation=activation,
-        bm=bm, out_dtype=out_dtype, interpret=interpret,
+        bm=bm, out_dtype=out_dtype, interpret=interpret, packed=packed,
     )
     return y[:M]

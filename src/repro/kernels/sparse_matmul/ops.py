@@ -32,9 +32,23 @@ def sparse_linear(
     ``bm=None`` auto-selects the row tile: decode-thin M goes through the
     batched-RHS entry point, prefill-wide M through the 128-row tile.
     ``use_kernel=False`` falls back to the jnp oracle (CPU prod path).
+
+    A bit-packed ``cl`` (``cl.blocks`` a PackedTensor — int4 codes two per
+    byte) rides the kernel's packed prologue when the container is packed
+    along an even bk axis (weights travel HBM->VMEM at half the bytes);
+    any other packing falls back to a trace-time unpack into the identical
+    int8 path — bitwise-equal numerics either way.
     """
     pat = cl.pattern
     K, N = pat.shape
+    blocks = cl.blocks
+    packed_kernel = False
+    if cl.packed:
+        bk_ax = cl.blocks.axis % 3
+        if use_kernel and bk_ax == 1 and pat.block[0] % 2 == 0:
+            blocks, packed_kernel = cl.blocks.data, True
+        else:
+            blocks = cl.block_values()  # trace-time unpack, same codes
     if bm is not None:
         sub = _sublane(x.dtype)
         if bm % sub or not 0 < bm <= 128:
@@ -65,13 +79,13 @@ def sparse_linear(
     if use_kernel:
         M = xm.shape[0]
         if bm is None and M < 128:
-            y = block_sparse_matmul_decode(xm, cl.blocks, interpret=interpret,
-                                           **kwargs)
+            y = block_sparse_matmul_decode(xm, blocks, interpret=interpret,
+                                           packed=packed_kernel, **kwargs)
         else:
             bm = 128 if bm is None else bm
             xm, M = _pad_rows(xm, bm)
-            y = block_sparse_matmul(xm, cl.blocks, bm=bm, interpret=interpret,
-                                    **kwargs)[:M]
+            y = block_sparse_matmul(xm, blocks, bm=bm, interpret=interpret,
+                                    packed=packed_kernel, **kwargs)[:M]
     else:
-        y = block_sparse_matmul_ref(xm, cl.blocks, **kwargs)
+        y = block_sparse_matmul_ref(xm, blocks, **kwargs)
     return y.reshape(*lead, N)

@@ -26,6 +26,9 @@ PyTree = Any
 # first match wins; stacked layer dims are padded with None on the left.
 _TP_RULES = [
     ("w_blk", P("model", None, None)),    # sparse: packed block axis over TP
+    ("w_blkp", P("model", None, None)),   # bit-packed int4 form of w_blk:
+                                          # same block axis (packing is
+                                          # within-block along bk)
     ("embed", P("model", None)),          # vocab-sharded embedding
     ("head", P(None, "model")),           # vocab-sharded unembedding
     ("frontend_proj", P(None, None)),
@@ -87,18 +90,27 @@ def schedule_shardable(pattern, n_shards: int) -> bool:
     return bool((groups == P // n_shards).all())
 
 
-def _pattern_tail(leaf_shape, patterns, n_shards: int) -> Tuple:
-    """Trailing spec for a ``w_blk`` leaf (..., P, bk, bn) under the shared
-    pattern side-table: row-parallel over 'model' only when the matching
-    pattern's schedule partitions evenly; replicated otherwise.
+def _pattern_tail(leaf_shape, patterns, n_shards: int,
+                  packed: bool = False) -> Tuple:
+    """Trailing spec for a ``w_blk``/``w_blkp`` leaf (..., P, bk, bn) under
+    the shared pattern side-table: row-parallel over 'model' only when the
+    matching pattern's schedule partitions evenly; replicated otherwise.
 
     The leaf is matched to its pattern structurally — (bk, bn) block and
     packed length P — since the side-table is keyed by logical (K, N),
     which the compacted leaf no longer carries.  If several same-shape
     patterns match they must all agree on shardability, else we replicate
     (safe: replication never invalidates the schedule).
+
+    ``packed=True`` marks a bit-packed ``w_blkp`` container whose bk axis
+    holds nibble pairs (bk/2 rows): the block-axis split is identical —
+    packing never crosses a block — so the logical bk is recovered for the
+    structural match (odd logical bk cannot be recovered from the
+    container and such leaves simply stay replicated).
     """
     P, bk, bn = leaf_shape[-3:]
+    if packed:
+        bk *= 2
     cands = [p for p in patterns.values()
              if p.block == (bk, bn) and p.n_blocks_present == P]
     if cands and all(schedule_shardable(p, n_shards) for p in cands):
@@ -133,8 +145,8 @@ def param_specs(params: PyTree, cfg: ArchConfig, mesh, *, fsdp: bool = True,
     always FSDP-extended, mirroring ZeRO-1).
 
     ``patterns`` is the compile_sparse side-table ((K, N) ->
-    BlockSparsePattern).  When given, ``w_blk`` leaves get *pattern-aware*
-    specs: the packed block axis is sharded over 'model' only when the
+    BlockSparsePattern).  When given, ``w_blk`` (and bit-packed
+    ``w_blkp``) leaves get *pattern-aware* specs: the packed block axis is sharded over 'model' only when the
     shared schedule itself partitions into equal per-shard sub-schedules
     (see :func:`schedule_shardable`); otherwise the leaf is replicated so
     the side-table stays valid on every shard.  Without it the legacy
@@ -145,8 +157,10 @@ def param_specs(params: PyTree, cfg: ArchConfig, mesh, *, fsdp: bool = True,
 
     def one(path, leaf):
         pstr = _path_str(path)
-        if patterns is not None and pstr.split("/")[-1] == "w_blk":
-            tail = _pattern_tail(leaf.shape, patterns, mdl_size)
+        leaf_name = pstr.split("/")[-1]
+        if patterns is not None and leaf_name in ("w_blk", "w_blkp"):
+            tail = _pattern_tail(leaf.shape, patterns, mdl_size,
+                                 packed=leaf_name == "w_blkp")
             spec = (None,) * (leaf.ndim - len(tail)) + tail
         else:
             spec = _tp_spec(pstr, leaf.ndim)

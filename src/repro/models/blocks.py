@@ -78,7 +78,7 @@ def lin_apply(cfg: ArchConfig, p: Params, x, K: int, N: int, patterns=None,
     fall back to the cfg-derived shared pattern (synthetic perf models).
     ``dispatch`` selects the kernel path (see repro.core.dispatch)."""
     pat = None
-    if "w_blk" in p:
+    if "w_blk" in p or "w_blkp" in p:  # incl. bit-packed int4 containers
         pat = (patterns or {}).get((K, N)) or _pattern(cfg, K, N)
     return linear_apply(p, x, pattern=pat, dispatch=dispatch)
 

@@ -8,8 +8,12 @@ selected per layer class by the DSE, not a bolt-on.
 Param-leaf conventions (all functional, pytree-of-arrays):
   dense linear:   {"w": (K, N) dtype}
   quantised:      {"w_q": (K, N) int8, "w_s": (N,) f32}
+  packed int4:    {"w_qp": (ceil(K/2), N) uint8, "w_s": (N,) f32}
+                  — bit-packed container, two 4-bit codes per byte along K
   block-sparse:   {"w_blk": (P, bk, bn), ["w_s": (N,) f32]}  + static pattern
                   carried in the enclosing module's config (compile-time).
+  packed sparse:  {"w_blkp": (P, ceil(bk/2), bn) uint8, "w_s": (N,) f32}
+                  — the bit-packed 4-bit form of w_blk (codes along bk)
 
 These leaves are produced two ways: synthetically by ``linear_init`` (perf
 modelling) or by the whole-model compression pass

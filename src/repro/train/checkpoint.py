@@ -19,6 +19,13 @@ Layout (one directory per step)::
   constraint).
 * **Async** — ``save_async`` hands the host-side arrays to a worker thread;
   the training loop only blocks on the previous save (double-buffer).
+* **Packed containers** — bit-packed int4 leaves round-trip bit-exactly:
+  ``w_qp``/``w_blkp`` uint8 buffers (and the buffers inside
+  :class:`repro.core.quant.PackedTensor` nodes, which flatten through the
+  pytree registry) are saved verbatim — uint8 is an npz-native dtype, so
+  the widening fallback below never touches them, and restore casts
+  against the template leaf dtype (uint8 -> uint8, a no-op).  A compressed
+  model checkpoint therefore costs the *packed* bytes on disk too.
 """
 from __future__ import annotations
 
@@ -47,7 +54,10 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
         arr = np.asarray(leaf)
         if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
             # npz cannot round-trip ml_dtypes (bf16 etc.) — store widened;
-            # restore casts back to the template leaf dtype.
+            # restore casts back to the template leaf dtype.  Integer
+            # containers (int8 codes, uint8 int4x2 packed buffers) are
+            # npz-native and MUST stay verbatim: widening them would break
+            # the bit-exact packed-leaf round trip.
             arr = arr.astype(np.float32)
         flat[key] = arr
     return flat

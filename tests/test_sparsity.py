@@ -151,15 +151,22 @@ def test_storage_bytes_hand_computed():
     mask = np.ones((16, 16), bool)
     # f32, all 4 (8,8) blocks present:
     #   blocks 4*8*8*4 = 1024 B; bitmap ceil(4/8) = 1 B;
-    #   block coords 2 * 4 * 4 B (int32) = 32 B  -> 1057
+    #   block coords 2 * 4 * 2 B (int16) = 16 B  -> 1041
     cl = compress(w, mask, (8, 8), dtype=jnp.float32)
-    assert cl.storage_bytes == 1024 + 1 + 32
-    # int8 + (16,) f32 scales: 256 + 64 + 33 = 353
+    assert cl.storage_bytes == 1024 + 1 + 16
+    # int8 + (16,) f32 scales: 256 + 64 + 17 = 337
     q = quantize(w, 8, axis=1)
     clq = compress(w, mask, (8, 8),
                    quant_scales=np.asarray(q.scales).reshape(16),
                    quant_bits=8)
-    assert clq.storage_bytes == 256 + 64 + 1 + 32
+    assert clq.storage_bytes == 256 + 64 + 1 + 16
+    # bit-packed int4: codes two-per-byte -> 128 B container, same scales
+    q4 = quantize(w, 4, axis=1)
+    clp = compress(w, mask, (8, 8),
+                   quant_scales=np.asarray(q4.scales).reshape(16),
+                   quant_bits=4, pack=True)
+    assert clp.packed
+    assert clp.storage_bytes == 128 + 64 + 1 + 16
 
 
 def test_shared_pattern_requires_tuple_block():

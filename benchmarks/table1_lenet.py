@@ -30,14 +30,18 @@ be strictly greater than the FC-only ratio (convs pinned dense — the
 ``--check`` runs the fast structural guard CI uses (no training): compile
 the whole model at the int4 operating point and assert (a) the packed
 containers hold >= 2x fewer payload bytes than the int8-container
-baseline accounting of the *same* compile, and (b) the byte-level
+baseline accounting of the *same* compile, (b) the byte-level
 whole-model ratio clears the committed floor — so the bit-packing can
-never silently regress back to int8 containers.
+never silently regress back to int8 containers — and (c) a fresh quick
+steady-state measurement of the whole-model compressed-vs-dense ratio
+clears ``SPEEDUP_GUARD_FRACTION`` of the committed
+``measured.speedup_whole`` (skipped when no BENCH is committed).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import sys
 import time
 from typing import Dict, List, Tuple
@@ -100,6 +104,30 @@ BYTE_COMPRESSION_FLOOR = 11.0
 # run() and --check): 4-bit codes => every payload is emitted bit-packed
 WHOLE_MODEL_RULES = CompileRules(block=(8, 4), min_weight_elems=0,
                                  quant_bits=4)
+STEADY_ITERS = 20          # steady-state timing iterations (batch 256)
+# --check throughput guard: a fresh quick measurement's speedup_whole must
+# clear this fraction of the committed BENCH value.  0.75 absorbs CI-host
+# timing noise (shared runners jitter ±15-20%) while still catching any
+# real regression back toward the pre-fusion 0.23x.
+SPEEDUP_GUARD_FRACTION = 0.75
+
+
+def _steady_state(f, p, x, iters: int = STEADY_ITERS, warmup: int = 3):
+    """(trace_inclusive_us, steady_us_per_batch) for jitted ``f(p, x)``.
+
+    First blocked call = trace + compile + run (reported separately, never
+    averaged in); then ``warmup`` blocked calls; then the steady-state mean
+    over ``iters`` blocked calls.
+    """
+    t0 = time.perf_counter()
+    f(p, x).block_until_ready()
+    trace_us = (time.perf_counter() - t0) * 1e6
+    for _ in range(warmup):
+        f(p, x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(p, x).block_until_ready()
+    return trace_us, (time.perf_counter() - t0) / iters * 1e6
 
 
 def train_lenet(steps=80, masks=None, params=None, seed0=0, lr=2e-3,
@@ -339,6 +367,14 @@ def run() -> List[Dict]:
     })
 
     # -- measured CPU relative throughput (masked dense vs compacted) ------
+    # Timing protocol (bench-fairness contract, see docs/benchmarks.md):
+    # each fn is jitted ONCE; the first blocked call is recorded separately
+    # as trace_inclusive_us (trace + compile + run); a blocked warmup then
+    # drains any remaining compilation/dispatch setup; only steady-state
+    # block_until_ready iterations are averaged into the *_us_per_batch
+    # fields.  The forced-Pallas interpret leg is recorded under its own
+    # "interpret" sub-dict (small batch, few iters) and is NEVER mixed
+    # into — or comparable with — the compiled-XLA numbers.
     compressed = {}
     for n in ("fc1", "fc2", "fc3"):
         w = np.asarray(pruned_params[n + "_w"])
@@ -351,27 +387,43 @@ def run() -> List[Dict]:
     f_dense = jax.jit(lambda p, xx: lenet_forward(p, xx, masks=None))
     f_comp = jax.jit(lambda p, xx: lenet_forward(p, xx, compressed=compressed))
     f_whole = jax.jit(lambda p, xx: lenet_forward(
-        p, xx, compressed=cm_whole.layers))
-    for f, p in ((f_dense, params), (f_comp, pruned_params),
-                 (f_whole, pruned_params)):
-        f(p, x).block_until_ready()
+        p, xx, compressed=cm_whole.layers, fusion=cm_whole.fusion))
 
-    def _t(f, p):
-        t0 = time.perf_counter()
-        for _ in range(20):
-            f(p, x).block_until_ready()
-        return (time.perf_counter() - t0) / 20
+    dense_trace, t_dense = _steady_state(f_dense, params, x)
+    comp_trace, t_comp = _steady_state(f_comp, pruned_params, x)
+    whole_trace, t_whole = _steady_state(f_whole, pruned_params, x)
 
-    t_dense = _t(f_dense, params)
-    t_comp = _t(f_comp, pruned_params)
-    t_whole = _t(f_whole, pruned_params)
+    # interpret-mode leg: the forced-Pallas kernels (the path the TPU
+    # would run), exercised at a small batch purely as a labelled
+    # correctness/trend signal — interpret overhead is not a TPU cost
+    xi = x[:8]
+    f_interp = jax.jit(lambda p, xx: lenet_forward(
+        p, xx, compressed=cm_whole.layers, fusion=cm_whole.fusion,
+        dispatch="pallas"))
+    _, t_interp = _steady_state(f_interp, pruned_params, xi, iters=2,
+                                warmup=1)
     rows.append({
         "strategy": "measured_cpu",
-        "dense_us_per_batch": t_dense * 1e6,
-        "compacted_us_per_batch": t_comp * 1e6,
-        "whole_compacted_us_per_batch": t_whole * 1e6,
+        "timing": "steady_state",
+        "batch": int(x.shape[0]),
+        "iters": STEADY_ITERS,
+        "dense_us_per_batch": t_dense,
+        "compacted_us_per_batch": t_comp,
+        "whole_compacted_us_per_batch": t_whole,
+        "trace_inclusive_us": {
+            "dense": dense_trace,
+            "compacted": comp_trace,
+            "whole_compacted": whole_trace,
+        },
         "speedup": t_dense / t_comp,
         "speedup_whole": t_dense / t_whole,
+        "interpret": {
+            "batch": int(xi.shape[0]),
+            "iters": 2,
+            "whole_compacted_us_per_batch": t_interp,
+            "note": ("forced-Pallas interpret-mode kernels; "
+                     "not comparable to compiled-XLA timings"),
+        },
     })
     return rows
 
@@ -424,6 +476,37 @@ def check() -> None:
     assert cm.byte_compression >= BYTE_COMPRESSION_FLOOR, (
         f"byte-level whole-model compression {cm.byte_compression:.2f}x "
         f"< committed floor {BYTE_COMPRESSION_FLOOR}x")
+
+    # throughput floor: a fresh quick steady-state measurement of the
+    # whole-model compressed-vs-dense ratio must not regress below the
+    # committed BENCH value (shape/density-only, no training needed — the
+    # timing depends on the compiled structure, not the weight values)
+    committed = None
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            committed = (json.load(f).get("measured") or {}).get(
+                "speedup_whole")
+    if committed:
+        x = jnp.asarray(
+            np.random.default_rng(0).normal(size=(256, 28, 28, 1)),
+            jnp.float32)
+        f_dense = jax.jit(lambda p, xx: lenet_forward(p, xx, masks=None))
+        f_whole = jax.jit(lambda p, xx: lenet_forward(
+            p, xx, compressed=cm.layers, fusion=cm.fusion))
+        _, t_dense = _steady_state(f_dense, params, x, iters=8, warmup=2)
+        _, t_whole = _steady_state(f_whole, params, x, iters=8, warmup=2)
+        fresh = t_dense / t_whole
+        floor = SPEEDUP_GUARD_FRACTION * committed
+        print(f"throughput guard: fresh speedup_whole {fresh:.3f}x vs "
+              f"committed {committed:.3f}x (floor {floor:.3f}x)")
+        assert fresh >= floor, (
+            f"whole-model compressed throughput regressed: fresh "
+            f"speedup_whole {fresh:.3f}x < {SPEEDUP_GUARD_FRACTION} x "
+            f"committed {committed:.3f}x — the fused conv/fc-stack path "
+            "(or the im2col lowering) got slower")
+    else:
+        print(f"no committed measured.speedup_whole in {BENCH_JSON} — "
+              "skipping throughput floor")
     print("check OK")
 
 

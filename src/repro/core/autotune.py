@@ -425,7 +425,11 @@ def autotune_leaf(
     twin unpacks at trace time), and on TPU the roofline seed already
     halves the packed weight traffic.
     """
-    family = kind[len("conv_"):] if kind.startswith("conv_") else kind
+    family = kind
+    for prefix in ("fusedconv_", "conv_"):
+        if kind.startswith(prefix):
+            family = kind[len(prefix):]
+            break
     if family not in ("sparse", "quant"):
         raise ValueError(f"unknown tune kind {kind!r}")
     M, K_x = int(np.prod(x.shape[:-1], dtype=int)), x.shape[-1]
@@ -484,7 +488,14 @@ def autotune_leaf(
         n_timed += 1
 
     if measured:
-        cand, us, pred = min(measured, key=lambda t: t[1])
+        # Measured refinement only ranks candidates compiled for the active
+        # backend: off-TPU a Pallas candidate runs in interpret mode, and an
+        # interpret timing must never beat the compiled XLA twin on wall
+        # clock (interpret overhead is not the TPU cost it stands in for).
+        # measure_interpret surfaces interpret timings in the log, but the
+        # winner is still picked among backend-valid candidates.
+        valid = [t for t in measured if on_tpu or not t[0].use_pallas]
+        cand, us, pred = min(valid or measured, key=lambda t: t[1])
         winner = dataclasses.replace(cand, measured_us=float(us),
                                      predicted_us=float(pred))
     else:  # nothing timeable (can't happen in practice: XLA always is)

@@ -170,6 +170,11 @@ class CompressedModel:
     patterns: Dict[Tuple[int, int], BlockSparsePattern]
     report: List[LayerReport]
     layers: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # Layer-fusion plan derived at compile time (e.g. lenet_fusion_plan):
+    # which compressed leaves may run fused schedules (in-kernel pool,
+    # fc-stack chaining).  Consumers opt in by passing it to the model's
+    # forward (fusion=cm.fusion); empty dict = no fusion opportunities.
+    fusion: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def storage_bytes(self) -> int:
@@ -938,8 +943,10 @@ def compile_lenet(
             dense_bytes=dense_bytes, compressed_bytes=int(comp_bytes),
             block_density=float(bd), element_density=float(ed),
             kind=kind, m_scale=m_scale, container_bytes=int(cont_bytes)))
+    from ..models.lenet import lenet_fusion_plan
+
     return CompressedModel(params=params, patterns=patterns, report=report,
-                           layers=layers)
+                           layers=layers, fusion=lenet_fusion_plan(layers))
 
 
 def realised_densities(cm: CompressedModel) -> Dict[str, Tuple[float, float]]:

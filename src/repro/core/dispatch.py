@@ -53,44 +53,66 @@ The fused bias+activation epilogue rides the same dispatch: pass
 paths emit ``act(x @ W + b)`` in one launch; every other path applies the
 identical f32 formula (:data:`repro.kernels.sparse_matmul.kernel.ACTIVATIONS`).
 
-Convolutions ride the SAME datapath: :func:`conv_dispatch` lowers an NHWC
-conv to a matmul at trace time via ``lax.conv_general_dilated_patches``
-(static im2col — the patch extraction is a strided identity conv XLA folds
-into data movement) and funnels the ``(B*H_out*W_out, kh*kw*cin)`` patch
-matrix into :func:`payload_dispatch`.  A compiled conv leaf
-(:class:`ConvPayload`, from ``compile_sparse``) therefore executes on the
-identical sparse/quant Pallas kernels, fused epilogue included, with zero
-conv-specific kernel code.  Conv tuned-table entries are keyed with a
-``conv_``-prefixed kind so they never collide with a linear leaf at the
-same ``(M, K, N)``.
+Convolutions ride the SAME datapath: :func:`conv_dispatch` first tries the
+*fused* conv entries (``block_sparse_conv`` / ``quant_conv``) — the patch
+rows are gathered from the NHWC activation inside the kernel's VMEM, so no
+``(B*H_out*W_out, K)`` patch matrix ever exists, and an optional
+``pool=("avg"|"max", size)`` window pool rides the emit step.  Where the
+fused entry does not apply (jnp twin, non-unit stride, SAME padding,
+unfusable payload), the conv lowers at trace time through
+:func:`conv_im2col` — static shifted slices, pure data movement, bitwise
+the patch order of ``lax.conv_general_dilated_patches`` — and funnels the
+patch tensor into :func:`payload_dispatch`.  Both legs produce bitwise-
+identical results.  Conv tuned-table entries are keyed with ``conv_``- /
+``fusedconv_``-prefixed kinds so they never collide with a linear leaf at
+the same ``(M, K, N)``.
+
+Adjacent compiled linears can additionally fuse into one launch through
+:func:`fc_stack_dispatch` (the LeNet fc1→fc2→fc3 chain): the Pallas leg
+runs :func:`repro.kernels.fc_stack.fc_stack_matmul` over trace-time-
+densified weights — intermediates never round-trip HBM — while the jnp
+leg chains the ordinary per-leaf dispatch.
+
+Forced-pallas fallbacks are never silent: when ``mode="pallas"`` must run
+the jnp twin in compiled execution (shape fails the hardware eligibility
+predicate), a one-time structured :class:`DispatchFallbackWarning` names
+the leaf and the failed predicate; ``REPRO_DISPATCH_STRICT=1`` upgrades
+the fallback to a :class:`DispatchStrictError`.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Any, Dict, Optional, Tuple, Union
+import warnings
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.quant_matmul.kernel import quant_matmul
+from ..kernels.fc_stack import fc_stack_eligible, fc_stack_matmul
+from ..kernels.quant_matmul.kernel import quant_conv, quant_matmul
 from ..kernels.sparse_matmul.kernel import (
     ACTIVATIONS,
+    POOL_MODES,
     _check_activation,
     _pad_rows,
     _row_tile,
     _sublane,
+    block_sparse_conv,
 )
 from ..kernels.sparse_matmul.ops import sparse_linear
 from .quant import PACKED_CONTAINER, PackedTensor, QuantizedTensor, unpack_int4
-from .sparsity import BlockSparsePattern, CompressedLinear
+from .sparsity import BlockSparsePattern, CompressedLinear, decompress
 
 __all__ = [
     "DISPATCH_ENV",
     "DISPATCH_MODES",
+    "STRICT_ENV",
     "ConvPayload",
     "DispatchConfig",
+    "DispatchFallbackWarning",
+    "DispatchStrictError",
     "resolve",
     "sparse_kernel_eligible",
     "quant_kernel_eligible",
@@ -98,11 +120,15 @@ __all__ = [
     "payload_dispatch",
     "conv_dispatch",
     "conv_im2col",
+    "fc_stack_dispatch",
 ]
 
 Params = Dict[str, Any]
 
 DISPATCH_ENV = "REPRO_FORCE_DISPATCH"
+# when "1": forced-pallas fallbacks raise DispatchStrictError instead of
+# warning — CI mode for perf-sensitive paths that must never lose a kernel
+STRICT_ENV = "REPRO_DISPATCH_STRICT"
 DISPATCH_MODES = ("auto", "pallas", "jnp")
 # accepted by resolve() on top of DISPATCH_MODES: loads the tuned table
 AUTOTUNE_MODE = "autotune"
@@ -195,14 +221,59 @@ def quant_kernel_eligible(K: int, N: int) -> bool:
     return K % 128 == 0 and N % 128 == 0
 
 
-def _use_pallas(cfg: DispatchConfig, eligible: bool) -> bool:
+class DispatchFallbackWarning(UserWarning):
+    """Forced-pallas dispatch ran the jnp twin for a shape that fails the
+    hardware eligibility predicate (compiled execution only).  Structured:
+    ``leaf`` names the layer, ``predicate`` the failed eligibility check —
+    tooling can filter/aggregate without parsing the message."""
+
+    def __init__(self, leaf: str, predicate: str, message: str):
+        super().__init__(message)
+        self.leaf = leaf
+        self.predicate = predicate
+
+
+class DispatchStrictError(RuntimeError):
+    """Raised instead of :class:`DispatchFallbackWarning` when
+    ``REPRO_DISPATCH_STRICT=1``: a forced-pallas fallback is a hard error."""
+
+
+# one-time warning registry: (leaf, predicate) pairs already reported —
+# the same layer re-tracing every jit must not spam the log
+_FALLBACK_WARNED: set = set()
+
+
+def _note_forced_fallback(leaf: Optional[str], predicate: str) -> None:
+    leaf = leaf or "<unnamed>"
+    msg = (f"forced-pallas dispatch fell back to the jnp twin for leaf "
+           f"{leaf!r}: eligibility predicate {predicate} failed — the shape "
+           f"cannot tile on hardware, so the kernel would die in Mosaic "
+           f"lowering.  Numerics are identical but the kernel perf is lost. "
+           f"Set {STRICT_ENV}=1 to raise instead.")
+    if os.environ.get(STRICT_ENV, "").strip() == "1":
+        raise DispatchStrictError(msg)
+    key = (leaf, predicate)
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(DispatchFallbackWarning(leaf, predicate, msg),
+                  stacklevel=4)
+
+
+def _use_pallas(cfg: DispatchConfig, eligible: bool, *,
+                leaf: Optional[str] = None,
+                predicate: str = "kernel_eligible") -> bool:
     if cfg.mode == "jnp":
         return False
     if cfg.mode == "pallas":
         # interpret mode imposes no tile constraints; compiled (on-TPU)
         # forced-pallas still respects hardware tiling — ineligible shapes
-        # take the jnp twin instead of dying in Mosaic lowering
-        return cfg.run_interpret or eligible
+        # take the jnp twin instead of dying in Mosaic lowering, but NEVER
+        # silently: the fallback warns once (or raises under strict mode)
+        if cfg.run_interpret or eligible:
+            return True
+        _note_forced_fallback(leaf, predicate)
+        return False
     # auto: compiled Pallas on TPU when the shape tiles; jnp twin otherwise
     return jax.default_backend() == "tpu" and eligible
 
@@ -233,12 +304,14 @@ def _tuned_entry(cfg: DispatchConfig, kind: str, M: int, K: int, N: int,
                                   pattern=pattern, container=container))
 
 
-def _pick_backend(cfg: DispatchConfig, entry, eligible: bool) -> bool:
+def _pick_backend(cfg: DispatchConfig, entry, eligible: bool, *,
+                  leaf: Optional[str] = None,
+                  predicate: str = "kernel_eligible") -> bool:
     """Kernel-vs-twin choice: a tuned entry decides in auto mode (still
     hardware-gated for compiled execution); forced modes always win."""
     if cfg.mode == "auto" and entry is not None:
         return entry.use_pallas and (cfg.run_interpret or eligible)
-    return _use_pallas(cfg, eligible)
+    return _use_pallas(cfg, eligible, leaf=leaf, predicate=predicate)
 
 
 def _effective_bm(bm: Optional[int], x_dtype) -> Optional[int]:
@@ -275,9 +348,15 @@ def _sparse_apply_jnp(p: Params, x, pattern: BlockSparsePattern,
                       compute_dtype):
     """Engine-free static block-sparse matmul, jnp path (XLA prod path).
 
-    The gather below uses *static* indices (numpy constants), so XLA sees a
-    fixed schedule — collapsing at compile time exactly like the Pallas
-    kernel's prefetch tables. K-blocks absent from a column contribute 0.
+    The schedule is *static* (numpy constants), so the block scatter below
+    densifies the weight at trace time — under jit with compiled payloads
+    the whole reconstruction constant-folds and the layer runs as ONE
+    fused GEMM.  (The previous formulation gathered *activation* rows per
+    present block into an (M, P, bk) tensor before an einsum+scatter-add;
+    at im2col'd conv sizes — M = B*H_out*W_out — that per-call gather
+    traffic dwarfed the matmul and was the main reason the compressed
+    model benchmarked slower than dense.)  K-blocks absent from a column
+    contribute exactly 0.
     """
     K, N = pattern.shape
     bk, bn = pattern.block
@@ -290,12 +369,12 @@ def _sparse_apply_jnp(p: Params, x, pattern: BlockSparsePattern,
     xm = x.reshape(-1, K).astype(compute_dtype)
     if pattern.n_blocks_present == 0:  # fully-empty schedule
         return jnp.zeros((*lead, N), compute_dtype)
-    xb = xm.reshape(-1, nR, bk)
-    # per present block: (M, bk) x (bk, bn) -> scatter-add into (M, nC, bn)
-    xg = xb[:, np.asarray(pattern.block_rows)]           # (M, P, bk) static gather
-    yb = jnp.einsum("mpk,pkn->mpn", xg, blocks)          # (M, P, bn)
-    y = jnp.zeros((xm.shape[0], nC, bn), yb.dtype)
-    y = y.at[:, np.asarray(pattern.block_cols)].add(yb)  # static scatter-add
+    # static scatter of the present blocks into the (K, N) layout; absent
+    # blocks stay zero (each (row, col) pair appears at most once)
+    w = jnp.zeros((nR, bk, nC, bn), blocks.dtype)
+    w = w.at[np.asarray(pattern.block_rows), :,
+             np.asarray(pattern.block_cols), :].set(blocks)
+    y = xm @ w.reshape(K, N)
     return y.reshape(*lead, N)
 
 
@@ -407,7 +486,8 @@ def linear_dispatch(
         K, N = p["w_q"].shape
         entry = _tuned_entry(cfg, tag + "quant", _lead_rows(x), K, N,
                              x.dtype, leaf=leaf)
-        if _pick_backend(cfg, entry, quant_kernel_eligible(K, N)):
+        if _pick_backend(cfg, entry, quant_kernel_eligible(K, N), leaf=leaf,
+                         predicate=f"quant_kernel_eligible(K={K}, N={N})"):
             # epilogue fused into the kernel's emit step — no extra pass
             return _quant_apply_pallas(p, x, cfg, compute_dtype, bias,
                                        activation, entry)
@@ -427,7 +507,8 @@ def linear_dispatch(
                 "w_qp leaves are packed two codes per byte along K")
         entry = _tuned_entry(cfg, tag + "quant", _lead_rows(x), K, N,
                              x.dtype, leaf=leaf, container=PACKED_CONTAINER)
-        if _pick_backend(cfg, entry, quant_kernel_eligible(K, N)):
+        if _pick_backend(cfg, entry, quant_kernel_eligible(K, N), leaf=leaf,
+                         predicate=f"quant_kernel_eligible(K={K}, N={N})"):
             if K % 2 == 0:  # in-kernel nibble decode: half the HBM bytes
                 return _quant_apply_pallas(p, x, cfg, compute_dtype, bias,
                                            activation, entry)
@@ -452,7 +533,9 @@ def linear_dispatch(
         entry = _tuned_entry(cfg, tag + "sparse", _lead_rows(x), K, N,
                              x.dtype, pattern, leaf=leaf)
         use_k = _pick_backend(
-            cfg, entry, sparse_kernel_eligible(pattern, p["w_blk"].dtype))
+            cfg, entry, sparse_kernel_eligible(pattern, p["w_blk"].dtype),
+            leaf=leaf,
+            predicate=f"sparse_kernel_eligible(block={pattern.block})")
         bm = cfg.bm if cfg.bm is not None else \
             (entry.bm if entry is not None else None)
         if use_k:
@@ -486,7 +569,9 @@ def linear_dispatch(
                              x.dtype, pattern, leaf=leaf,
                              container=PACKED_CONTAINER)
         use_k = _pick_backend(
-            cfg, entry, sparse_kernel_eligible(pattern, wp.dtype))
+            cfg, entry, sparse_kernel_eligible(pattern, wp.dtype),
+            leaf=leaf,
+            predicate=f"sparse_kernel_eligible(block={pattern.block})")
         bm = cfg.bm if cfg.bm is not None else \
             (entry.bm if entry is not None else None)
         if use_k:
@@ -619,18 +704,136 @@ def conv_im2col(x: jnp.ndarray, kernel_hw: Tuple[int, int], *,
                 padding: str = "VALID") -> jnp.ndarray:
     """Static im2col: NHWC image -> (B, H_out, W_out, cin*kh*kw) patches.
 
-    Trace-time lowering via ``lax.conv_general_dilated_patches`` — XLA sees
-    a strided identity convolution it folds into pure data movement, so
-    the conv becomes exactly the matmul the engine-free datapath executes.
-    Patch features are ordered (cin, kh, kw) — channel major — matching
-    the weight packing of ``compile_sparse``'s conv leaves.
+    Trace-time lowering as kh*kw static shifted slices of the image,
+    stacked and transposed into the channel-major patch feature order of
+    ``lax.conv_general_dilated_patches`` (f = c*kh*kw + dh*kw + dw) —
+    bitwise the same patches, without the identity-conv detour: the
+    dilated-patches lowering materialises a conv with K output channels
+    (O(K²) MACs of pure data shuffling), which dominated the whole-model
+    compressed batch time; slicing is O(K) data movement that XLA fuses.
     """
     if x.ndim != 4:
         raise ValueError(
             f"conv_im2col expects NHWC input, got shape {x.shape}")
-    return jax.lax.conv_general_dilated_patches(
-        x, tuple(kernel_hw), tuple(strides), padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    kh, kw = kernel_hw
+    sh, sw = strides
+    B, H, W, C = x.shape
+    if padding == "SAME":
+        Ho, Wo = -(-H // sh), -(-W // sw)
+        ph = max((Ho - 1) * sh + kh - H, 0)
+        pw = max((Wo - 1) * sw + kw - W, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+        H, W = H + ph, W + pw
+    elif padding != "VALID":
+        raise ValueError(
+            f"conv_im2col supports 'VALID' or 'SAME' padding, got "
+            f"{padding!r}")
+    Ho = (H - kh) // sh + 1
+    Wo = (W - kw) // sw + 1
+    taps = [x[:, dh:dh + sh * (Ho - 1) + 1:sh,
+              dw:dw + sw * (Wo - 1) + 1:sw, :]
+            for dh in range(kh) for dw in range(kw)]
+    t = jnp.stack(taps, axis=-2)          # (B, Ho, Wo, kh*kw, C)
+    t = jnp.swapaxes(t, -1, -2)           # (B, Ho, Wo, C, kh*kw)
+    return t.reshape(B, Ho, Wo, C * kh * kw)
+
+
+def _pool_nhwc(y: jnp.ndarray, pool: Tuple[str, int]) -> jnp.ndarray:
+    """(B, H, W, C) non-overlapping window pool — the jnp twin of the
+    fused conv entries' pooled emit (identical reduce_window formulas to
+    the models' standalone pool layers)."""
+    mode, z = pool
+    if mode == "max":
+        return jax.lax.reduce_window(
+            y, jnp.asarray(-jnp.inf, y.dtype), jax.lax.max,
+            (1, z, z, 1), (1, z, z, 1), "VALID")
+    return jax.lax.reduce_window(
+        y, jnp.asarray(0.0, y.dtype), jax.lax.add,
+        (1, z, z, 1), (1, z, z, 1), "VALID") / float(z * z)
+
+
+def _conv_fused(cp: ConvPayload, x: jnp.ndarray, cfg: DispatchConfig,
+                bias, activation: Optional[str], compute_dtype,
+                leaf: Optional[str], pool: Optional[Tuple[str, int]]
+                ) -> Optional[jnp.ndarray]:
+    """Try the fused conv entries (in-kernel patch gather, pooled emit).
+
+    Returns the conv output, or None when the fused path does not apply:
+    non-unit stride / non-VALID padding (the in-kernel patch builder is
+    stride-1 by construction), a pool window that does not tile the
+    output, a dense/group payload (no kernel family), or the backend pick
+    resolving to the jnp twin.  Kind ``fusedconv_sparse`` /
+    ``fusedconv_quant`` keys the tuned table — fused and im2col'd runs of
+    the same leaf never share entries (they stream different bytes).
+    """
+    if tuple(cp.strides) != (1, 1) or cp.padding != "VALID":
+        return None
+    kh, kw, cin, cout = cp.kernel
+    B, H, W, _ = x.shape
+    Ho, Wo = H - kh + 1, W - kw + 1
+    if Ho < 1 or Wo < 1:
+        return None
+    if pool is not None and (Ho % pool[1] or Wo % pool[1]):
+        return None
+    payload = cp.payload
+    M = B * Ho * Wo
+    out_dtype = compute_dtype if compute_dtype is not None else x.dtype
+
+    if isinstance(payload, CompressedLinear):
+        pat = payload.pattern
+        eligible = sparse_kernel_eligible(pat, None)  # 128-rule, dtype-free
+        container = PACKED_CONTAINER if payload.packed else None
+        entry = _tuned_entry(cfg, "fusedconv_sparse", M, cp.K, cp.N,
+                             x.dtype, pat, leaf=leaf, container=container)
+        if not _pick_backend(
+                cfg, entry, eligible, leaf=leaf,
+                predicate=f"sparse_kernel_eligible(block={pat.block})"):
+            return None
+        blocks, packed_kernel = payload.blocks, False
+        if payload.packed:
+            if payload.blocks.axis % 3 == 1 and pat.block[0] % 2 == 0:
+                blocks, packed_kernel = payload.blocks.data, True
+            else:  # bn-axis container: trace-time unpack, same codes
+                blocks = payload.block_values()
+        return block_sparse_conv(
+            x, blocks, pat.block_rows, pat.block_cols,
+            kernel_hw=(kh, kw),
+            n_row_blocks=pat.bitmap.shape[0],
+            n_col_blocks=pat.bitmap.shape[1],
+            scales=payload.scales, bias=bias, activation=activation,
+            pool=pool, out_dtype=out_dtype,
+            interpret=cfg.run_interpret, packed=packed_kernel)
+
+    if isinstance(payload, (QuantizedTensor, PackedTensor)):
+        K, N = cp.K, cp.N
+        container = PACKED_CONTAINER if isinstance(payload, PackedTensor) \
+            else None
+        entry = _tuned_entry(cfg, "fusedconv_quant", M, K, N, x.dtype,
+                             leaf=leaf, container=container)
+        if not _pick_backend(
+                cfg, entry, quant_kernel_eligible(K, N), leaf=leaf,
+                predicate=f"quant_kernel_eligible(K={K}, N={N})"):
+            return None
+        packed_kernel = False
+        if isinstance(payload, PackedTensor):
+            if payload.axis % len(payload.shape) == 0 and K % 2 == 0:
+                w_q, packed_kernel = payload.data, True
+            else:
+                w_q = payload.unpack()
+            scales = payload.scales.reshape(N)
+        else:
+            w_q = payload.values
+            scales = payload.scales.reshape(N)
+        bn = bk = None
+        if entry is not None:
+            bn, bk = entry.bn, entry.bk
+        return quant_conv(
+            x, w_q, scales, bias, kernel_hw=(kh, kw), bn=bn, bk=bk,
+            interpret=cfg.run_interpret, out_dtype=out_dtype,
+            activation=activation, packed=packed_kernel, pool=pool)
+
+    return None  # dense / group payloads: no fused kernel family
 
 
 def conv_dispatch(
@@ -644,16 +847,23 @@ def conv_dispatch(
     activation: Optional[str] = None,
     compute_dtype=None,
     leaf: Optional[str] = None,
+    pool: Optional[Tuple[str, int]] = None,
 ) -> jnp.ndarray:
     """Apply one compiled conv leaf: y = act(conv(x, W) + b), engine-free.
 
-    Lowers the NHWC input to im2col patches at trace time and funnels the
-    ``(B, H_out, W_out, K)`` patch tensor into the exact same
-    :func:`payload_dispatch` machinery the FC layers use — the sparse /
-    quant Pallas kernels (fused bias+activation epilogue included) and
-    their jnp twins serve convs with zero conv-specific kernel code.  The
-    leading ``(B, H_out, W_out)`` dims flatten to the matmul's M, so the
-    tuned table sees ``M = B*H_out*W_out`` under a ``conv_``-tagged kind.
+    The Pallas leg runs the *fused* conv entries (``block_sparse_conv`` /
+    ``quant_conv``): the kernel gathers patch rows from the NHWC
+    activation in VMEM — no patch matrix in HBM — and can fuse
+    ``pool=(mode, size)`` into the emit step, so a whole
+    conv→act→pool block is one launch.  Everywhere the fused entry does
+    not apply, the conv lowers to im2col patches at trace time
+    (:func:`conv_im2col` — static slices, bitwise the same patch order)
+    and funnels the ``(B, H_out, W_out, K)`` patch tensor into the exact
+    same :func:`payload_dispatch` machinery the FC layers use; ``pool``
+    then applies as a trailing ``reduce_window``.  Both legs are bitwise
+    identical through the matmul and epilogue.  The tuned table sees
+    ``M = B*H_out*W_out`` under ``conv_``- (im2col) or ``fusedconv_``-
+    (fused) tagged kinds.
 
     ``strides``/``padding`` default to the compiled geometry; passing a
     *different* value raises — the payload was packed and cost-modelled
@@ -682,9 +892,95 @@ def conv_dispatch(
             f"compiled kernel (kh={kh}, kw={kw}, cin={cin}, cout={cout}) — "
             "expected NHWC with trailing channel dim "
             f"{cin}")
+    if pool is not None and (pool[0] not in POOL_MODES or int(pool[1]) < 1):
+        raise ValueError(
+            f"unknown conv pool {pool!r} — expected (mode, size) with mode "
+            f"in {POOL_MODES} and size >= 1")
+    cfg = resolve(dispatch)
+    y = _conv_fused(cp, x, cfg, bias, activation, compute_dtype, leaf, pool)
+    if y is not None:
+        return y
     patches = conv_im2col(x, (kh, kw), strides=cp.strides,
                           padding=cp.padding)
-    return payload_dispatch(cp.payload, patches, dispatch=dispatch,
-                            bias=bias, activation=activation,
-                            compute_dtype=compute_dtype, leaf=leaf,
-                            op="conv")
+    y = payload_dispatch(cp.payload, patches, dispatch=cfg,
+                         bias=bias, activation=activation,
+                         compute_dtype=compute_dtype, leaf=leaf,
+                         op="conv")
+    if pool is not None:
+        y = _pool_nhwc(y, pool)
+    return y
+
+
+# ------------------------------------------------------------ layer fusion
+
+
+def _payload_dense_f32(payload: Any) -> jnp.ndarray:
+    """Trace-time densification of any linear payload family to (K, N)
+    f32 — the weight lowering of the fused FC-stack kernel (containers
+    dequantise/decompress exactly like their jnp twins)."""
+    if isinstance(payload, CompressedLinear):
+        return decompress(payload).astype(jnp.float32)
+    if isinstance(payload, PackedTensor):
+        K, N = payload.shape
+        codes = payload.unpack().astype(jnp.float32)
+        return codes * payload.scales.reshape(N).astype(jnp.float32)[None, :]
+    if isinstance(payload, QuantizedTensor):
+        N = payload.values.shape[1]
+        return payload.values.astype(jnp.float32) * \
+            payload.scales.reshape(N).astype(jnp.float32)[None, :]
+    return jnp.asarray(payload, jnp.float32)
+
+
+def _payload_kn(payload: Any) -> Tuple[int, int]:
+    if isinstance(payload, CompressedLinear):
+        return tuple(map(int, payload.pattern.shape))
+    if isinstance(payload, (PackedTensor,)):
+        return tuple(map(int, payload.shape))
+    if isinstance(payload, QuantizedTensor):
+        return tuple(map(int, payload.values.shape))
+    return tuple(map(int, jnp.shape(payload)))
+
+
+def fc_stack_dispatch(
+    payloads: Sequence[Any],
+    x: jnp.ndarray,
+    *,
+    biases: Sequence[Optional[jnp.ndarray]],
+    activations: Sequence[Optional[str]],
+    dispatch: Union[None, str, DispatchConfig] = None,
+    compute_dtype=None,
+    leaves: Optional[Sequence[str]] = None,
+) -> jnp.ndarray:
+    """Apply a chain of compiled linear payloads as one fused stack.
+
+    The Pallas leg runs :func:`repro.kernels.fc_stack.fc_stack_matmul`
+    over trace-time-densified f32 weights: one launch, intermediates
+    never leave VMEM.  The jnp leg (and ineligible compiled shapes) chains
+    the ordinary per-leaf :func:`payload_dispatch` — identical numerics to
+    the unfused model to float tolerance (a sparse container's fused leg
+    sums K densely instead of block-by-block).  ``leaves`` names the
+    layers for tuned-table and fallback-warning purposes.
+    """
+    n = len(payloads)
+    if not (n == len(biases) == len(activations)):
+        raise ValueError(
+            f"fc_stack_dispatch needs matching payloads/biases/activations, "
+            f"got lengths {n}/{len(biases)}/{len(activations)}")
+    cfg = resolve(dispatch)
+    if compute_dtype is None:
+        compute_dtype = x.dtype
+    leaves = list(leaves) if leaves is not None else [None] * n
+    dims = [_payload_kn(p) for p in payloads]
+    stack_leaf = "+".join(str(lf) for lf in leaves)
+    if _use_pallas(cfg, fc_stack_eligible(dims), leaf=stack_leaf,
+                   predicate=f"fc_stack_eligible(dims={dims})"):
+        ws = [_payload_dense_f32(p) for p in payloads]
+        return fc_stack_matmul(x, ws, list(biases), list(activations),
+                               interpret=cfg.run_interpret,
+                               out_dtype=compute_dtype)
+    y = x
+    for payload, b, act, lf in zip(payloads, biases, activations, leaves):
+        y = payload_dispatch(payload, y, dispatch=cfg, bias=b,
+                             activation=act, compute_dtype=compute_dtype,
+                             leaf=lf)
+    return y

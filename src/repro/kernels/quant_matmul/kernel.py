@@ -24,9 +24,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..sparse_matmul.kernel import ACTIVATIONS, _check_activation, _unpack_int4_rows
+from ..sparse_matmul.kernel import (
+    ACTIVATIONS,
+    _check_activation,
+    _check_pool,
+    _im2col_tile,
+    _pool_tile,
+    _unpack_int4_rows,
+)
 
-__all__ = ["quant_matmul"]
+__all__ = ["quant_matmul", "quant_conv"]
 
 
 def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
@@ -49,6 +56,59 @@ def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
     @pl.when(k == n_k - 1)
     def _emit():
         scale = s_ref[0].astype(jnp.float32)  # (bn,) per-out-channel
+        out = acc_ref[...] * scale[None, :] + b_ref[0].astype(jnp.float32)[None, :]
+        if activation is not None:
+            out = ACTIVATIONS[activation](out)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _kernel_packed_db(x_ref, w_hbm, s_ref, b_ref, o_ref, acc_ref, w_buf,
+                      w_sems, *, n_n: int, n_k: int, w_bk: int, bn: int,
+                      activation: Optional[str]):
+    """Packed-container (m, n, k) step with a double-buffered prologue.
+
+    The uint8 (K/2, N) container stays in HBM; each step's (w_bk, bn)
+    tile is streamed into a two-slot VMEM buffer by hand, with the next
+    (n, k) step's DMA started before this step's wait — the int4 nibble
+    decode overlaps the next tile's copy.  Steps are linearised as
+    ``n * n_k + k`` (the grid's own iteration order), so the prefetch
+    crosses n-boundaries too.
+    """
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+    step = n * n_k + k
+    slot = jax.lax.rem(step, 2)
+
+    def _start(s2, slot2):
+        n2 = jax.lax.div(s2, n_k)
+        k2 = jax.lax.rem(s2, n_k)
+        pltpu.make_async_copy(
+            w_hbm.at[pl.ds(k2 * w_bk, w_bk), pl.ds(n2 * bn, bn)],
+            w_buf.at[slot2], w_sems.at[slot2]).start()
+
+    @pl.when(step == 0)
+    def _warm():
+        _start(0, 0)
+
+    @pl.when(step + 1 < n_n * n_k)
+    def _prefetch():
+        _start(step + 1, 1 - slot)
+
+    pltpu.make_async_copy(
+        w_hbm.at[pl.ds(k * w_bk, w_bk), pl.ds(n * bn, bn)],
+        w_buf.at[slot], w_sems.at[slot]).wait()
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = _unpack_int4_rows(w_buf[slot]).astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _emit():
+        scale = s_ref[0].astype(jnp.float32)
         out = acc_ref[...] * scale[None, :] + b_ref[0].astype(jnp.float32)[None, :]
         if activation is not None:
             out = ACTIVATIONS[activation](out)
@@ -99,19 +159,152 @@ def quant_matmul(
         bias = jnp.zeros((N,), jnp.float32)
     n_k = K // bk
     w_bk = bk // 2 if packed else bk
+    if packed:
+        # hand-driven two-slot double buffer: the next tile's HBM->VMEM
+        # DMA overlaps this tile's nibble decode + MXU pass
+        kernel = functools.partial(_kernel_packed_db, n_n=N // bn, n_k=n_k,
+                                   w_bk=w_bk, bn=bn, activation=activation)
+        w_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32),
+                   pltpu.VMEM((2, w_bk, bn), jnp.uint8),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = functools.partial(_kernel, n_k=n_k, activation=activation,
+                                   packed=False)
+        w_spec = pl.BlockSpec((w_bk, bn), lambda m, n, k: (k, n))
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, activation=activation,
-                          packed=packed),
+        kernel,
         grid=(M // bm, N // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
-            pl.BlockSpec((w_bk, bn), lambda m, n, k: (k, n)),
+            w_spec,
             pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
             pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=scratch,
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         interpret=interpret,
         name="logicsparse_quant_matmul",
+    )(x, w_q, scales.reshape(1, N), bias.reshape(1, N).astype(jnp.float32))
+
+
+def _conv_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, patch_ref, *,
+                 n_k: int, activation: Optional[str], packed: bool,
+                 conv, pool):
+    """Fused-conv (m, n, k) step: m is the batch index; the (Ho*Wo, K)
+    patch tile is built in VMEM at the image's first step and each k step
+    reads its (Ho*Wo, bk) activation tile as a dynamic lane slice."""
+    kh, kw, Ho, Wo, bk = conv
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((n == 0) & (k == 0))
+    def _patches():
+        patch_ref[...] = _im2col_tile(x_ref[0], kh, kw, Ho, Wo)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xt = patch_ref[:, pl.ds(k * bk, bk)].astype(jnp.float32)
+    w = w_ref[...]
+    if packed:
+        w = _unpack_int4_rows(w)
+    acc_ref[...] += jnp.dot(xt, w.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _emit():
+        scale = s_ref[0].astype(jnp.float32)
+        out = acc_ref[...] * scale[None, :] + b_ref[0].astype(jnp.float32)[None, :]
+        if activation is not None:
+            out = ACTIVATIONS[activation](out)
+        t = out.reshape(Ho, Wo, out.shape[-1])
+        if pool is not None:
+            t = _pool_tile(t, pool)
+        o_ref[0] = t.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel_hw", "bn", "bk", "interpret", "out_dtype",
+                     "activation", "packed", "pool"),
+)
+def quant_conv(
+    x: jnp.ndarray,       # (B, H, W, cin) NHWC, stride 1 / VALID
+    w_q: jnp.ndarray,     # (K, N) int8 — or (K/2, N) uint8 when packed
+    scales: jnp.ndarray,  # (N,) f32
+    bias: Optional[jnp.ndarray] = None,
+    *,
+    kernel_hw,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+    activation: Optional[str] = None,
+    packed: bool = False,
+    pool=None,
+) -> jnp.ndarray:
+    """Fused-im2col quantised conv: pool(act(conv(x, dequant(W)) + b)).
+
+    The dense-quantised twin of
+    :func:`repro.kernels.sparse_matmul.kernel.block_sparse_conv`: same
+    in-kernel patch construction and pooled emit, over the quant kernel's
+    (m, n, k) accumulation.  ``bn``/``bk`` default to 128 when the dim
+    divides, else the whole dim (interpret-only shapes, same rule as the
+    linear dispatch path).  Output is bitwise identical to
+    im2col + :func:`quant_matmul` at the same tiles.
+    """
+    _check_activation(activation)
+    if x.ndim != 4:
+        raise ValueError(f"quant_conv expects NHWC input, got {x.shape}")
+    B, H, W, cin = x.shape
+    kh, kw = kernel_hw
+    Ho, Wo = H - kh + 1, W - kw + 1
+    if Ho < 1 or Wo < 1:
+        raise ValueError(
+            f"conv kernel {tuple(kernel_hw)} does not fit the {H}x{W} input")
+    _check_pool(pool, Ho, Wo)
+    K = cin * kh * kw
+    if packed:
+        if w_q.dtype != jnp.uint8:
+            raise ValueError(
+                f"packed=True needs a uint8 int4x2 container, got {w_q.dtype}")
+        if K % 2:
+            raise ValueError(f"packed quant_conv needs even K, got K={K}")
+        K2, N = w_q.shape[0] * 2, w_q.shape[1]
+    else:
+        K2, N = w_q.shape
+    if K != K2:
+        raise ValueError(
+            f"im2col K={K} (cin*kh*kw) != weight rows {K2}")
+    if bn is None or N % bn:
+        bn = 128 if N % 128 == 0 else N
+    if bk is None or K % bk or (packed and bk % 2):
+        bk = 128 if K % 128 == 0 else K
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+    n_k = K // bk
+    w_bk = bk // 2 if packed else bk
+    Hp, Wp = (Ho // pool[1], Wo // pool[1]) if pool is not None else (Ho, Wo)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, n_k=n_k, activation=activation,
+                          packed=packed, conv=(kh, kw, Ho, Wo, bk),
+                          pool=pool),
+        grid=(B, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((1, H, W, cin), lambda m, n, k: (m, 0, 0, 0)),
+            pl.BlockSpec((w_bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((1, Hp, Wp, bn),
+                               lambda m, n, k: (m, 0, 0, n)),
+        scratch_shapes=[pltpu.VMEM((Ho * Wo, bn), jnp.float32),
+                        pltpu.VMEM((Ho * Wo, K), x.dtype)],
+        out_shape=jax.ShapeDtypeStruct((B, Hp, Wp, N), out_dtype),
+        interpret=interpret,
+        name="logicsparse_quant_conv",
     )(x, w_q, scales.reshape(1, N), bias.reshape(1, N).astype(jnp.float32))

@@ -31,6 +31,21 @@ Two entry points share the schedule:
 * :func:`block_sparse_matmul_decode` — batched-RHS decode shapes (M is the
   live batch, usually << 128): picks the smallest legal sublane tile and
   pads, so a 4-slot serving step does not burn a 128-row MXU pass.
+
+A third entry, :func:`block_sparse_conv`, runs the same schedule for
+convolutions without a trace-time im2col: the grid is ``(B, P)``, the
+NHWC image rides into VMEM once per batch element, and the kernel builds
+the ``(H_out*W_out, cin*kh*kw)`` patch tile *in VMEM* at the first grid
+step (static shifted slices — pure data movement).  Each schedule step
+then reads its ``(H_out*W_out, bk)`` activation tile as a dynamic lane
+slice of that scratch, so patches never exist in HBM.  The emit step can
+additionally fuse a 2-d window pool (``("avg"|"max", size)``) so a whole
+conv→act→pool block is one launch.
+
+Bit-packed (int4x2) containers stream through a two-slot double buffer in
+the linear kernels' prologue: the next block's HBM->VMEM DMA is started
+before this block's nibble decode + MXU pass, so decode latency hides
+under the copy instead of serialising with it.
 """
 from __future__ import annotations
 
@@ -43,7 +58,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["ACTIVATIONS", "block_sparse_matmul", "block_sparse_matmul_decode"]
+__all__ = ["ACTIVATIONS", "POOL_MODES", "block_sparse_matmul",
+           "block_sparse_matmul_decode", "block_sparse_conv"]
 
 # Fused epilogue nonlinearities (applied in f32).  The jnp oracle
 # (ref.block_sparse_matmul_ref) and the dispatch fallbacks import THIS
@@ -78,6 +94,51 @@ def _unpack_int4_rows(w: jnp.ndarray) -> jnp.ndarray:
     return jnp.bitwise_xor(both, jnp.uint8(8)).astype(jnp.int8) - jnp.int8(8)
 
 
+# Fused pooling modes for the conv entry's emit step.
+POOL_MODES = ("avg", "max")
+
+
+def _check_pool(pool: Optional[Tuple[str, int]], Ho: int, Wo: int) -> None:
+    if pool is None:
+        return
+    mode, size = pool
+    if mode not in POOL_MODES or int(size) < 1:
+        raise ValueError(
+            f"unknown fused pool {pool!r} — expected (mode, size) with "
+            f"mode in {POOL_MODES} and size >= 1")
+    if Ho % size or Wo % size:
+        raise ValueError(
+            f"fused pool window {size} does not tile the conv output "
+            f"({Ho}x{Wo}) — the emit step pools non-overlapping windows")
+
+
+def _im2col_tile(img: jnp.ndarray, kh: int, kw: int, Ho: int,
+                 Wo: int) -> jnp.ndarray:
+    """(H, W, cin) image -> (Ho*Wo, cin*kh*kw) patch tile, in VMEM.
+
+    Static shifted slices — one per (dh, dw) tap — stacked and transposed
+    into the channel-major patch feature order of
+    ``lax.conv_general_dilated_patches`` (f = c*kh*kw + dh*kw + dw), so
+    the result is bitwise the tile the trace-time im2col would produce.
+    Stride 1, VALID only: the fused-conv gate enforces that geometry.
+    """
+    taps = [img[dh:dh + Ho, dw:dw + Wo, :]
+            for dh in range(kh) for dw in range(kw)]
+    t = jnp.stack(taps, axis=-2)          # (Ho, Wo, kh*kw, cin)
+    t = jnp.swapaxes(t, -1, -2)           # (Ho, Wo, cin, kh*kw)
+    return t.reshape(Ho * Wo, t.shape[2] * kh * kw)
+
+
+def _pool_tile(t: jnp.ndarray, pool: Tuple[str, int]) -> jnp.ndarray:
+    """(Ho, Wo, bn) -> (Ho/z, Wo/z, bn) non-overlapping window pool."""
+    mode, z = pool
+    Ho, Wo, bn = t.shape
+    t = t.reshape(Ho // z, z, Wo // z, z, bn)
+    if mode == "max":
+        return t.max(axis=(1, 3))
+    return t.sum(axis=(1, 3)) / float(z * z)
+
+
 def _kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
             activation: Optional[str], packed: bool = False):
     """meta_ref rows: [row, col, packed_idx, is_first, is_last] per step."""
@@ -102,6 +163,56 @@ def _kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
         x.astype(jnp.float32), w.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
+
+    @pl.when(is_last == 1)
+    def _emit():
+        out = acc_ref[...] + bias_ref[0].astype(jnp.float32)[None, :]
+        if activation is not None:
+            out = ACTIVATIONS[activation](out)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _kernel_packed_db(meta_ref, x_ref, w_hbm, scale_ref, bias_ref, o_ref,
+                      acc_ref, w_buf, w_sems, *, activation: Optional[str]):
+    """Packed-container schedule step with a double-buffered prologue.
+
+    The (bk/2, bn) uint8 block tiles stay in HBM (``memory_space=ANY``)
+    and are streamed into a two-slot VMEM buffer by hand: step p starts
+    the DMA for block p+1 *before* waiting on its own, so the int4 nibble
+    decode and the MXU pass of block p overlap block p+1's copy.  The
+    schedule, dequant and epilogue are identical to :func:`_kernel` —
+    only who drives the weight stream changes.
+    """
+    p = pl.program_id(1)
+    n_p = pl.num_programs(1)
+    slot = jax.lax.rem(p, 2)
+
+    @pl.when(p == 0)
+    def _warm():  # first block of this m-row: nothing in flight yet
+        pltpu.make_async_copy(w_hbm.at[meta_ref[2, 0]], w_buf.at[0],
+                              w_sems.at[0]).start()
+
+    @pl.when(p + 1 < n_p)
+    def _prefetch():  # overlap: next block's DMA before this block's wait
+        pltpu.make_async_copy(w_hbm.at[meta_ref[2, p + 1]],
+                              w_buf.at[1 - slot],
+                              w_sems.at[1 - slot]).start()
+
+    pltpu.make_async_copy(w_hbm.at[meta_ref[2, p]], w_buf.at[slot],
+                          w_sems.at[slot]).wait()
+
+    is_first = meta_ref[3, p]
+    is_last = meta_ref[4, p]
+
+    @pl.when(is_first == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # packed containers are always quantised: decode then fused dequant
+    w = _unpack_int4_rows(w_buf[slot])
+    w = w.astype(jnp.float32) * scale_ref[0].astype(jnp.float32)[None, :]
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                            preferred_element_type=jnp.float32)
 
     @pl.when(is_last == 1)
     def _emit():
@@ -166,10 +277,22 @@ def _call(
         bias = bias.reshape(n_cols, bn).astype(jnp.float32)
 
     grid = (M // bm, P)
-    # packed containers stream (1, bk/2, bn) uint8 tiles — half the HBM
-    # bytes per block; the kernel prologue decodes them in-register
+    # packed containers stream (bk/2, bn) uint8 tiles — half the HBM bytes
+    # per block — through a hand-driven two-slot double buffer so the next
+    # block's DMA overlaps this block's nibble decode + MXU pass
     w_bk = bk // 2 if packed else bk
-    kernel = functools.partial(_kernel, activation=activation, packed=packed)
+    if packed:
+        kernel = functools.partial(_kernel_packed_db, activation=activation)
+        w_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32),
+                   pltpu.VMEM((2, w_bk, bn), jnp.uint8),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = functools.partial(_kernel, activation=activation,
+                                   packed=False)
+        w_spec = pl.BlockSpec((1, w_bk, bn),
+                              lambda m, p, meta: (meta[2, p], 0, 0))
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -177,12 +300,12 @@ def _call(
             grid=grid,
             in_specs=[
                 pl.BlockSpec((bm, bk), lambda m, p, meta: (m, meta[0, p])),
-                pl.BlockSpec((1, w_bk, bn), lambda m, p, meta: (meta[2, p], 0, 0)),
+                w_spec,
                 pl.BlockSpec((1, bn), lambda m, p, meta: (meta[1, p], 0)),
                 pl.BlockSpec((1, bn), lambda m, p, meta: (meta[1, p], 0)),
             ],
             out_specs=pl.BlockSpec((bm, bn), lambda m, p, meta: (m, meta[1, p])),
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            scratch_shapes=scratch,
         ),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         interpret=interpret,
@@ -278,6 +401,221 @@ def block_sparse_matmul(
         m = jnp.repeat(jnp.asarray(colmask), bn)
         empty = _epilogue_of_zero(N, bias, activation).astype(y.dtype)
         y = jnp.where(m[None, :], y, empty[None, :])
+    return y
+
+
+def _conv_kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
+                 acc_ref, patch_ref, *, activation: Optional[str],
+                 packed: bool, conv: Tuple[int, int, int, int, int],
+                 pool: Optional[Tuple[str, int]]):
+    """Fused-conv schedule step: grid (B, P), one image per m index.
+
+    Step p == 0 of each image materialises the whole (Ho*Wo, K) patch
+    tile into VMEM scratch from the (H, W, cin) image block — static
+    shifted slices, no HBM patch matrix.  Every step then takes its
+    (Ho*Wo, bk) activation tile as a *dynamic lane slice* of that
+    scratch, indexed by the prefetched schedule row, and runs exactly
+    the linear kernel's accumulate/dequant.  The emit step applies the
+    fused bias+activation epilogue and (optionally) a window pool before
+    writing the (1, Hp, Wp, bn) output block.
+    """
+    kh, kw, Ho, Wo, bk = conv
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _patches():
+        patch_ref[...] = _im2col_tile(x_ref[0], kh, kw, Ho, Wo)
+
+    is_first = meta_ref[3, p]
+    is_last = meta_ref[4, p]
+
+    @pl.when(is_first == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    r = meta_ref[0, p]
+    xt = patch_ref[:, pl.ds(r * bk, bk)]
+    w = w_ref[0]
+    if packed:
+        w = _unpack_int4_rows(w)
+    if w.dtype == jnp.int8:
+        w = w.astype(jnp.float32) * scale_ref[0].astype(jnp.float32)[None, :]
+    acc_ref[...] += jnp.dot(
+        xt.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(is_last == 1)
+    def _emit():
+        out = acc_ref[...] + bias_ref[0].astype(jnp.float32)[None, :]
+        if activation is not None:
+            out = ACTIVATIONS[activation](out)
+        t = out.reshape(Ho, Wo, out.shape[-1])
+        if pool is not None:
+            t = _pool_tile(t, pool)
+        o_ref[0] = t.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_rows", "block_cols", "block", "n_rows", "n_cols",
+                     "kernel_hw", "pool", "interpret", "out_dtype",
+                     "activation", "packed"),
+)
+def _conv_call(
+    x: jnp.ndarray,
+    blocks: jnp.ndarray,
+    scales: Optional[jnp.ndarray],
+    bias: Optional[jnp.ndarray],
+    *,
+    block_rows: Tuple[int, ...],
+    block_cols: Tuple[int, ...],
+    block: Tuple[int, int],
+    n_rows: int,
+    n_cols: int,
+    kernel_hw: Tuple[int, int],
+    pool: Optional[Tuple[str, int]],
+    interpret: bool,
+    out_dtype,
+    activation: Optional[str],
+    packed: bool,
+):
+    B, H, W, cin = x.shape
+    kh, kw = kernel_hw
+    Ho, Wo = H - kh + 1, W - kw + 1
+    bk, bn = block
+    N = n_cols * bn
+    rows, cols, packed_idx, first, last = _schedule(
+        np.asarray(block_rows, np.int32), np.asarray(block_cols, np.int32)
+    )
+    P = rows.size
+    meta = jnp.asarray(np.stack([rows, cols, packed_idx, first, last]))
+
+    if scales is None:
+        scales = jnp.ones((n_cols, bn), jnp.float32)
+    else:
+        scales = scales.reshape(n_cols, bn).astype(jnp.float32)
+    if bias is None:
+        bias = jnp.zeros((n_cols, bn), jnp.float32)
+    else:
+        bias = bias.reshape(n_cols, bn).astype(jnp.float32)
+
+    Hp, Wp = (Ho // pool[1], Wo // pool[1]) if pool is not None else (Ho, Wo)
+    w_bk = bk // 2 if packed else bk
+    kernel = functools.partial(_conv_kernel, activation=activation,
+                               packed=packed, conv=(kh, kw, Ho, Wo, bk),
+                               pool=pool)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, P),
+            in_specs=[
+                pl.BlockSpec((1, H, W, cin), lambda m, p, meta: (m, 0, 0, 0)),
+                pl.BlockSpec((1, w_bk, bn),
+                             lambda m, p, meta: (meta[2, p], 0, 0)),
+                pl.BlockSpec((1, bn), lambda m, p, meta: (meta[1, p], 0)),
+                pl.BlockSpec((1, bn), lambda m, p, meta: (meta[1, p], 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, Hp, Wp, bn), lambda m, p, meta: (m, 0, 0, meta[1, p])),
+            scratch_shapes=[pltpu.VMEM((Ho * Wo, bn), jnp.float32),
+                            pltpu.VMEM((Ho * Wo, n_rows * bk), x.dtype)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hp, Wp, N), out_dtype),
+        interpret=interpret,
+        name="logicsparse_block_sparse_conv",
+    )(meta, x, blocks, scales, bias)
+    return out
+
+
+def block_sparse_conv(
+    x: jnp.ndarray,
+    blocks: jnp.ndarray,
+    block_rows,
+    block_cols,
+    *,
+    kernel_hw: Tuple[int, int],
+    n_row_blocks: int,
+    n_col_blocks: int,
+    scales: Optional[jnp.ndarray] = None,
+    bias: Optional[jnp.ndarray] = None,
+    activation: Optional[str] = None,
+    pool: Optional[Tuple[str, int]] = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    packed: bool = False,
+) -> jnp.ndarray:
+    """Fused-im2col conv entry: y = pool(act(conv(x, W) + b)) in one launch.
+
+    ``x`` is NHWC, stride 1, VALID; W is the block-compacted im2col weight
+    (same container families as :func:`block_sparse_matmul`, including the
+    bit-packed int4 one).  Patch rows are gathered from the image *inside
+    the kernel* (VMEM scratch) — no (B*Ho*Wo, K) patch matrix ever exists —
+    and the per-step activation tile dynamics match the linear kernel
+    exactly, so the output is bitwise identical to im2col + matmul.
+
+    ``pool=(mode, size)`` fuses a non-overlapping window pool into the
+    emit step (``"avg"`` divides by size², matching
+    ``lax.reduce_window``'s add-then-scale formula; ``"max"`` takes the
+    window max); the output is then (B, Ho/size, Wo/size, N).
+    """
+    _check_activation(activation)
+    if x.ndim != 4:
+        raise ValueError(
+            f"block_sparse_conv expects NHWC input, got shape {x.shape}")
+    kh, kw = kernel_hw
+    B, H, W, cin = x.shape
+    Ho, Wo = H - kh + 1, W - kw + 1
+    if Ho < 1 or Wo < 1:
+        raise ValueError(
+            f"conv kernel {kernel_hw} does not fit the {H}x{W} input")
+    _check_pool(pool, Ho, Wo)
+    bk, bn = int(blocks.shape[1]), int(blocks.shape[2])
+    if packed:
+        if blocks.dtype != jnp.uint8:
+            raise ValueError(
+                f"packed=True needs a uint8 int4x2 container, got "
+                f"{blocks.dtype}")
+        bk *= 2
+    K = n_row_blocks * bk
+    if K != cin * kh * kw:
+        raise ValueError(
+            f"im2col K={cin * kh * kw} (cin*kh*kw) != n_row_blocks*bk={K}")
+
+    N = n_col_blocks * bn
+    Hp, Wp = (Ho // pool[1], Wo // pool[1]) if pool is not None else (Ho, Wo)
+    block_rows = np.asarray(block_rows, np.int32)
+    block_cols = np.asarray(block_cols, np.int32)
+    if block_rows.size == 0:
+        # fully-empty pattern: the output is one epilogue application —
+        # pooling a constant tile returns the same constant, so no launch
+        empty = _epilogue_of_zero(N, bias, activation)
+        return jnp.broadcast_to(empty[None, None, None, :],
+                                (B, Hp, Wp, N)).astype(out_dtype)
+
+    present_cols = np.unique(block_cols)
+    y = _conv_call(
+        x, blocks, scales, bias,
+        block_rows=tuple(int(r) for r in block_rows),
+        block_cols=tuple(int(c) for c in block_cols),
+        block=(bk, bn),
+        n_rows=n_row_blocks,
+        n_cols=n_col_blocks,
+        kernel_hw=(kh, kw),
+        pool=pool,
+        interpret=interpret,
+        out_dtype=out_dtype,
+        activation=activation,
+        packed=packed,
+    )
+    if present_cols.size != n_col_blocks:
+        colmask = np.zeros((n_col_blocks,), bool)
+        colmask[present_cols] = True
+        m = jnp.repeat(jnp.asarray(colmask), bn)
+        empty = _epilogue_of_zero(N, bias, activation).astype(y.dtype)
+        y = jnp.where(m[None, None, None, :], y,
+                      empty[None, None, None, :])
     return y
 
 

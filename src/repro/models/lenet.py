@@ -22,7 +22,9 @@ import numpy as np
 
 from ..core.cost_model import LayerSpec
 from ..core.dispatch import (
+    ConvPayload,
     conv_dispatch,
+    fc_stack_dispatch,
     payload_dispatch,
     resolve as resolve_dispatch,
 )
@@ -45,6 +47,7 @@ LAYERS = [
 # conv-aware policy costing (MACs scale by H_out*W_out) and for the
 # autotuner's M scaling (an im2col'd conv is a (B*H_out*W_out, K, N) leaf).
 CONV_OUT_HW = {"conv1": (24, 24), "conv2": (8, 8)}
+LENET_CONV_IN_HW = {"conv1": (28, 28), "conv2": (12, 12)}
 ACT_IN_ELEMS = {"conv1": 28 * 28 * 1, "conv2": 12 * 12 * 6,
                 "fc1": 256, "fc2": 120, "fc3": 84}
 ACT_OUT_ELEMS = {"conv1": 24 * 24 * 6, "conv2": 8 * 8 * 16,
@@ -73,6 +76,37 @@ def _pool(x):
         x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
 
 
+def lenet_fusion_plan(compressed) -> Dict[str, object]:
+    """Derive the layer-fusion plan for a compressed LeNet.
+
+    Fusion is *opt-in*: ``lenet_forward`` only fuses when handed a plan
+    (``fusion=True`` derives this one), so per-leaf dispatch semantics —
+    which tests and the autotuner observe layer by layer — stay the
+    default.  The plan says:
+
+    - ``{name: {"pool": ("avg", 2)}}`` for each compressed conv whose
+      geometry the fused conv entry supports (stride 1, VALID): the 2×2
+      average pool runs inside the conv kernel's emit step instead of as
+      a separate HBM round-trip.
+    - ``"fc_stack": ("fc1", "fc2", "fc3")`` when all three FC layers are
+      compressed: they chain through one fused kernel launch
+      (:func:`repro.core.dispatch.fc_stack_dispatch`) with no
+      intermediate HBM activations.
+    """
+    plan: Dict[str, object] = {}
+    if not compressed:
+        return plan
+    for name in ("conv1", "conv2"):
+        cp = compressed.get(name)
+        if (isinstance(cp, ConvPayload)
+                and tuple(cp.strides) == (1, 1)
+                and cp.padding == "VALID"):
+            plan[name] = {"pool": ("avg", 2)}
+    if all(n in compressed for n in ("fc1", "fc2", "fc3")):
+        plan["fc_stack"] = ("fc1", "fc2", "fc3")
+    return plan
+
+
 def lenet_forward(
     params: Params,
     images: jnp.ndarray,                       # (B, 28, 28, 1)
@@ -81,6 +115,7 @@ def lenet_forward(
     qat_bits: Optional[Dict[str, int]] = None,
     interpret_kernels: bool = False,
     dispatch=None,
+    fusion=None,
 ) -> jnp.ndarray:
     """Forward pass. ``masks`` applies static pruning (training / eval);
     ``qat_bits`` applies straight-through fake quantisation per layer (the
@@ -99,12 +134,23 @@ def lenet_forward(
     REPRO_FORCE_DISPATCH); the legacy ``interpret_kernels=True`` flag is
     shorthand for forced-Pallas (interpret mode off-TPU) and only applies
     when no explicit ``dispatch`` is given — an explicit argument always
-    wins."""
+    wins.
+
+    ``fusion`` opts compressed layers into the fused schedules: ``True``
+    derives :func:`lenet_fusion_plan` from ``compressed``; a dict is used
+    as the plan directly; ``None``/``False`` (default) keeps the
+    layer-by-layer dispatch path."""
     from ..core.quant import fake_quant
 
     if dispatch is None and interpret_kernels:
         dispatch = "pallas"
     dcfg = resolve_dispatch(dispatch)
+    if fusion is True:
+        plan = lenet_fusion_plan(compressed)
+    elif isinstance(fusion, dict):
+        plan = fusion
+    else:
+        plan = {}
 
     def w(name):
         ww = params[name + "_w"]
@@ -116,16 +162,31 @@ def lenet_forward(
 
     def conv_block(name, x):
         cw = compressed.get(name) if compressed is not None else None
+        pool = None
+        entry = plan.get(name)
+        if cw is not None and isinstance(entry, dict):
+            pool = entry.get("pool")
         if cw is not None:  # ConvPayload: engine-free im2col datapath
-            return conv_dispatch(cw, x, dispatch=dcfg,
-                                 bias=params[name + "_b"],
-                                 activation="relu", leaf=name)
-        return jax.nn.relu(_conv(x, w(name), params[name + "_b"]))
+            y = conv_dispatch(cw, x, dispatch=dcfg,
+                              bias=params[name + "_b"],
+                              activation="relu", leaf=name, pool=pool)
+            return y if pool is not None else _pool(y)
+        return _pool(jax.nn.relu(_conv(x, w(name), params[name + "_b"])))
 
     x = images
-    x = _pool(conv_block("conv1", x))
-    x = _pool(conv_block("conv2", x))
+    x = conv_block("conv1", x)
+    x = conv_block("conv2", x)
     x = x.reshape(x.shape[0], -1)  # (B, 256)
+
+    stack = plan.get("fc_stack")
+    if (stack and compressed is not None
+            and all(n in compressed for n in stack)):
+        return fc_stack_dispatch(
+            [compressed[n] for n in stack], x,
+            biases=[params[n + "_b"] for n in stack],
+            activations=["relu" if n != stack[-1] else None for n in stack],
+            dispatch=dcfg, leaves=tuple(stack))
+
     for name in ("fc1", "fc2", "fc3"):
         act = "relu" if name != "fc3" else None
         cw = compressed.get(name) if compressed is not None else None

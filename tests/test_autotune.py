@@ -414,3 +414,38 @@ def test_autotune_model_covers_conv_leaves(tmp_path):
     leaf_keys = [k for k in t2.entries if ":leaf=" in k]
     assert {k.rsplit("leaf=", 1)[1] for k in leaf_keys} >= \
         {"conv1", "conv2"}
+
+
+def test_offtpu_measured_winner_never_interpret_over_xla_twin(monkeypatch):
+    """Measurement-gating bugfix: off-TPU, an interpret-mode Pallas timing
+    must NEVER beat the compiled XLA twin in the measured refinement, even
+    under measure_interpret=True and even when the (meaningless) interpret
+    wall-clock happens to come out faster."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("off-TPU gating test")
+    import repro.core.autotune as at
+
+    # rig the measurement: every Pallas candidate "times" absurdly fast,
+    # the XLA twin slow — the pre-fix min() would crown a Pallas candidate
+    monkeypatch.setattr(
+        at, "_runner",
+        lambda kind, cand, x, leaf, pattern, interpret: (lambda: cand))
+    monkeypatch.setattr(
+        at, "_time_fn",
+        lambda fn, iters, warmup=2: 0.001 if fn().use_pallas else 10.0)
+
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(128, 128)).astype(np.float32)
+    from repro.core.quant import quantize
+    q = quantize(w, 8, axis=1)
+    leaf = {"w_q": jnp.asarray(q.values),
+            "w_s": jnp.asarray(q.scales).reshape(128)}
+    x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    winner = at.autotune_leaf(
+        "quant", x, leaf,
+        options=TuneOptions(iters=1, warmup=0, max_measured=8,
+                            measure_interpret=True))
+    assert not winner.use_pallas, (
+        "off-TPU tuning selected an interpret-only Pallas entry over the "
+        f"compiled XLA twin: {winner}")
+    assert winner.measured_us == pytest.approx(10.0)

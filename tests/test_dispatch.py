@@ -357,3 +357,79 @@ def test_quant_pallas_branch_fuses_epilogue(monkeypatch):
     y_jnp = linear_apply(p, x, dispatch="jnp", activation="relu")
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_jnp),
                                rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------- loud forced-pallas fallback
+
+
+def _sparse_payload_32():
+    """A (32, 32)-blocked sparse payload: kernel-ineligible on hardware
+    (blocks don't hit the 128 rule for this 64x64 shape)."""
+    import repro.core.dispatch as disp
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(64, 64)).astype(np.float32)
+    mask = np.zeros((64, 64), bool)
+    mask[:32, :32] = True
+    from repro.core.sparsity import compress
+    cl = compress(w, mask, (32, 32))
+    assert not disp.sparse_kernel_eligible(cl.pattern, None)
+    return cl
+
+
+def test_forced_pallas_fallback_warns_once_with_leaf_and_predicate():
+    """mode="pallas" + interpret=False + ineligible leaf => exactly ONE
+    structured DispatchFallbackWarning naming the leaf and the failed
+    eligibility predicate; repeats of the same (leaf, predicate) stay
+    silent."""
+    import warnings
+
+    import repro.core.dispatch as disp
+
+    cl = _sparse_payload_32()
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(2, 64)),
+                    jnp.float32)
+    cfg = DispatchConfig(mode="pallas", interpret=False)
+    disp._FALLBACK_WARNED.clear()
+    try:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            y = disp.payload_dispatch(cl, x, dispatch=cfg, leaf="fcX")
+            disp.payload_dispatch(cl, x, dispatch=cfg, leaf="fcX")
+        falls = [w for w in rec
+                 if issubclass(w.category, disp.DispatchFallbackWarning)]
+        assert len(falls) == 1, [str(w.message) for w in falls]
+        msg = falls[0].message
+        assert msg.leaf == "fcX"
+        assert "sparse_kernel_eligible" in msg.predicate
+        assert "fcX" in str(msg) and "sparse_kernel_eligible" in str(msg)
+        # numerics still correct: the fallback IS the jnp twin
+        np.testing.assert_array_equal(
+            np.asarray(y),
+            np.asarray(disp.payload_dispatch(cl, x, dispatch="jnp")))
+        # a different leaf with the same predicate warns again
+        with warnings.catch_warnings(record=True) as rec2:
+            warnings.simplefilter("always")
+            disp.payload_dispatch(cl, x, dispatch=cfg, leaf="fcY")
+        assert sum(issubclass(w.category, disp.DispatchFallbackWarning)
+                   for w in rec2) == 1
+    finally:
+        disp._FALLBACK_WARNED.clear()
+
+
+def test_forced_pallas_fallback_strict_env_raises(monkeypatch):
+    """REPRO_DISPATCH_STRICT=1 turns the silent-fallback warning into a
+    DispatchStrictError; eligible leaves and interpret mode are unaffected."""
+    import repro.core.dispatch as disp
+
+    cl = _sparse_payload_32()
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(2, 64)),
+                    jnp.float32)
+    monkeypatch.setenv(disp.STRICT_ENV, "1")
+    disp._FALLBACK_WARNED.clear()
+    cfg = DispatchConfig(mode="pallas", interpret=False)
+    with pytest.raises(disp.DispatchStrictError, match="fcZ"):
+        disp.payload_dispatch(cl, x, dispatch=cfg, leaf="fcZ")
+    # interpret-mode forced pallas runs the kernel — no fallback, no raise
+    y = disp.payload_dispatch(cl, x, dispatch="pallas", leaf="fcZ")
+    assert y.shape == (2, 64)
+    disp._FALLBACK_WARNED.clear()

@@ -415,3 +415,59 @@ def test_quant_linear_epilogue_and_padding():
     assert y.shape == (5, 128)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
                                rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("family", ["sparse", "quant"])
+@pytest.mark.parametrize("pool", [("avg", 2), ("max", 2)])
+def test_conv_dispatch_fused_pool_matches_reduce_window(pool, family):
+    """Fused conv→relu→pool (pool in the kernel's emit step) against the
+    lax.reduce_window oracle on the dense decompressed conv — both the
+    forced-Pallas fused entry and the jnp twin's trailing pool."""
+    import jax
+
+    from repro.core.compile_sparse import (conv_weight_matrix,
+                                           conv_weight_unmatrix)
+    from repro.core.dispatch import ConvPayload, conv_dispatch
+    from repro.core.quant import quantize
+    from repro.core.sparsity import compress, decompress
+
+    rng = np.random.default_rng(11)
+    kh, kw, cin, cout = 3, 3, 4, 8
+    K, N = cin * kh * kw, cout
+    w4 = rng.normal(size=(kh, kw, cin, cout)).astype(np.float32)
+    w2 = np.asarray(conv_weight_matrix(w4))
+    if family == "sparse":
+        bitmap = rng.random((K // 6, N // 4)) < 0.6
+        mask2 = np.kron(bitmap, np.ones((6, 4), bool))
+        payload = compress(w2, mask2, (6, 4), dtype=jnp.float32)
+        wd2 = decompress(payload).astype(jnp.float32)
+    else:
+        q = quantize(w2, 8, axis=1)
+        from repro.core.quant import QuantizedTensor
+        payload = QuantizedTensor(values=jnp.asarray(q.values),
+                                  scales=jnp.asarray(q.scales), bits=8,
+                                  axis=1)
+        wd2 = jnp.asarray(q.values, jnp.float32) * \
+            jnp.asarray(q.scales).reshape(1, N)
+    cp = ConvPayload(payload=payload, kernel=(kh, kw, cin, cout))
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, cin)), jnp.float32)  # Ho=Wo=6
+    b = jnp.asarray(rng.normal(size=(cout,)), jnp.float32)
+
+    wd = conv_weight_unmatrix(wd2, (kh, kw, cin, cout))
+    y0 = jax.nn.relu(jax.lax.conv_general_dilated(
+        x, wd, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b)
+    mode, z = pool
+    if mode == "max":
+        y0 = jax.lax.reduce_window(y0, -jnp.inf, jax.lax.max,
+                                   (1, z, z, 1), (1, z, z, 1), "VALID")
+    else:
+        y0 = jax.lax.reduce_window(y0, 0.0, jax.lax.add,
+                                   (1, z, z, 1), (1, z, z, 1),
+                                   "VALID") / (z * z)
+    for leg in ("pallas", "jnp"):
+        y = conv_dispatch(cp, x, dispatch=leg, bias=b, activation="relu",
+                          pool=pool)
+        assert y.shape == y0.shape == (2, 3, 3, cout), leg
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y0),
+                                   rtol=1e-4, atol=1e-3, err_msg=leg)

@@ -13,6 +13,10 @@
   autotune — default-vs-tuned per-layer decode timings for every shared
              sparse schedule + the tuner's cache-hit record; also written
              to the stable top-level BENCH_autotune.json
+  serve    — Poisson-traffic serving bench (ServeEngine continuous
+             batching): tokens/sec at saturation + p50/p99 latency for
+             dense vs compressed vs compressed+packed-int4x2-KV; written
+             to the stable top-level BENCH_serve.json
   roofline — 40-cell dry-run roofline table (reads results/dryrun)
 """
 from __future__ import annotations
@@ -61,7 +65,7 @@ def _kernel_bench():
 
 def main() -> None:
     sections = sys.argv[1:] or ["table1", "fig2", "kernels", "compressed",
-                                "autotune", "roofline"]
+                                "autotune", "serve", "roofline"]
     print("name,us_per_call,derived")
     if "table1" in sections:
         from . import table1_lenet
@@ -120,6 +124,21 @@ def main() -> None:
             with open(compressed_vs_dense.AUTOTUNE_JSON, "w") as f:
                 _json.dump(at, f, indent=2)
             print(f"# wrote {compressed_vs_dense.AUTOTUNE_JSON}")
+    if "serve" in sections:
+        import json as _json
+
+        from . import serve_traffic
+        result = serve_traffic.run()
+        for r in result["variants"]:
+            us = 1e6 / max(r["tokens_per_sec_saturated"], 1e-9)
+            print(f"serve/{r['variant']},{us:.1f},"
+                  f"tok_s_sat={r['tokens_per_sec_saturated']:.1f};"
+                  f"p50_ms={r['p50_latency_ms']:.0f};"
+                  f"p99_ms={r['p99_latency_ms']:.0f};"
+                  f"cache_bytes={r['cache_bytes']}")
+        with open(serve_traffic.SERVE_JSON, "w") as f:
+            _json.dump(result, f, indent=2)
+        print(f"# wrote {serve_traffic.SERVE_JSON}")
     if "roofline" in sections:
         from . import roofline
         for r in roofline.rows("pod1"):

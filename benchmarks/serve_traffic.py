@@ -1,0 +1,302 @@
+"""Serving under load: Poisson traffic through the ServeEngine.
+
+Drives the continuous-batching engine with an open-loop Poisson arrival
+process (inter-arrivals in engine-step units, fixed seed) and slot churn
+— short and long requests interleave, so slots are constantly freed and
+re-admitted mid-flight — for three variants of the same trained weights:
+
+  dense              — f32 weights, f32 KV cache
+  compressed         — engine-free int8 quant leaves (fused dequant),
+                       f32 KV cache
+  compressed_packed_kv — the same compressed weights + the int4x2
+                       bit-packed KV cache (two codes/byte, per-
+                       (slot, pos, head) scales)
+
+Reported per variant: **tokens/sec at saturation** (only steps where
+every slot is active after admission count — the steady-state number an
+operator provisions against), per-request p50/p99 latency (submit ->
+last token, queueing included), decode-cache resident bytes, and weight
+storage bytes.  Results land in the stable top-level ``BENCH_serve.json``
+so the serving trajectory is diffed run over run.
+
+The compressed variants run with ``autotune=True``: the engine tunes
+every compiled leaf at its decode shape (M = batch_slots, pinned via the
+dispatch ``m_bucket``) against an on-disk cache shared with the CI
+autotune leg — a warm cache is a pure lookup.
+
+Run:    PYTHONPATH=src python -m benchmarks.serve_traffic
+Check:  PYTHONPATH=src python -m benchmarks.serve_traffic --check
+        (CI smoke: reduced workload; asserts compressed tokens/sec >=
+        0.75x the committed BENCH_serve.json row and packed-KV cache
+        bytes <= 0.55x the unpacked f32 cache)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from repro.core import CompileRules, compile_model
+from repro.core.autotune import TuneOptions
+from repro.models.config import ArchConfig
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+
+CFG = ArchConfig(name="serve_bench", family="dense", n_layers=4, d_model=512,
+                 n_heads=8, n_kv_heads=4, d_ff=1536, vocab=2048,
+                 param_dtype="float32", remat=False)
+SLOTS = 4
+MAX_LEN = 128
+LINEAR_KEYS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd", "head")
+# stable top-level name: the serving trajectory is diffed run-over-run
+SERVE_JSON = "BENCH_serve.json"
+CHECK_TOKS_FRAC = 0.75   # check: tokens/sec >= this x the committed row
+CHECK_KV_FRAC = 0.55     # check: packed cache bytes <= this x unpacked
+
+
+def make_workload(n_requests: int, rate_per_step: float, seed: int = 0
+                  ) -> List[Dict]:
+    """Open-loop Poisson arrivals with churn-heavy size mix.
+
+    Inter-arrival times are exponential in engine-step units; sizes
+    alternate short bursts (churn: slots free and re-admit quickly) with
+    long requests that pin a slot across many admissions of the others.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_step, size=n_requests)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    work = []
+    for i in range(n_requests):
+        if i % 5 == 4:   # every 5th request is long — pins a slot
+            p_len = int(rng.integers(8, 17))
+            mnt = int(rng.integers(32, 49))
+        else:            # short: churns through slots quickly
+            p_len = int(rng.integers(3, 9))
+            mnt = int(rng.integers(4, 13))
+        prompt = rng.integers(0, CFG.vocab, size=p_len).astype(np.int32)
+        work.append({"uid": i, "arrival_step": int(arrivals[i]),
+                     "prompt": prompt, "max_new_tokens": mnt})
+    return work
+
+
+def simulate(engine: ServeEngine, workload: List[Dict]) -> Dict:
+    """Step the engine against the arrival trace; returns throughput at
+    saturation + per-request latency percentiles.
+
+    Saturation = steps where every slot is active once arrivals are
+    admitted; only tokens generated during those steps (and only their
+    wall time) enter the tokens/sec figure, so idle ramp-up/drain steps
+    never inflate it.
+    """
+    pending = sorted(workload, key=lambda w: w["arrival_step"])
+    submit_t: Dict[int, float] = {}
+    latencies: List[float] = []
+    reqs: List[Request] = []
+
+    def total_out() -> int:
+        return sum(len(r.out) for r in reqs if r.out is not None)
+
+    sat_tokens = 0
+    sat_time = 0.0
+    step = 0
+    n_steps = 0
+    t_start = time.perf_counter()
+    while pending or engine.queue or engine.active:
+        while pending and pending[0]["arrival_step"] <= step:
+            w = pending.pop(0)
+            req = Request(uid=w["uid"], prompt=w["prompt"],
+                          max_new_tokens=w["max_new_tokens"])
+            engine.submit(req)
+            reqs.append(req)
+            submit_t[w["uid"]] = time.perf_counter()
+        engine._admit()
+        saturated = len(engine.active) == engine.slots
+        before = total_out()
+        outstanding = {r.uid for r in engine.queue} | \
+            {r.uid for r in engine.active.values()}
+        t0 = time.perf_counter()
+        engine.step()
+        dt = time.perf_counter() - t0
+        now = time.perf_counter()
+        done_now = outstanding - {r.uid for r in engine.queue} - \
+            {r.uid for r in engine.active.values()}
+        for uid in done_now:
+            latencies.append(now - submit_t[uid])
+        if saturated:
+            sat_tokens += total_out() - before
+            sat_time += dt
+        step += 1
+        n_steps += 1
+        if n_steps > 100_000:
+            raise RuntimeError("traffic simulation failed to drain")
+    wall = time.perf_counter() - t_start
+    lat = np.asarray(latencies) if latencies else np.asarray([0.0])
+    return {
+        "requests_completed": len(latencies),
+        "tokens_total": total_out(),
+        "steps": n_steps,
+        "wall_s": wall,
+        "saturated_steps_frac": sat_time / max(wall, 1e-9),
+        "tokens_per_sec_saturated": sat_tokens / max(sat_time, 1e-9),
+        "tokens_per_sec_overall": total_out() / max(wall, 1e-9),
+        "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+    }
+
+
+def build_engines(autotune: bool = True) -> Dict[str, ServeEngine]:
+    params = init_params(jax.random.PRNGKey(0), CFG)
+
+    def forced(policy):
+        return CompileRules(block=(128, 128), block_density=0.25,
+                            in_block_density=0.5, min_weight_elems=0,
+                            policies={k: policy for k in LINEAR_KEYS})
+
+    dense = compile_model(params, CFG, rules=forced("dense"))
+    quant = compile_model(params, CFG, rules=forced("quant"))
+    at_kw = {}
+    if autotune:
+        from repro.core.autotune import autotune_model, default_cache_path
+        cache = default_cache_path()  # REPRO_AUTOTUNE_CACHE — the same
+        # TunedTable the CI autotune leg restores, so the serve smoke is a
+        # pure lookup there (a cold cache tunes once, outside the timing)
+        os.makedirs(os.path.dirname(cache) or ".", exist_ok=True)
+        # tune once at the engine's decode rows, then hand the table to
+        # both compressed engines — each pins m_bucket=SLOTS so every
+        # lookup hits the thin decode bucket
+        table = autotune_model(quant, M=SLOTS,
+                               options=TuneOptions(iters=5, warmup=1),
+                               path=cache)
+        at_kw = {"autotune": table}
+    return {
+        "dense": ServeEngine(dense, CFG, batch_slots=SLOTS, max_len=MAX_LEN),
+        "compressed": ServeEngine(quant, CFG, batch_slots=SLOTS,
+                                  max_len=MAX_LEN, **at_kw),
+        "compressed_packed_kv": ServeEngine(quant, CFG, batch_slots=SLOTS,
+                                            max_len=MAX_LEN,
+                                            kv_cache="int4x2", **at_kw),
+    }
+
+
+def run(n_requests: int = 40, rate_per_step: float = 0.35, seed: int = 0,
+        autotune: bool = True) -> Dict:
+    engines = build_engines(autotune=autotune)
+    variants = []
+    for name, eng in engines.items():
+        weight_bytes = sum(int(leaf.nbytes) for leaf in
+                           jax.tree_util.tree_leaves(eng.params))
+        # warm the jit before the timed trace so compile time never lands
+        # inside a request latency
+        warm = Request(uid=-1, prompt=np.asarray([1, 2, 3], np.int32),
+                       max_new_tokens=2)
+        eng.submit(warm)
+        eng.run()
+        stats = simulate(eng, make_workload(n_requests, rate_per_step, seed))
+        variants.append({
+            "variant": name,
+            "kv_cache": eng.kv_cache,
+            "cache_bytes": eng.cache_bytes(),
+            "weight_bytes": weight_bytes,
+            **stats,
+        })
+    return {
+        "backend": jax.default_backend(),
+        "config": {"arch": CFG.name, "n_layers": CFG.n_layers,
+                   "d_model": CFG.d_model, "d_ff": CFG.d_ff,
+                   "vocab": CFG.vocab, "batch_slots": SLOTS,
+                   "max_len": MAX_LEN, "autotune": autotune},
+        "arrival": {"process": "poisson", "rate_per_step": rate_per_step,
+                    "n_requests": n_requests, "seed": seed,
+                    "mix": "4 short : 1 long (slot churn)"},
+        "saturation": "steps with every slot active after admission",
+        "variants": variants,
+    }
+
+
+def check(committed_path: str = SERVE_JSON) -> int:
+    """CI smoke: reduced workload, asserted against the committed row."""
+    with open(committed_path) as f:
+        committed = json.load(f)
+    ref = {r["variant"]: r for r in committed["variants"]}
+    result = run(n_requests=12, rate_per_step=0.5)
+    cur = {r["variant"]: r for r in result["variants"]}
+
+    comp = cur["compressed"]["tokens_per_sec_saturated"]
+    ref_comp = ref["compressed"]["tokens_per_sec_saturated"]
+    assert comp >= CHECK_TOKS_FRAC * ref_comp, (
+        f"compressed serving regressed: {comp:.1f} tok/s < "
+        f"{CHECK_TOKS_FRAC} x committed {ref_comp:.1f}")
+    print(f"compressed {comp:.1f} tok/s vs committed {ref_comp:.1f} "
+          f"(>= {CHECK_TOKS_FRAC}x) — OK")
+
+    packed = cur["compressed_packed_kv"]["cache_bytes"]
+    unpacked = cur["compressed"]["cache_bytes"]
+    assert packed <= CHECK_KV_FRAC * unpacked, (
+        f"packed KV cache not small enough: {packed} bytes > "
+        f"{CHECK_KV_FRAC} x unpacked {unpacked}")
+    print(f"packed KV {packed} bytes vs unpacked {unpacked} "
+          f"(<= {CHECK_KV_FRAC}x) — OK")
+
+    for r in result["variants"]:
+        print(f"{r['variant']}: {r['tokens_per_sec_saturated']:.1f} tok/s "
+              f"sat, p50 {r['p50_latency_ms']:.0f}ms "
+              f"p99 {r['p99_latency_ms']:.0f}ms, "
+              f"cache {r['cache_bytes']} B")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="CI smoke: reduced workload asserted against the "
+                         "committed BENCH_serve.json")
+    ap.add_argument("--json", default=SERVE_JSON,
+                    help="bench JSON output path ('' disables)")
+    ap.add_argument("--requests", type=int, default=40)
+    ap.add_argument("--rate", type=float, default=0.35,
+                    help="Poisson arrival rate per engine step")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-autotune", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        return check()
+
+    result = run(n_requests=args.requests, rate_per_step=args.rate,
+                 seed=args.seed, autotune=not args.no_autotune)
+    print("variant,kv,tok_s_sat,tok_s_overall,p50_ms,p99_ms,cache_bytes,"
+          "reqs,steps")
+    for r in result["variants"]:
+        print(f"{r['variant']},{r['kv_cache']},"
+              f"{r['tokens_per_sec_saturated']:.1f},"
+              f"{r['tokens_per_sec_overall']:.1f},"
+              f"{r['p50_latency_ms']:.0f},{r['p99_latency_ms']:.0f},"
+              f"{r['cache_bytes']},{r['requests_completed']},{r['steps']}")
+    if args.json:
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {args.json}")
+    by = {r["variant"]: r for r in result["variants"]}
+    dense_t = by["dense"]["tokens_per_sec_saturated"]
+    packed_t = by["compressed_packed_kv"]["tokens_per_sec_saturated"]
+    assert packed_t >= dense_t, (
+        f"compressed+packed-KV serving ({packed_t:.1f} tok/s) fell below "
+        f"dense ({dense_t:.1f} tok/s) at saturation")
+    assert by["compressed_packed_kv"]["cache_bytes"] <= \
+        CHECK_KV_FRAC * by["compressed"]["cache_bytes"], "packed KV too big"
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

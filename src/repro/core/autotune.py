@@ -71,6 +71,7 @@ __all__ = [
     "TunedConfig",
     "TunedTable",
     "TuneOptions",
+    "bucket_m",
     "default_cache_path",
     "load_table",
     "schedule_hash",
@@ -230,6 +231,25 @@ def schedule_hash(pattern: BlockSparsePattern) -> str:
     return h.hexdigest()[:16]
 
 
+def bucket_m(M: int) -> int:
+    """M-bucket for tuned keys: next power of two, capped at 8192.
+
+    Decode row counts (M = ``batch_slots``: 1, 2, 4, 8 …) are already
+    powers of two, so thin decode tiles keep exact buckets; prefill GEMMs
+    (M = B*T: hundreds to tens of thousands of rows) collapse into coarse
+    buckets where the tile choice is M-insensitive anyway.  One tuned
+    entry per bucket means a decode-tuned table never serves (or is
+    shadowed by) a prefill entry for a nearby-but-different M — the
+    prefill/decode split falls out of the call sites: every dispatch
+    looks up its *own* trace-time M, and same-bucket shapes share.
+    """
+    M = max(1, int(M))
+    b = 1
+    while b < M and b < 8192:
+        b *= 2
+    return b
+
+
 def tune_key(*, kind: str, M: int, K: int, N: int, dtype,
              backend: Optional[str] = None,
              pattern: Optional[BlockSparsePattern] = None,
@@ -238,7 +258,10 @@ def tune_key(*, kind: str, M: int, K: int, N: int, dtype,
     """Cache key: (kind, shape, dtype, backend, pattern-schedule hash).
 
     ``M`` is part of the shape — tile choice at decode M=4 and prefill
-    M=2048 are different problems.  ``backend`` defaults to the current
+    M=2048 are different problems — but enters through :func:`bucket_m`,
+    so a decode call site (M = engine ``batch_slots``) and a prefill call
+    site (M = B*T) of the same leaf resolve to different entries while
+    nearby large-M shapes share one.  ``backend`` defaults to the current
     ``jax.default_backend()``: CPU timings must never serve TPU lookups.
     ``kind`` carries the op family too: an im2col'd conv tunes under
     ``conv_sparse`` / ``conv_quant``, so it never collides with a linear
@@ -254,7 +277,7 @@ def tune_key(*, kind: str, M: int, K: int, N: int, dtype,
     """
     backend = backend or jax.default_backend()
     sched = schedule_hash(pattern) if pattern is not None else "dense"
-    base = (f"{kind}:M{int(M)}:K{int(K)}:N{int(N)}:"
+    base = (f"{kind}:M{bucket_m(M)}:K{int(K)}:N{int(N)}:"
             f"{jnp.dtype(dtype).name}:{backend}:{sched}")
     if container is not None:
         base = f"{base}:container={container}"
@@ -533,7 +556,7 @@ def _representative(leaf: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
 def autotune_model(
     cm,
     *,
-    M: int,
+    M,
     x_dtype=jnp.float32,
     options: TuneOptions = TuneOptions(),
     path: Optional[str] = None,
@@ -543,6 +566,12 @@ def autotune_model(
 ) -> TunedTable:
     """Tune every compiled (sparse / quant) leaf of a CompressedModel at
     batch-rows ``M`` (decode: the engine's slot count; prefill: B*T).
+
+    ``M`` may also be a sequence of row counts — e.g. ``(batch_slots,
+    batch * prompt_len)`` tunes the thin decode row tiles and the prefill
+    GEMMs in one pass, each under its own :func:`bucket_m` key, so a
+    serving engine and its prefill path consume the same table with
+    per-call-site entries.
 
     Loads the on-disk table first — already-tuned keys are never re-timed
     (``table.n_timings() == 0`` on a warm cache) — and saves the merged
@@ -562,13 +591,13 @@ def autotune_model(
     table = TunedTable.load(path)
     table.log = []
     rng = np.random.default_rng(seed)
+    Ms = (M,) if isinstance(M, (int, np.integer)) else tuple(M)
     done = set()
     for r in cm.report:
         if r.policy not in ("sparse", "quant"):
             continue
         K, N = r.shape
         kind = ("conv_" if r.kind == "conv" else "") + r.policy
-        M_leaf = M * max(1, int(r.m_scale))
         pattern = cm.patterns.get((K, N)) if r.policy == "sparse" else None
         if cm.layers:  # LeNet-style payloads
             leaf = _payload_leaf(cm.layers.get(r.name))
@@ -578,21 +607,23 @@ def autotune_model(
             leaf = _representative(_leaf_by_path(cm.params, r.name))
         packed = "w_qp" in leaf or "w_blkp" in leaf
         container = PACKED_CONTAINER if packed else None
-        key = tune_key(kind=kind, M=M_leaf, K=K, N=N, dtype=x_dtype,
-                       pattern=pattern, container=container,
-                       leaf=r.name if per_leaf else None)
-        if key in done:
-            continue
-        done.add(key)
-        x = jnp.asarray(rng.normal(size=(M_leaf, K)), x_dtype)
-        if packed:
-            wbits = 4
-        else:
-            w_arr = leaf.get("w_blk", leaf.get("w_q"))
-            wbits = 8 if w_arr.dtype == jnp.int8 else 32
-        autotune_leaf(kind, x, leaf, pattern=pattern, weight_bits=wbits,
-                      options=options, table=table, key=key,
-                      container=container)
+        for M_rows in Ms:
+            M_leaf = int(M_rows) * max(1, int(r.m_scale))
+            key = tune_key(kind=kind, M=M_leaf, K=K, N=N, dtype=x_dtype,
+                           pattern=pattern, container=container,
+                           leaf=r.name if per_leaf else None)
+            if key in done:
+                continue
+            done.add(key)
+            x = jnp.asarray(rng.normal(size=(M_leaf, K)), x_dtype)
+            if packed:
+                wbits = 4
+            else:
+                w_arr = leaf.get("w_blk", leaf.get("w_q"))
+                wbits = 8 if w_arr.dtype == jnp.int8 else 32
+            autotune_leaf(kind, x, leaf, pattern=pattern, weight_bits=wbits,
+                          options=options, table=table, key=key,
+                          container=container)
     if save:
         table.save(path)
     return table

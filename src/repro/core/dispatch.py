@@ -148,14 +148,25 @@ class DispatchConfig:
     ``tuned`` is an optional :class:`repro.core.autotune.TunedTable`
     (identity-hashed, so this dataclass stays hashable): per-leaf measured
     tile/backend choices consulted at trace time in ``auto`` mode.
+    ``m_bucket`` pins the row count used for tuned-table lookups (still
+    bucketed through ``autotune.bucket_m``): by default every call site
+    looks up its own trace-time M — thin decode rows and prefill GEMMs
+    resolve to different entries — but a caller that tuned for a specific
+    serving shape (e.g. ``ServeEngine`` at M = ``batch_slots``) can pin
+    it so lookups never drift from the tuned bucket.
     """
 
     mode: str = "auto"
     interpret: Optional[bool] = None
     bm: Optional[int] = None  # sparse row-tile override (None = auto)
     tuned: Optional[Any] = None  # autotune.TunedTable
+    m_bucket: Optional[int] = None  # pinned tuned-lookup rows (None = per call)
 
     def __post_init__(self):
+        if self.m_bucket is not None and int(self.m_bucket) < 1:
+            raise ValueError(
+                f"illegal m_bucket={self.m_bucket!r} — tuned-table lookups "
+                "need a positive row count (or None for per-call-site M)")
         if self.mode not in DISPATCH_MODES:
             raise ValueError(
                 f"unknown dispatch mode {self.mode!r} — valid: "
@@ -289,10 +300,14 @@ def _tuned_entry(cfg: DispatchConfig, kind: str, M: int, K: int, N: int,
     entry — two leaves that collide on (kind, M, K, N, dtype, backend,
     schedule) can still be tuned apart.  ``container`` tags bit-packed
     storage (``int4x2``) so packed and unpacked leaves never share tuned
-    entries — on hardware they stream different HBM bytes.
+    entries — on hardware they stream different HBM bytes.  ``M`` is the
+    call site's trace-time row count (bucketed inside ``tune_key``), or
+    the config's pinned ``m_bucket`` when set.
     """
     if cfg.tuned is None:
         return None
+    if cfg.m_bucket is not None:
+        M = int(cfg.m_bucket)
     from .autotune import tune_key
     if leaf is not None:
         entry = cfg.tuned.get(tune_key(kind=kind, M=M, K=K, N=N,

@@ -122,6 +122,40 @@ def patch_embed_apply(p, x, *, bias=None, dispatch=None, activation=None,
 
 # ----------------------------------------------------------------- attention
 
+# KV-cache storage containers (attn_cache_init kv_cache=):
+#   "float"  — (B, T, Hkv, Dh) activations at cfg.param_dtype (the seed form)
+#   "int4"   — int8 codes in [-7, 7] + per-(slot, pos, head) f32 scales
+#   "int4x2" — the codes bit-packed two-per-byte along Dh (the weights' PR 5
+#              container applied to activations-at-rest); exact round trip,
+#              so "int4" and "int4x2" decode bitwise identically
+KV_CACHE_MODES = ("float", "int4", "int4x2")
+
+
+def _kv_quant(u: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-(slot, pos, head) int4 quantisation of a KV row.
+
+    ``u`` is (B, T, Hkv, Dh); the scale reduces over Dh only, so every
+    cached position owns its scale — one appended row never rescales the
+    history (the cache stays append-only, exactly like the float form).
+    """
+    uf = u.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(uf), axis=-1)
+    scale = jnp.maximum(amax / 7.0, 1e-12)            # (B, T, Hkv)
+    codes = jnp.clip(jnp.round(uf / scale[..., None]), -7, 7).astype(jnp.int8)
+    return codes, scale
+
+
+def _kv_insert(cache_kv, upd, idx):
+    """Insert one decode row at per-sequence position ``idx`` (vmap over B).
+
+    Works for any trailing layout — codes (T, Hkv, Dh), packed bytes
+    (T, Hkv, ceil(Dh/2)) and scales (T, Hkv) all update at (i, 0[, 0]).
+    """
+    def one(c, u, i):
+        start = (i,) + (0,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, u, start)
+    return jax.vmap(one)(cache_kv, upd, idx)
+
 
 def attn_init(key, cfg: ArchConfig) -> Params:
     D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -168,24 +202,83 @@ def attn_apply(
         o = chunked_attention(q, k, v, causal=cfg.causal)
         new_cache = None
     else:
-        # decode: T == 1; insert at position `length`
+        # decode: T == 1; insert at position `length`.  Which container the
+        # cache uses is a trace-time fact read off its keys — the float
+        # form stores activations, the int4/int4x2 forms quantise-(pack-)on
+        # -append and decode nibbles at the attention read (bitwise
+        # identical to each other; see attn_cache_init).
         idx = cache["length"]  # (B,)
-        k_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
-            c, u, (i, 0, 0)))(cache["k"], k, idx)
-        v_cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
-            c, u, (i, 0, 0)))(cache["v"], v, idx)
-        o = decode_attention(q, k_cache, v_cache, idx + 1)
-        new_cache = {"k": k_cache, "v": v_cache, "length": idx + 1}
+        if "k" in cache:
+            k_cache = _kv_insert(cache["k"], k, idx)
+            v_cache = _kv_insert(cache["v"], v, idx)
+            o = decode_attention(q, k_cache, v_cache, idx + 1)
+            new_cache = {"k": k_cache, "v": v_cache, "length": idx + 1}
+        else:
+            from ..core.quant import pack_int4, unpack_int4
+            Dh_ = k.shape[-1]
+            kq, ks = _kv_quant(k)
+            vq, vs = _kv_quant(v)
+            k_s = _kv_insert(cache["k_s"], ks, idx)
+            v_s = _kv_insert(cache["v_s"], vs, idx)
+            if "k_p" in cache:  # int4x2: two codes per byte along Dh
+                k_st = _kv_insert(cache["k_p"], pack_int4(kq, axis=-1), idx)
+                v_st = _kv_insert(cache["v_p"], pack_int4(vq, axis=-1), idx)
+                k_codes = unpack_int4(k_st, Dh_, axis=-1)
+                v_codes = unpack_int4(v_st, Dh_, axis=-1)
+                new_cache = {"k_p": k_st, "v_p": v_st}
+            else:               # int4: int8 container, same codes
+                k_st = _kv_insert(cache["k_q"], kq, idx)
+                v_st = _kv_insert(cache["v_q"], vq, idx)
+                k_codes, v_codes = k_st, v_st
+                new_cache = {"k_q": k_st, "v_q": v_st}
+            dt = _dtype(cfg)
+            k_cache = (k_codes.astype(jnp.float32)
+                       * k_s[..., None]).astype(dt)
+            v_cache = (v_codes.astype(jnp.float32)
+                       * v_s[..., None]).astype(dt)
+            o = decode_attention(q, k_cache, v_cache, idx + 1)
+            new_cache.update({"k_s": k_s, "v_s": v_s, "length": idx + 1})
     o = o.reshape(B, T, H * Dh)
     return lin_apply(cfg, p["wo"], o, H * Dh, D, patterns, dispatch), new_cache
 
 
-def attn_cache_init(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
+def attn_cache_init(cfg: ArchConfig, batch: int, max_len: int,
+                    kv_cache: str = "float") -> Dict:
+    """Decode KV cache in one of the :data:`KV_CACHE_MODES` containers.
+
+    All three forms share the ``length`` bookkeeping and the (B, T, Hkv)
+    leading layout; the quantised forms add per-(slot, pos, head) f32
+    scales (``k_s``/``v_s``) next to the code container (``k_q``/``v_q``
+    int8, or ``k_p``/``v_p`` uint8 bit-packed along Dh — ceil(Dh/2) bytes
+    per row).  ``attn_apply`` detects the container from the dict keys at
+    trace time, so ``decode_step``'s signature carries no extra mode.
+    """
     Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
-    return {
-        "k": jnp.zeros((batch, max_len, Hkv, Dh), _dtype(cfg)),
-        "v": jnp.zeros((batch, max_len, Hkv, Dh), _dtype(cfg)),
-        "length": jnp.zeros((batch,), jnp.int32),
+    length = jnp.zeros((batch,), jnp.int32)
+    if kv_cache in (None, "float"):
+        return {
+            "k": jnp.zeros((batch, max_len, Hkv, Dh), _dtype(cfg)),
+            "v": jnp.zeros((batch, max_len, Hkv, Dh), _dtype(cfg)),
+            "length": length,
+        }
+    if kv_cache not in KV_CACHE_MODES:
+        raise ValueError(
+            f"unknown kv_cache container {kv_cache!r} — valid: "
+            f"{KV_CACHE_MODES}")
+    scales = {
+        "k_s": jnp.zeros((batch, max_len, Hkv), jnp.float32),
+        "v_s": jnp.zeros((batch, max_len, Hkv), jnp.float32),
+    }
+    if kv_cache == "int4":
+        return {
+            "k_q": jnp.zeros((batch, max_len, Hkv, Dh), jnp.int8),
+            "v_q": jnp.zeros((batch, max_len, Hkv, Dh), jnp.int8),
+            **scales, "length": length,
+        }
+    return {  # int4x2: two codes per uint8 byte along Dh
+        "k_p": jnp.zeros((batch, max_len, Hkv, (Dh + 1) // 2), jnp.uint8),
+        "v_p": jnp.zeros((batch, max_len, Hkv, (Dh + 1) // 2), jnp.uint8),
+        **scales, "length": length,
     }
 
 

@@ -254,12 +254,21 @@ def loss_fn(params, cfg: ArchConfig, batch: Dict) -> jnp.ndarray:
 # -------------------------------------------------------------------- decode
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               kv_cache: str = "float") -> Params:
+    """Stacked decode cache (leading axis = superblock).
+
+    ``kv_cache`` picks the attention KV container
+    (:data:`repro.models.blocks.KV_CACHE_MODES`): ``"float"`` stores
+    activations, ``"int4"``/``"int4x2"`` store per-position int4 codes +
+    scales (the bit-packed form holds two codes per byte along Dh).  SSM
+    state caches are unaffected — they are O(1) per slot, not per token.
+    """
     L = n_superblocks(cfg)
 
     def one(_):
         if cfg.family in ("dense", "vlm", "moe"):
-            return attn_cache_init(cfg, batch, max_len)
+            return attn_cache_init(cfg, batch, max_len, kv_cache=kv_cache)
         if cfg.family == "ssm":
             n_m = cfg.slstm_every - 1
             return {
@@ -269,13 +278,44 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
             }
         if cfg.family == "hybrid":
             return {
-                "attn": attn_cache_init(cfg, batch, max_len),
+                "attn": attn_cache_init(cfg, batch, max_len,
+                                        kv_cache=kv_cache),
                 "mamba": jax.vmap(lambda _: mamba2_cache_init(cfg, batch))(
                     jnp.arange(cfg.attn_every)),
             }
         raise ValueError(f"{cfg.family} has no decode cache")
 
     return jax.vmap(one)(jnp.arange(L))
+
+
+def cache_batch_axes(cfg: ArchConfig, kv_cache: str = "float") -> Params:
+    """Per-leaf batch-axis spec matching :func:`init_cache`'s structure.
+
+    Every leaf of the returned pytree is the integer axis where that cache
+    leaf indexes the batch (serving slot).  Attention/sLSTM leaves stack
+    as (L, B, ...) — axis 1; leaves built under an inner vmap (the hybrid
+    family's per-superblock Mamba2 stack, xLSTM's mLSTM stack) are
+    (L, inner, B, ...) — axis 2.  ``ServeEngine._reset_slot`` splices
+    slots through this spec instead of guessing the axis by size, which
+    mis-fired whenever a stacked non-batch axis (e.g. hybrid
+    ``attn_every``) happened to equal ``batch_slots``.
+    """
+    def const(tree, ax):
+        return jax.tree_util.tree_map(lambda _: ax, tree)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        return const(attn_cache_init(cfg, 1, 1, kv_cache=kv_cache), 1)
+    if cfg.family == "ssm":
+        return {
+            "slstm": const(slstm_cache_init(cfg, 1), 1),
+            "mlstm": const(mlstm_cache_init(cfg, 1), 2),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "attn": const(attn_cache_init(cfg, 1, 1, kv_cache=kv_cache), 1),
+            "mamba": const(mamba2_cache_init(cfg, 1), 2),
+        }
+    raise ValueError(f"{cfg.family} has no decode cache")
 
 
 def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray,

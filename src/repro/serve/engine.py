@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.config import ArchConfig
-from ..models.model import decode_step, init_cache
+from ..models.model import cache_batch_axes, decode_step, init_cache
 
 
 @dataclasses.dataclass
@@ -51,11 +51,21 @@ class ServeEngine:
     ``batch_slots``) against the on-disk cache — a warm cache is a pure
     lookup, zero re-timing — and a :class:`TunedTable` instance is used
     as-is.  The tuned tiles are baked into the jitted step like everything
-    else (identical numerics, trace-time choice)."""
+    else (identical numerics, trace-time choice).  The engine pins the
+    dispatch ``m_bucket`` to its decode rows so tuned lookups always hit
+    the thin decode bucket, never a prefill entry.
+
+    ``kv_cache`` picks the KV-cache container
+    (:data:`repro.models.blocks.KV_CACHE_MODES`): ``"int4x2"`` stores the
+    attention cache as bit-packed int4 codes + per-(slot, pos, head)
+    scales — the decode step quantise-packs each appended row and decodes
+    nibbles at the attention read, so cache-resident bytes drop ~7x vs
+    the f32 form with no engine-visible API change."""
 
     def __init__(self, params, cfg: ArchConfig, *, batch_slots: int = 4,
                  max_len: int = 256, patterns=None, dispatch=None,
-                 autotune=False, autotune_options=None):
+                 autotune=False, autotune_options=None,
+                 kv_cache: str = "float"):
         import dataclasses as _dc
 
         from ..core.compile_sparse import CompressedModel
@@ -78,42 +88,67 @@ class ServeEngine:
                 kw = {} if autotune_options is None else \
                     {"options": autotune_options}
                 table = autotune_model(cm, M=batch_slots, **kw)
-            dispatch = _dc.replace(dispatch, tuned=table)
+            dispatch = _dc.replace(dispatch, tuned=table,
+                                   m_bucket=batch_slots)
         self.params = params
         self.patterns = patterns
         self.dispatch = dispatch
         self.cfg = cfg
         self.slots = batch_slots
         self.max_len = max_len
-        self.cache = init_cache(cfg, batch_slots, max_len)
-        self._fresh = init_cache(cfg, batch_slots, max_len)
+        self.kv_cache = kv_cache
+        self.cache = init_cache(cfg, batch_slots, max_len, kv_cache=kv_cache)
+        self._fresh = init_cache(cfg, batch_slots, max_len, kv_cache=kv_cache)
+        self._batch_axes = cache_batch_axes(cfg, kv_cache=kv_cache)
         self.active: Dict[int, Request] = {}
         self.prompt_pos: Dict[int, int] = {}
         self.remaining: Dict[int, int] = {}
         self.last_tok = np.zeros((batch_slots, 1), np.int32)
         self.queue: List[Request] = []
+        self._unreturned: List[Request] = []
         self.steps_run = 0
         self._step = jax.jit(
             lambda p, c, t: decode_step(p, cfg, c, t, patterns=patterns,
                                         dispatch=dispatch))
 
     def submit(self, req: Request):
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        # positions written = prompt + generated-but-one (the last generated
+        # token is returned without being fed back)
+        needed = len(req.prompt) + max(0, req.max_new_tokens - 1)
+        if needed > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt ({len(req.prompt)} tokens) + "
+                f"max_new_tokens ({req.max_new_tokens}) needs {needed} cache "
+                f"positions but max_len is {self.max_len} — the cache would "
+                "silently wrap; raise max_len or trim the request")
         req.out = []
         self.queue.append(req)
+        self._unreturned.append(req)
+
+    def cache_bytes(self) -> int:
+        """Resident bytes of the decode cache (all leaves, scales
+        included) — the serving-memory number BENCH_serve records."""
+        return sum(int(leaf.nbytes)
+                   for leaf in jax.tree_util.tree_leaves(self.cache))
 
     def _reset_slot(self, slot: int):
-        """Zero one slot's cache (batch axis differs per leaf family —
-        match against the fresh cache's same-shaped leaf)."""
-        def reset(cur, fresh):
-            # batch axis = the axis whose size == self.slots; reset that
-            # slot by splicing in the fresh (zero) values.
-            for ax in range(1, cur.ndim):  # axis 0 is always the layer stack
-                if cur.shape[ax] == self.slots:
-                    idx = [slice(None)] * cur.ndim
-                    idx[ax] = slot
-                    return cur.at[tuple(idx)].set(fresh[tuple(idx)])
-            return cur
-        self.cache = jax.tree_util.tree_map(reset, self.cache, self._fresh)
+        """Zero one slot's cache by splicing in the fresh (zero) values.
+
+        The batch axis differs per leaf family — attention leaves stack as
+        (L, B, ...), inner-vmapped SSM leaves as (L, inner, B, ...) — so
+        each leaf's slot axis comes from the explicit
+        :func:`repro.models.model.cache_batch_axes` spec.  (Guessing the
+        axis by size sliced the wrong axis whenever a stacked non-batch
+        axis matched ``batch_slots``, e.g. hybrid ``attn_every == slots``
+        leaked a stale KV cache into admitted requests.)"""
+        def reset(cur, fresh, ax):
+            idx = [slice(None)] * cur.ndim
+            idx[ax] = slot
+            return cur.at[tuple(idx)].set(fresh[tuple(idx)])
+        self.cache = jax.tree_util.tree_map(reset, self.cache, self._fresh,
+                                            self._batch_axes)
 
     def _admit(self):
         free = [s for s in range(self.slots) if s not in self.active]
@@ -143,9 +178,14 @@ class ServeEngine:
                 self.last_tok[slot, 0] = int(req.prompt[pos])
                 self.prompt_pos[slot] = pos + 1
             else:
-                self.last_tok[slot, 0] = int(nxt[slot])
-                req.out.append(int(nxt[slot]))
-                self.remaining[slot] -= 1
+                # generate only while budget remains: a request admitted
+                # with max_new_tokens=0 finishes right after prefill with
+                # out == [] (the decrement used to run after the append,
+                # so every request emitted at least one token)
+                if self.remaining[slot] > 0:
+                    self.last_tok[slot, 0] = int(nxt[slot])
+                    req.out.append(int(nxt[slot]))
+                    self.remaining[slot] -= 1
                 if self.remaining[slot] <= 0:
                     done.append(slot)
         for slot in done:
@@ -153,7 +193,10 @@ class ServeEngine:
         return len(self.active)
 
     def run(self) -> List[Request]:
-        submitted = list(self.queue)
+        """Drain the engine; returns every request submitted since the
+        last ``run()`` — including ones a prior ``step()`` call already
+        admitted or finished (the old queue snapshot dropped those)."""
         while self.queue or self.active:
             self.step()
-        return submitted
+        out, self._unreturned = self._unreturned, []
+        return out

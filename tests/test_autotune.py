@@ -399,8 +399,9 @@ def test_autotune_model_covers_conv_leaves(tmp_path):
     table = autotune_model(cm, M=2, options=FAST, path=path)
     conv_keys = [k for k in table.entries if k.startswith("conv_")]
     assert conv_keys, "conv leaves must be tuned under conv_* kinds"
-    # conv1 tunes at its im2col M: 2 batch rows x 24x24 output positions
-    assert any(":M1152:" in k for k in conv_keys), sorted(conv_keys)
+    # conv1 tunes at its im2col M: 2 batch rows x 24x24 output positions =
+    # 1152 rows, bucketed to the next power of two by tune_key
+    assert any(":M2048:" in k for k in conv_keys), sorted(conv_keys)
 
     img = jnp.asarray(np.random.default_rng(1).normal(size=(2, 28, 28, 1)),
                       jnp.float32)

@@ -164,3 +164,26 @@ yc = lenet_forward(lp, img, compressed=cml.layers)
 yd = lenet_forward(decompress_model(cml), img)
 print(f"conv+fc compressed-vs-oracle max err: "
       f"{float(jnp.abs(yc - yd).max()):.2e}")
+
+# 9. beyond stride-1 VALID: compile_conv carries full static geometry
+#    (strides, SAME padding, dilation) into the ConvPayload, so
+#    resnet-style convs fuse through the same kernels; and every
+#    compressed-leaf format — including the per-channel-scale int8
+#    family — is a registered module (repro.core.payload_registry), so
+#    policies here are just registry names.
+from repro.core import payload_registry
+from repro.core.compile_sparse import compile_conv
+from repro.core.dispatch import conv_dispatch
+
+w4 = np.random.default_rng(6).normal(size=(3, 3, 8, 16)).astype(np.float32)
+xs = jnp.asarray(np.random.default_rng(7).normal(size=(2, 14, 14, 8)),
+                 jnp.float32)
+for pol in ("sparse", "perchannel"):
+    cpay, _, rep = compile_conv(
+        w4, strides=(2, 2), padding="SAME", policy=pol, name=pol,
+        rules=CompileRules(block=(8, 4), min_weight_elems=1), in_hw=(14, 14))
+    ys = conv_dispatch(cpay, xs)
+    print(f"stride-2 SAME conv [{pol:>10}]: out {tuple(ys.shape)}, "
+          f"{rep.compressed_bytes}/{rep.dense_bytes} bytes")
+print("registered payload families:",
+      [f.name for f in payload_registry.all_families()])

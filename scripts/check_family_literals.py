@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Payload-family leaf-name literal lint (stdlib only).
+
+The payload-family registry (:mod:`repro.core.payload_registry` +
+``repro/core/families/``) is the ONE place that may know compressed-leaf
+names like ``w_blk`` or ``w_qp``.  Everything else — dispatch, the
+compile pass, autotune, sharding, checkpointing, the model zoo — must go
+through the registry's queries, so that registering a new family really
+is one module plus one import line.
+
+This script enforces that mechanically: it
+
+1. parses ``src/repro/core/families/*.py`` and collects every string in
+   a ``leaf_names=...`` registration keyword (filtered to names with an
+   underscore — the bare dense ``w`` is the *uncompiled* convention and
+   legitimately appears everywhere);
+2. AST-walks every other module under ``src/repro`` and fails on any
+   string constant that is exactly one of those leaf names.
+
+Exact-match on ``ast.Constant`` means prose mentions inside docstrings
+("the ``w_blk`` container...") pass, while code-level uses — dict keys,
+``"w_blk" in p`` membership tests, comparisons — fail.  Tests are not
+scanned: they pin the on-disk leaf layout on purpose.
+
+Usage:  python scripts/check_family_literals.py [src-root]
+Exit 1 with a per-site report when any literal leaks.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+FAMILIES_DIR = Path("src/repro/core/families")
+REGISTRY_MODULE = Path("src/repro/core/payload_registry.py")
+
+
+def registered_leaf_names(families_dir: Path) -> set[str]:
+    """Every string inside a ``leaf_names=`` registration keyword."""
+    names: set[str] = set()
+    for f in sorted(families_dir.glob("*.py")):
+        tree = ast.parse(f.read_text(), filename=str(f))
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg != "leaf_names":
+                    continue
+                for el in ast.walk(kw.value):
+                    if isinstance(el, ast.Constant) and \
+                            isinstance(el.value, str):
+                        names.add(el.value)
+    # "w" (dense) is the raw-parameter convention, not a compressed
+    # container — modules legitimately read it, so only underscore names
+    # (the compressed/scale leaves) are policed.
+    return {n for n in names if "_" in n}
+
+
+def leaked_literals(root: Path, names: set[str]):
+    """Yield (path, lineno, literal) for every exact-match leak."""
+    for f in sorted(root.rglob("*.py")):
+        rel = f.as_posix()
+        if FAMILIES_DIR.as_posix() in rel or \
+                rel.endswith(REGISTRY_MODULE.name):
+            continue
+        tree = ast.parse(f.read_text(), filename=str(f))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Constant) and node.value in names:
+                yield f, node.lineno, node.value
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]) if len(argv) > 1 else Path("src/repro")
+    if not FAMILIES_DIR.is_dir():
+        print(f"family modules not found at {FAMILIES_DIR}", file=sys.stderr)
+        return 2
+    names = registered_leaf_names(FAMILIES_DIR)
+    if not names:
+        print("no leaf_names registrations found — lint is vacuous",
+              file=sys.stderr)
+        return 2
+    leaks = list(leaked_literals(root, names))
+    for f, line, lit in leaks:
+        print(f"{f}:{line}: family leaf literal {lit!r} outside the "
+              "registry — use repro.core.payload_registry queries instead")
+    if leaks:
+        print(f"\n{len(leaks)} leak(s) of {sorted(names)}; the payload "
+              "registry is the only module allowed to name compressed "
+              "leaves.", file=sys.stderr)
+        return 1
+    print(f"ok: no family leaf literals ({len(names)} registered names) "
+          f"outside the registry under {root}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

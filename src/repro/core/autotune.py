@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.sparse_matmul.kernel import _row_tile, _sublane
+from . import payload_registry
 from .cost_model import (
     HWSpec,
     LayerSpec,
@@ -63,8 +64,7 @@ from .cost_model import (
     tile_vmem_bytes,
 )
 from .folding import FoldingConfig
-from .quant import PACKED_CONTAINER, PackedTensor, QuantizedTensor, unpack_int4
-from .sparsity import BlockSparsePattern, CompressedLinear
+from .sparsity import BlockSparsePattern
 
 __all__ = [
     "AUTOTUNE_CACHE_ENV",
@@ -328,7 +328,7 @@ def quant_candidates(M: int, K: int, N: int, x_dtype,
 def _predict_us(kind: str, cand: TunedConfig, *, M: int, K: int, N: int,
                 pattern: Optional[BlockSparsePattern], weight_bits: int,
                 x_dtype, hw: HWSpec) -> float:
-    if kind == "sparse":
+    if payload_registry.kind_needs_pattern(kind):
         assert pattern is not None
         bk, bn = pattern.block
         n_blocks = pattern.n_blocks_present
@@ -390,32 +390,17 @@ def _runner(kind: str, cand: TunedConfig, x: jnp.ndarray,
             leaf: Dict[str, jnp.ndarray],
             pattern: Optional[BlockSparsePattern],
             interpret: bool) -> Callable[[], Any]:
-    """Build a jitted thunk executing ``cand`` on real arrays."""
-    from ..kernels.quant_matmul.ops import quant_linear
-    from ..kernels.sparse_matmul.ops import sparse_linear
+    """Build a jitted thunk executing ``cand`` on real arrays.
 
-    if kind == "sparse":
-        cl = CompressedLinear(pattern=pattern, blocks=leaf["w_blk"],
-                              scales=leaf.get("w_s"))
-        if cand.use_pallas:
-            fn = jax.jit(lambda xx: sparse_linear(
-                xx, cl, bm=cand.bm, interpret=interpret, use_kernel=True))
-        else:
-            fn = jax.jit(lambda xx: sparse_linear(xx, cl, use_kernel=False))
-    else:
-        K, N = leaf["w_q"].shape
-        qt = QuantizedTensor(values=leaf["w_q"],
-                             scales=leaf["w_s"].reshape(N), axis=1, bits=8)
-        if cand.use_pallas:
-            bm = cand.bm or _row_tile(x.shape[0], x.dtype)
-            bn = cand.bn or (128 if N % 128 == 0 else N)
-            bk = cand.bk or (128 if K % 128 == 0 else K)
-            fn = jax.jit(lambda xx: quant_linear(
-                xx, qt, bm=bm, bn=bn, bk=bk, interpret=interpret,
-                use_kernel=True))
-        else:
-            fn = jax.jit(lambda xx: quant_linear(xx, qt, use_kernel=False))
-    return lambda: fn(x)
+    Delegates to the registered ``tune_runner`` of the kind's unpacked
+    reference family — the one place that knows how to rebuild its
+    payload from reference leaves and call its kernel/twin entry."""
+    fam = payload_registry.kind_family(kind)
+    if fam is None or fam.tune_runner is None:
+        raise ValueError(
+            f"unknown tune kind {kind!r} — tunable kinds: "
+            f"{payload_registry.tunable_kinds()}")
+    return fam.tune_runner(cand, x, leaf, pattern, interpret)
 
 
 def autotune_leaf(
@@ -441,34 +426,31 @@ def autotune_leaf(
     are never trusted: Pallas candidates keep their roofline score and the
     measured XLA twin wins unless ``options.measure_interpret`` is set.
 
-    Bit-packed leaves (``w_qp``/``w_blkp`` int4x2 containers) tune under a
-    ``container``-tagged key (never shared with int8-container entries);
-    the measurement runner times the unpacked codes — off-TPU that is the
-    only honest signal anyway (interpret timings are untrusted and the XLA
-    twin unpacks at trace time), and on TPU the roofline seed already
-    halves the packed weight traffic.
+    Bit-packed container leaves tune under a ``container``-tagged key
+    (never shared with the unpacked-container entries); their family's
+    ``tune_prepare`` hook unpacks the codes into the reference form the
+    measurement runner times — off-TPU that is the only honest signal
+    anyway (interpret timings are untrusted and the XLA twin unpacks at
+    trace time), and on TPU the roofline seed already accounts the packed
+    weight traffic.
     """
     family = kind
     for prefix in ("fusedconv_", "conv_"):
         if kind.startswith(prefix):
             family = kind[len(prefix):]
             break
-    if family not in ("sparse", "quant"):
-        raise ValueError(f"unknown tune kind {kind!r}")
+    fam = payload_registry.kind_family(family)
+    if fam is None:
+        raise ValueError(
+            f"unknown tune kind {kind!r} — tunable kinds: "
+            f"{payload_registry.tunable_kinds()}")
     M, K_x = int(np.prod(x.shape[:-1], dtype=int)), x.shape[-1]
-    if "w_qp" in leaf:  # packed quant container -> codes for the runner
-        container = container or PACKED_CONTAINER
-        leaf = {**{k: v for k, v in leaf.items() if k != "w_qp"},
-                "w_q": unpack_int4(leaf["w_qp"], K_x, axis=-2)}
-    if "w_blkp" in leaf:  # packed sparse container -> codes for the runner
-        container = container or PACKED_CONTAINER
-        leaf = {**{k: v for k, v in leaf.items() if k != "w_blkp"},
-                "w_blk": unpack_int4(leaf["w_blkp"], pattern.block[0],
-                                     axis=-2)}
-    if family == "sparse":
-        K, N = pattern.shape
-    else:
-        K, N = leaf["w_q"].shape
+    lf = payload_registry.family_for_leaves(leaf)
+    if lf is not None and lf.tune_prepare is not None:
+        # packed container -> reference codes for the runner + key tag
+        leaf, cont = lf.tune_prepare(leaf, pattern, K_x)
+        container = container or cont
+    K, N = fam.leaf_kn(leaf, pattern)
     assert K_x == K, (K_x, K)
     if key is None:
         key = tune_key(kind=kind, M=M, K=K, N=N, dtype=x.dtype,
@@ -483,7 +465,7 @@ def autotune_leaf(
     interpret = not on_tpu
     measurable_pallas = on_tpu or options.measure_interpret
 
-    if family == "sparse":
+    if fam.needs_pattern:
         cands = sparse_candidates(M, pattern, x.dtype)
     else:
         cands = quant_candidates(M, K, N, x.dtype, options.hw)
@@ -541,16 +523,12 @@ def _leaf_by_path(tree: Any, path: str) -> Dict[str, Any]:
 
 
 def _representative(leaf: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
-    """First layer of a stacked leaf — same shape/pattern for the stack."""
-    out = {}
-    for k in ("w_blk", "w_blkp", "w_q", "w_qp", "w_s"):
-        if k in leaf:
-            v = leaf[k]
-            stacked = (k in ("w_blk", "w_blkp") and v.ndim == 4) or \
-                      (k in ("w_q", "w_qp") and v.ndim == 3) or \
-                      (k == "w_s" and v.ndim == 2)
-            out[k] = v[0] if stacked else v
-    return out
+    """First layer of a stacked leaf — same shape/pattern for the stack.
+
+    Stacked-ness comes from the registry's per-leaf ``leaf_ndim``
+    declarations, so a new family's stacked leaves slice correctly
+    without this module learning its names."""
+    return payload_registry.representative_leaves(leaf)
 
 
 def autotune_model(
@@ -593,20 +571,22 @@ def autotune_model(
     rng = np.random.default_rng(seed)
     Ms = (M,) if isinstance(M, (int, np.integer)) else tuple(M)
     done = set()
+    tunable = payload_registry.tunable_kinds()
     for r in cm.report:
-        if r.policy not in ("sparse", "quant"):
+        if r.policy not in tunable:
             continue
         K, N = r.shape
         kind = ("conv_" if r.kind == "conv" else "") + r.policy
-        pattern = cm.patterns.get((K, N)) if r.policy == "sparse" else None
+        pattern = cm.patterns.get((K, N)) \
+            if payload_registry.kind_needs_pattern(r.policy) else None
         if cm.layers:  # LeNet-style payloads
             leaf = _payload_leaf(cm.layers.get(r.name))
             if leaf is None:
                 continue
         else:
             leaf = _representative(_leaf_by_path(cm.params, r.name))
-        packed = "w_qp" in leaf or "w_blkp" in leaf
-        container = PACKED_CONTAINER if packed else None
+        lf = payload_registry.family_for_leaves(leaf)
+        container = lf.container if lf is not None else None
         for M_rows in Ms:
             M_leaf = int(M_rows) * max(1, int(r.m_scale))
             key = tune_key(kind=kind, M=M_leaf, K=K, N=N, dtype=x_dtype,
@@ -616,11 +596,12 @@ def autotune_model(
                 continue
             done.add(key)
             x = jnp.asarray(rng.normal(size=(M_leaf, K)), x_dtype)
-            if packed:
-                wbits = 4
+            if container is not None:
+                wbits = 4  # bit-packed containers carry int4 codes
             else:
-                w_arr = leaf.get("w_blk", leaf.get("w_q"))
-                wbits = 8 if w_arr.dtype == jnp.int8 else 32
+                w_arr = leaf.get(lf.code_leaf) if lf is not None else None
+                wbits = 8 if w_arr is not None and \
+                    w_arr.dtype == jnp.int8 else 32
             autotune_leaf(kind, x, leaf, pattern=pattern, weight_bits=wbits,
                           options=options, table=table, key=key,
                           container=container)
@@ -630,33 +611,21 @@ def autotune_model(
 
 
 def _payload_leaf(payload) -> Optional[Dict[str, jnp.ndarray]]:
+    """Leaf-dict view of a compile_sparse payload for the tuner.
+
+    Resolves through :func:`payload_registry.unwrap_payload` — the SAME
+    helper the dispatch path uses — so the container-vs-unpacked key
+    decision (which axis a bit-packed payload is packed along, whether it
+    executes via in-kernel decode or trace-time unpack) can never drift
+    between tuning and dispatch again."""
     from .dispatch import ConvPayload
 
     if isinstance(payload, ConvPayload):  # conv leaf: tune its im2col matmul
         payload = payload.payload
-    if isinstance(payload, CompressedLinear):
-        if payload.packed and payload.blocks.axis % 3 == 1:
-            # bk-axis container (kernel convention): tune under the
-            # container-tagged key, mirroring the dispatch lookup
-            leaf = {"w_blkp": payload.blocks.data}
-        elif payload.packed:
-            # bn-axis container (odd bk) executes via trace-time unpack,
-            # so it tunes — like it dispatches — under the unpacked key
-            leaf = {"w_blk": payload.block_values()}
-        else:
-            leaf = {"w_blk": payload.blocks}
-        if payload.scales is not None:
-            leaf["w_s"] = payload.scales
-        return leaf
-    if isinstance(payload, PackedTensor):
-        K, N = payload.shape
-        if payload.axis % 2 == 0:
-            return {"w_qp": payload.data, "w_s": payload.scales.reshape(N)}
-        return {"w_q": payload.unpack(), "w_s": payload.scales.reshape(N)}
-    if isinstance(payload, QuantizedTensor):
-        return {"w_q": payload.values,
-                "w_s": payload.scales.reshape(payload.values.shape[1])}
-    return None  # masked dense: nothing to tune
+    fam, leaves, _ = payload_registry.unwrap_payload(payload)
+    if fam is None or fam.kind is None:
+        return None  # masked dense (or untunable family): nothing to tune
+    return dict(leaves)
 
 
 def autotune_lenet(cm, *, M: int, **kw) -> TunedTable:

@@ -56,6 +56,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from . import payload_registry
 from .cost_model import (
     HWSpec,
     LayerSpec,
@@ -63,22 +64,10 @@ from .cost_model import (
     decode_linear_spec,
     layer_latency,
 )
-from .dispatch import ConvPayload
+from .dispatch import ConvPayload, conv_out_hw
 from .folding import FoldingConfig
-from .quant import (
-    PackedTensor,
-    QuantizedTensor,
-    dequantize,
-    pack_int4,
-    pack_quantized,
-    quantize,
-    unpack_int4,
-)
 from .sparsity import (
     BlockSparsePattern,
-    CompressedLinear,
-    compress,
-    decompress,
     pattern_from_bitmap,
     pattern_from_mask,
 )
@@ -88,7 +77,9 @@ __all__ = [
     "LayerReport",
     "CompressedModel",
     "choose_policy",
+    "compile_policies",
     "compile_model",
+    "compile_conv",
     "compile_lenet",
     "conv_weight_matrix",
     "conv_weight_unmatrix",
@@ -96,10 +87,19 @@ __all__ = [
     "realised_densities",
 ]
 
-POLICIES = ("dense", "quant", "sparse")
-# accepted as an *override* value on top of POLICIES: defer the pick (and
-# the quant bit-width, {16, 8, 4}) to the autotuner's network_estimate
-# re-ranking instead of the fixed choose_policy heuristic
+
+def compile_policies() -> Tuple[str, ...]:
+    """Valid per-layer policies: ``"dense"`` (keep the weight, optionally
+    masked — no payload family) plus every registered policy compiler
+    (:func:`repro.core.payload_registry.register_policy`): "quant",
+    "sparse", "perchannel", ...  Registering a new family's compiler makes
+    its name a valid override here with no edits to this module."""
+    return ("dense",) + payload_registry.policy_names()
+
+
+# accepted as an *override* value on top of compile_policies(): defer the
+# pick (and the quant bit-width, {16, 8, 4}) to the autotuner's
+# network_estimate re-ranking instead of the fixed choose_policy heuristic
 AUTOTUNE_POLICY = "autotune"
 
 # Stacked transformer linear leaves the pass may rewrite.  SSM/Mamba blocks
@@ -350,15 +350,17 @@ def _decide_policy(
     network_estimate re-ranking; sparse downgrades to quant when the rule
     block cannot tile the shape.  ``spec`` carries conv-aware cost inputs
     (see :func:`choose_policy`)."""
-    if override is not None and override not in POLICIES + (AUTOTUNE_POLICY,):
+    valid = compile_policies()
+    if override is not None and override not in valid + (AUTOTUNE_POLICY,):
         raise ValueError(
             f"{name}: unknown policy {override!r} — valid: "
-            f"{POLICIES + (AUTOTUNE_POLICY,)}")
-    if override == "sparse" and block is None:
+            f"{valid + (AUTOTUNE_POLICY,)}")
+    if override is not None and block is None and \
+            payload_registry.policy_eliminates_blocks(override):
         raise ValueError(
-            f"{name}: policy 'sparse' was explicitly requested but block "
-            f"{rules.block} cannot tile shape {(K, N)} — pick a dividing "
-            "block or drop the override")
+            f"{name}: policy {override!r} was explicitly requested but "
+            f"block {rules.block} cannot tile shape {(K, N)} — pick a "
+            "dividing block or drop the override")
     if override == AUTOTUNE_POLICY:
         from .autotune import tuned_policy
         return tuned_policy(
@@ -375,85 +377,11 @@ def _decide_policy(
 
 
 # --------------------------------------------------------- leaf compilers
-
-
-def _quantize_stack(stack: np.ndarray, bits: int):
-    """(L, K, N) -> w_q (L, K, N) int8, w_s (L, N) f32 per-out-channel."""
-    qs, ss = [], []
-    for wl in stack:
-        qt = quantize(wl, bits, axis=1)
-        qs.append(np.asarray(qt.values))
-        ss.append(np.asarray(qt.scales).reshape(-1))
-    return jnp.asarray(np.stack(qs)), jnp.asarray(np.stack(ss).astype(np.float32))
-
-
-def _quant_leaves(stack: np.ndarray, bits: int):
-    """Quantise an (L, K, N) stack into its storage leaves.
-
-    8-bit: ``{"w_q", "w_s"}`` int8 containers.  <=4-bit: the codes are
-    bit-packed two per byte along K into a ``{"w_qp", "w_s"}`` uint8
-    container (the pytree packing convention — K is recovered from the
-    activation at dispatch time, so an odd K just pads one nibble row).
-    Returns (leaves, code_bytes, container_bytes)."""
-    w_q, w_s = _quantize_stack(stack, bits)
-    code_bytes = int(w_q.size + w_s.size * 4)
-    if bits <= 4:
-        w_qp = pack_int4(w_q, axis=1)
-        leaves = {"w_qp": w_qp, "w_s": w_s}
-        return leaves, code_bytes, int(w_qp.size + w_s.size * 4)
-    return {"w_q": w_q, "w_s": w_s}, code_bytes, code_bytes
-
-
-def _compress_stack(
-    stack: np.ndarray,
-    masks: np.ndarray,
-    pattern: BlockSparsePattern,
-    rules: CompileRules,
-    bits: Optional[int] = None,
-) -> Tuple[Dict[str, jnp.ndarray], int, int, float]:
-    """Pack an (L, K, N) stack under the forced shared pattern.
-
-    Returns (leaves, code_bytes, container_bytes, element_density).
-    Payload bytes are blocks + scales only: the shared pattern's static
-    metadata is counted once per pattern by
-    CompressedModel.storage_bytes, since one schedule may serve several
-    same-shape leaves.  <=4-bit quantised blocks are bit-packed two codes
-    per byte along bk into a ``w_blkp`` uint8 leaf (container_bytes then
-    ~halves code_bytes); otherwise leaves are the int8/float ``w_blk``
-    and the two byte counts coincide."""
-    L = stack.shape[0]
-    bits = rules.quant_bits if bits is None else bits
-    block = pattern.block
-    blk_list, scale_list = [], []
-    total_bytes = 0
-    nnz = 0
-    for wl, ml in zip(stack, masks):
-        if rules.quantize_sparse:
-            qt = quantize(wl * ml, bits, axis=1)
-            cl = compress(wl, ml, block, pattern=pattern,
-                          quant_scales=np.asarray(qt.scales).reshape(-1),
-                          quant_bits=bits)
-            scale_list.append(np.asarray(cl.scales))
-            total_bytes += cl.scales.size * cl.scales.dtype.itemsize
-        else:
-            cl = compress(wl, ml, block, pattern=pattern, dtype=rules.dtype)
-        blk_list.append(np.asarray(cl.blocks))
-        total_bytes += cl.blocks.size * cl.blocks.dtype.itemsize
-        nnz += cl.pattern.nnz
-    blk = jnp.asarray(np.stack(blk_list))
-    cont_bytes = total_bytes
-    if rules.quantize_sparse and bits <= 4:
-        # bit-packed container: two codes per byte along bk (axis 2 of the
-        # (L, P, bk, bn) stack — the axis the kernel prologue decodes)
-        w_blkp = pack_int4(blk, axis=2)
-        leaves: Dict[str, jnp.ndarray] = {"w_blkp": w_blkp}
-        cont_bytes += int(w_blkp.size) - int(blk.size)
-    else:
-        leaves = {"w_blk": blk}
-    if scale_list:
-        leaves["w_s"] = jnp.asarray(np.stack(scale_list))
-    K, N = pattern.shape
-    return leaves, total_bytes, cont_bytes, nnz / (L * K * N)
+#
+# The per-policy leaf emission (quantise / block-compact / bit-pack, with
+# both byte accountings) lives on the registered PolicyCompilers — see
+# ``repro.core.families`` — so this pass only keeps the policy *skeleton*:
+# masking, pattern union, report accounting.
 
 
 @dataclasses.dataclass
@@ -478,14 +406,18 @@ class _LeafPlan:
 
 
 def _iter_linears(tree: Any, path: str = "", in_linear_subtree: bool = False):
-    """Yield (path, parent_dict, key) for every (compiled or raw) linear."""
+    """Yield (path, parent_dict, key) for every (compiled or raw) linear.
+
+    Membership is "holds any registered family's key leaf" — a dict is a
+    linear leaf iff some payload family claims it, so new families are
+    walked without this function learning their leaf names."""
     if not isinstance(tree, dict):
         return
+    weight_leaves = payload_registry.weight_leaf_names()
     for k, v in tree.items():
         p = f"{path}/{k}" if path else k
         if (in_linear_subtree and k in _LINEAR_KEYS and isinstance(v, dict)
-                and any(lk in v for lk in ("w", "w_q", "w_qp", "w_blk",
-                                           "w_blkp"))):
+                and any(lk in v for lk in weight_leaves)):
             yield p, tree, k
         elif isinstance(v, dict):
             yield from _iter_linears(
@@ -563,8 +495,8 @@ def compile_model(
     for root_name in roots:
         sites.extend(_iter_linears(new_params[root_name], root_name))
     if isinstance(params.get("head"), dict) and any(
-            lk in params["head"] for lk in ("w", "w_q", "w_qp", "w_blk",
-                                            "w_blkp")):
+            lk in params["head"]
+            for lk in payload_registry.weight_leaf_names()):
         sites.append(("head", new_params, "head"))
 
     # Phase A — analyze each leaf: policy + (for sparse) its own bitmap.
@@ -602,7 +534,7 @@ def compile_model(
         policy, bits = _decide_policy(path, _override_for(path, key), K, N,
                                       rules, block=block, block_density=bd,
                                       element_density=ed)
-        if policy == "sparse" and bitmap is None:
+        if payload_registry.policy_eliminates_blocks(policy) and bitmap is None:
             bitmap = _shared_bitmap(stack, block, rules.block_density)
             bd = bitmap.sum() / bitmap.size
         plans.append(_LeafPlan(path, parent, key, stack, stacked, mask,
@@ -626,7 +558,7 @@ def compile_model(
     # Blocks a leaf's own mask never touches are packed as zero tiles, the
     # price of keeping stacked/scan-uniform leaves and a single schedule.
     for pl in plans:
-        if pl.policy != "sparse":
+        if not payload_registry.policy_eliminates_blocks(pl.policy):
             continue
         K, N = pl.stack.shape[1:]
         prev = patterns.get((K, N))
@@ -649,7 +581,8 @@ def compile_model(
         # keep the pruned zeros (no silent weight resurrection), they just
         # don't get the block-compaction storage win
         masked_stack = pl.stack if pl.mask is None else pl.stack * pl.mask
-        if pl.policy in ("dense", "quant"):
+        eliminates = payload_registry.policy_eliminates_blocks(pl.policy)
+        if not eliminates:
             bd = 1.0  # no block elimination on these paths
             ed = 1.0 if pl.mask is None else pl.mask.sum() / pl.mask.size
         if pl.policy == "dense":
@@ -659,23 +592,22 @@ def compile_model(
                 w = masked_stack if pl.stacked else masked_stack[0]
                 out["w"] = jnp.asarray(w, np.asarray(leaf["w"]).dtype)
             comp_bytes = cont_bytes = dense_bytes
-        elif pl.policy == "quant":
-            leaves, comp_bytes, cont_bytes = _quant_leaves(masked_stack,
-                                                           pl.bits)
-            if not pl.stacked:
-                leaves = {k: v[0] for k, v in leaves.items()}
-            out.update(leaves)
         else:
-            mask = pl.mask
-            if mask is None:
-                mask = np.stack([
-                    _element_mask(wl, pl.bitmap, pl.block,
-                                  rules.in_block_density)
-                    for wl in pl.stack])
-            pattern = patterns[(K, N)]
-            leaves, comp_bytes, cont_bytes, ed = _compress_stack(
-                pl.stack, mask, pattern, rules, pl.bits)
-            bd = pattern.block_density
+            pc = payload_registry.policy_compiler(pl.policy)
+            mask, pattern = pl.mask, None
+            if eliminates:
+                if mask is None:
+                    mask = np.stack([
+                        _element_mask(wl, pl.bitmap, pl.block,
+                                      rules.in_block_density)
+                        for wl in pl.stack])
+                pattern = patterns[(K, N)]
+            leaves, comp_bytes, cont_bytes, ed_r = pc.compile_stack(
+                pl.stack, mask, pattern=pattern, bits=pl.bits, rules=rules)
+            if ed_r is not None:
+                ed = ed_r
+            if pattern is not None:
+                bd = pattern.block_density
             if not pl.stacked:
                 leaves = {k: v[0] for k, v in leaves.items()}
             out.update(leaves)
@@ -725,45 +657,12 @@ def compile_model(
 def _decompress_leaf(leaf: Dict[str, Any],
                      pattern: Optional[BlockSparsePattern], dtype,
                      shape: Optional[Tuple[int, int]] = None):
-    if "w_qp" in leaf:
-        # bit-packed quant container: unpack (exact) then the w_q path.
-        # The logical K comes from the report's (K, N) shape — the
-        # container alone cannot distinguish K from K+1 when K is odd.
-        assert shape is not None, "packed quant leaf without a report shape"
-        w_q = unpack_int4(leaf["w_qp"], shape[0], axis=-2)
-        leaf = {**{k: v for k, v in leaf.items() if k != "w_qp"}, "w_q": w_q}
-    if "w_blkp" in leaf:
-        assert pattern is not None, "compiled sparse leaf without a pattern"
-        w_blk = unpack_int4(leaf["w_blkp"], pattern.block[0], axis=-2)
-        leaf = {**{k: v for k, v in leaf.items() if k != "w_blkp"},
-                "w_blk": w_blk}
-    if "w_q" in leaf:
-        w_q, w_s = np.asarray(leaf["w_q"]), np.asarray(leaf["w_s"])
-        w = w_q.astype(np.float32) * (
-            w_s[..., None, :] if w_q.ndim == 3 else w_s[None, :])
-        out = {k: v for k, v in leaf.items() if k not in ("w_q", "w_s")}
-        out["w"] = jnp.asarray(w, dtype)
-        return out
-    if "w_blk" in leaf:
-        assert pattern is not None, "compiled sparse leaf without a pattern"
-        blk = np.asarray(leaf["w_blk"])
-        stacked = blk.ndim == 4
-        blks = blk if stacked else blk[None]
-        scales = leaf.get("w_s")
-        scales = np.asarray(scales) if scales is not None else None
-        if scales is not None and scales.ndim == 1:
-            scales = scales[None]
-        dense = []
-        for i, b in enumerate(blks):
-            cl = CompressedLinear(
-                pattern=pattern, blocks=jnp.asarray(b),
-                scales=None if scales is None else jnp.asarray(scales[i]))
-            dense.append(np.asarray(decompress(cl), np.float32))
-        w = np.stack(dense) if stacked else dense[0]
-        out = {k: v for k, v in leaf.items() if k not in ("w_blk", "w_s")}
-        out["w"] = jnp.asarray(w, dtype)
-        return out
-    return leaf
+    """Reconstruct a plain-``w`` leaf via the owning family's decompress
+    hook; leaves no family claims (or that have no hook) pass through."""
+    fam = payload_registry.family_for_leaves(leaf)
+    if fam is None or fam.decompress is None:
+        return leaf
+    return fam.decompress(leaf, pattern=pattern, shape=shape, dtype=dtype)
 
 
 def decompress_model(cm: CompressedModel, *, dtype=jnp.float32) -> Any:
@@ -777,13 +676,10 @@ def decompress_model(cm: CompressedModel, *, dtype=jnp.float32) -> Any:
     """
     if cm.layers:  # compile_lenet result: rebuild <name>_w from payloads
         def _payload_dense(payload):
-            if isinstance(payload, CompressedLinear):
-                return decompress(payload).astype(dtype)  # packed-aware
-            if isinstance(payload, PackedTensor):
-                return payload.dequantize().astype(dtype)
-            if isinstance(payload, QuantizedTensor):
-                return dequantize(payload).astype(dtype)
-            return jnp.asarray(payload, dtype)  # masked dense array
+            fam = payload_registry.family_of_payload(payload)
+            if fam is None or fam.payload_dense is None:
+                return jnp.asarray(payload, dtype)  # masked dense array
+            return fam.payload_dense(payload).astype(dtype)
 
         out = dict(cm.params)
         for name, payload in cm.layers.items():
@@ -895,7 +791,7 @@ def compile_lenet(
                                       spec=spec)
         dense_bytes = K * N * 4
         # as in compile_model: a user mask is honoured under every policy
-        if policy in ("dense", "quant"):
+        if not payload_registry.policy_eliminates_blocks(policy):
             bd = 1.0
             ed = 1.0 if mask is None else mask.sum() / mask.size
         payload = None
@@ -903,38 +799,22 @@ def compile_lenet(
             if mask is not None:  # masked dense payload (plain array)
                 payload = jnp.asarray(w * mask, jnp.float32)
             comp_bytes = cont_bytes = dense_bytes
-        elif policy == "quant":
-            qt = quantize(w if mask is None else w * mask, bits, axis=1)
-            qt = QuantizedTensor(
-                values=qt.values, scales=qt.scales.reshape(N), axis=1,
-                bits=bits)
-            comp_bytes = cont_bytes = K * N + N * 4
-            if bits <= 4:  # bit-packed int4 container: two codes per byte
-                payload = pack_quantized(qt)
-                cont_bytes = payload.container_bytes
-            else:
-                payload = qt
         else:
-            if mask is None:
+            pc = payload_registry.policy_compiler(policy)
+            if payload_registry.policy_eliminates_blocks(policy) \
+                    and mask is None:
                 bitmap = _shared_bitmap(w[None], block, rules.block_density)
-                mask = _element_mask(w, bitmap, block, rules.in_block_density)
-            if rules.quantize_sparse:
-                qt = quantize(w * mask, bits, axis=1)
-                cl = compress(w, mask, block,
-                              quant_scales=np.asarray(qt.scales).reshape(-1),
-                              quant_bits=bits, pack=bits <= 4)
-            else:
-                cl = compress(w, mask, block, dtype=rules.dtype)
-            payload = cl
-            patterns[(K, N)] = cl.pattern
-            # payload only; schedule metadata added once per pattern by
-            # CompressedModel.storage_bytes / container_storage_bytes
-            cont_bytes = cl.storage_bytes - cl.pattern.meta_bytes
-            comp_bytes = cont_bytes
-            if cl.packed:  # int8-container accounting: one byte per code
-                comp_bytes += int(np.prod(cl.blocks.shape)) \
-                    - int(cl.blocks.data.size)
-            bd, ed = cl.pattern.block_density, cl.pattern.element_density
+                mask = _element_mask(w, bitmap, block,
+                                     rules.in_block_density)
+            payload, pat, comp_bytes, cont_bytes, bd_r, ed_r = \
+                pc.compile_payload(w, mask, bits=bits, rules=rules,
+                                   block=block)
+            if pat is not None:
+                patterns[(K, N)] = pat
+            if bd_r is not None:
+                bd = bd_r
+            if ed_r is not None:
+                ed = ed_r
         if payload is not None:
             layers[name] = (ConvPayload(payload=payload, kernel=shape)
                             if kind == "conv" else payload)
@@ -947,6 +827,100 @@ def compile_lenet(
 
     return CompressedModel(params=params, patterns=patterns, report=report,
                            layers=layers, fusion=lenet_fusion_plan(layers))
+
+
+def compile_conv(
+    w4: np.ndarray,
+    *,
+    strides: Tuple[int, int] = (1, 1),
+    padding: str = "VALID",
+    dilation: Tuple[int, int] = (1, 1),
+    mask: Optional[np.ndarray] = None,
+    rules: CompileRules = CompileRules(block=(8, 4), min_weight_elems=512),
+    policy: Optional[str] = None,
+    name: str = "conv",
+    in_hw: Optional[Tuple[int, int]] = None,
+) -> Tuple["ConvPayload", Optional[BlockSparsePattern], LayerReport]:
+    """Compile ONE conv kernel ``(kh, kw, cin, cout)`` to a ConvPayload.
+
+    The standalone conv entry point for resnet-style geometry: unlike
+    :func:`compile_lenet` (stride-1 VALID only) this carries arbitrary
+    static ``strides``/``padding``/``dilation`` into the payload, so
+    ``conv_dispatch`` fuses the full geometry.  The weight is lowered onto
+    its im2col matrix (:func:`conv_weight_matrix`) and packed by whatever
+    registered policy family ``policy`` names (``None`` = the same
+    analyze→decide pipeline as the model passes).
+
+    ``mask`` is accepted kernel-shaped ``(kh, kw, cin, cout)`` or
+    im2col-shaped ``(K, N)``.  ``in_hw`` (input spatial size) sets the
+    report's ``m_scale`` via :func:`repro.core.dispatch.conv_out_hw`;
+    without it the report scores the conv as a single-token matmul.
+
+    Returns ``(conv_payload, pattern_or_None, report_row)``.
+    """
+    w4 = np.asarray(w4, np.float32)
+    if w4.ndim != 4:
+        raise ValueError(
+            f"{name}: expected a 4-d conv kernel (kh, kw, cin, cout), got "
+            f"shape {w4.shape}")
+    kernel = tuple(int(d) for d in w4.shape)
+    kh, kw, cin, cout = kernel
+    K, N = kh * kw * cin, cout
+    w = conv_weight_matrix(w4)
+    if mask is not None:
+        mask = np.asarray(mask, bool)
+        if mask.ndim == 4:
+            if mask.shape != kernel:
+                raise ValueError(
+                    f"{name}: conv mask shape {mask.shape} does not match "
+                    f"the kernel {kernel}")
+            mask = conv_weight_matrix(mask)
+        if mask.shape != (K, N):
+            raise ValueError(
+                f"{name}: mask shape {mask.shape} does not match the layer "
+                f"— expected {(K, N)} (im2col) or kernel-shaped {kernel}")
+    block = _fit_block(K, N, rules.block)
+    if mask is not None and block is not None:
+        bitmap = _mask_bitmap(mask, block)
+        bd, ed = bitmap.sum() / bitmap.size, mask.sum() / mask.size
+    else:
+        bd = rules.block_density
+        ed = rules.block_density * rules.in_block_density
+    policy, bits = _decide_policy(name, policy, K, N, rules, block=block,
+                                  block_density=bd, element_density=ed)
+    dense_bytes = K * N * 4
+    if not payload_registry.policy_eliminates_blocks(policy):
+        bd = 1.0
+        ed = 1.0 if mask is None else mask.sum() / mask.size
+    pattern = None
+    if policy == "dense":
+        payload = jnp.asarray(w if mask is None else w * mask, jnp.float32)
+        comp_bytes = cont_bytes = dense_bytes
+    else:
+        pc = payload_registry.policy_compiler(policy)
+        if payload_registry.policy_eliminates_blocks(policy) and mask is None:
+            bitmap = _shared_bitmap(w[None], block, rules.block_density)
+            mask = _element_mask(w, bitmap, block, rules.in_block_density)
+        payload, pattern, comp_bytes, cont_bytes, bd_r, ed_r = \
+            pc.compile_payload(w, mask, bits=bits, rules=rules, block=block)
+        if bd_r is not None:
+            bd = bd_r
+        if ed_r is not None:
+            ed = ed_r
+    m_scale = 1
+    if in_hw is not None:
+        ho, wo = conv_out_hw(tuple(in_hw), (kh, kw), tuple(strides), padding,
+                             tuple(dilation))
+        m_scale = int(ho * wo)
+    cp = ConvPayload(payload=payload, kernel=kernel,
+                     strides=tuple(int(s) for s in strides), padding=padding,
+                     dilation=tuple(int(d) for d in dilation))
+    rep = LayerReport(
+        name=name, policy=policy, shape=(K, N), n_layers=1,
+        dense_bytes=dense_bytes, compressed_bytes=int(comp_bytes),
+        block_density=float(bd), element_density=float(ed),
+        kind="conv", m_scale=m_scale, container_bytes=int(cont_bytes))
+    return cp, pattern, rep
 
 
 def realised_densities(cm: CompressedModel) -> Dict[str, Tuple[float, float]]:

@@ -2,19 +2,23 @@
 
 Every linear in the repo (transformer projections, LeNet FC layers, the
 serving engine's decode step) executes through :func:`linear_dispatch`,
-which looks at the compiled parameter leaves and selects the execution
-path per layer:
+which resolves the compiled parameter leaves to their registered
+:class:`repro.core.payload_registry.PayloadFamily` (each family module
+under ``repro.core.families`` owns its whole execution story, built from
+the shared kernel-selection helpers in this module):
 
-  leaf family                  Pallas path              jnp reference path
-  -------------------------    ---------------------    -------------------
-  dense   {"w"}                —  (XLA matmul IS the engine-free form)
-  quant   {"w_q", "w_s"}       quant_matmul kernel      dequant + matmul
-  packed  {"w_qp", "w_s"}      quant_matmul w/ in-      trace-time unpack,
-          (uint8 int4x2)       kernel nibble decode     then dequant+matmul
-  gsparse {"w_grp"[, "w_s"]}   —  (factorises into s dense matmuls)
-  sparse  {"w_blk"[, "w_s"]}   block_sparse_matmul      static-gather einsum
-  packed  {"w_blkp", "w_s"}    block_sparse_matmul w/   trace-time unpack,
-          (uint8 int4x2)       in-kernel nibble decode  static-gather einsum
+  leaf family                    Pallas path             jnp reference path
+  ---------------------------    --------------------    ------------------
+  dense      {"w"}               —  (XLA matmul IS the engine-free form)
+  quant      {"w_q", "w_s"}      quant_matmul kernel     dequant + matmul
+  packed     {"w_qp", "w_s"}     quant_matmul w/ in-     trace-time unpack,
+             (uint8 int4x2)      kernel nibble decode    then dequant+matmul
+  gsparse    {"w_grp"[, "w_s"]}  —  (factorises into s dense matmuls)
+  sparse     {"w_blk"[, "w_s"]}  block_sparse_matmul     static-gather einsum
+  packed     {"w_blkp", "w_s"}   block_sparse_matmul     trace-time unpack,
+             (uint8 int4x2)      in-kernel nibble decode static-gather einsum
+  perchannel {"w_pc", "w_pcs"}   quant_matmul over a     scale-folded matmul
+             (per-input-ch s)    scale-folded activation
 
 The ``w_qp`` / ``w_blkp`` families are the bit-packed int4 storage
 containers (:class:`repro.core.quant.PackedTensor` buffers: two 4-bit
@@ -57,15 +61,18 @@ Convolutions ride the SAME datapath: :func:`conv_dispatch` first tries the
 *fused* conv entries (``block_sparse_conv`` / ``quant_conv``) — the patch
 rows are gathered from the NHWC activation inside the kernel's VMEM, so no
 ``(B*H_out*W_out, K)`` patch matrix ever exists, and an optional
-``pool=("avg"|"max", size)`` window pool rides the emit step.  Where the
-fused entry does not apply (jnp twin, non-unit stride, SAME padding,
-unfusable payload), the conv lowers at trace time through
-:func:`conv_im2col` — static shifted slices, pure data movement, bitwise
-the patch order of ``lax.conv_general_dilated_patches`` — and funnels the
-patch tensor into :func:`payload_dispatch`.  Both legs produce bitwise-
-identical results.  Conv tuned-table entries are keyed with ``conv_``- /
-``fusedconv_``-prefixed kinds so they never collide with a linear leaf at
-the same ``(M, K, N)``.
+``pool=("avg"|"max", size)`` window pool rides the emit step.  Strided,
+SAME-padded and dilated geometry all fuse: SAME padding resolves to an
+explicit trace-time zero-pad (:func:`conv_pre_pad`) so the kernels only
+ever see VALID geometry with static strides/dilation.  Where the fused
+entry does not apply (jnp twin, unfusable payload, untileable pool), the
+conv lowers at trace time through :func:`conv_im2col` — static shifted
+slices, pure data movement, bitwise the patch order of
+``lax.conv_general_dilated_patches`` — and funnels the patch tensor into
+:func:`payload_dispatch`.  Both legs produce bitwise-identical results.
+Conv tuned-table entries are keyed with ``conv_``- / ``fusedconv_``-
+prefixed kinds so they never collide with a linear leaf at the same
+``(M, K, N)``.
 
 Adjacent compiled linears can additionally fuse into one launch through
 :func:`fc_stack_dispatch` (the LeNet fc1→fc2→fc3 chain): the Pallas leg
@@ -102,8 +109,8 @@ from ..kernels.sparse_matmul.kernel import (
     block_sparse_conv,
 )
 from ..kernels.sparse_matmul.ops import sparse_linear
-from .quant import PACKED_CONTAINER, PackedTensor, QuantizedTensor, unpack_int4
-from .sparsity import BlockSparsePattern, CompressedLinear, decompress
+from . import payload_registry
+from .sparsity import BlockSparsePattern
 
 __all__ = [
     "DISPATCH_ENV",
@@ -120,6 +127,8 @@ __all__ = [
     "payload_dispatch",
     "conv_dispatch",
     "conv_im2col",
+    "conv_out_hw",
+    "conv_pre_pad",
     "fc_stack_dispatch",
 ]
 
@@ -359,26 +368,27 @@ def _epilogue(y: jnp.ndarray, bias, activation: Optional[str],
     return y.astype(out_dtype)
 
 
-def _sparse_apply_jnp(p: Params, x, pattern: BlockSparsePattern,
+def _sparse_apply_jnp(blocks, scales, x, pattern: BlockSparsePattern,
                       compute_dtype):
     """Engine-free static block-sparse matmul, jnp path (XLA prod path).
 
-    The schedule is *static* (numpy constants), so the block scatter below
-    densifies the weight at trace time — under jit with compiled payloads
-    the whole reconstruction constant-folds and the layer runs as ONE
-    fused GEMM.  (The previous formulation gathered *activation* rows per
-    present block into an (M, P, bk) tensor before an einsum+scatter-add;
-    at im2col'd conv sizes — M = B*H_out*W_out — that per-call gather
-    traffic dwarfed the matmul and was the main reason the compressed
-    model benchmarked slower than dense.)  K-blocks absent from a column
-    contribute exactly 0.
+    ``blocks`` is the (P, bk, bn) compacted stack, ``scales`` the optional
+    per-output-channel (N,) dequant vector.  The schedule is *static*
+    (numpy constants), so the block scatter below densifies the weight at
+    trace time — under jit with compiled payloads the whole reconstruction
+    constant-folds and the layer runs as ONE fused GEMM.  (The previous
+    formulation gathered *activation* rows per present block into an
+    (M, P, bk) tensor before an einsum+scatter-add; at im2col'd conv
+    sizes — M = B*H_out*W_out — that per-call gather traffic dwarfed the
+    matmul and was the main reason the compressed model benchmarked slower
+    than dense.)  K-blocks absent from a column contribute exactly 0.
     """
     K, N = pattern.shape
     bk, bn = pattern.block
     nR, nC = pattern.bitmap.shape
-    blocks = p["w_blk"].astype(compute_dtype)
-    if "w_s" in p:
-        s = p["w_s"].reshape(nC, bn)[np.asarray(pattern.block_cols)]
+    blocks = blocks.astype(compute_dtype)
+    if scales is not None:
+        s = scales.reshape(nC, bn)[np.asarray(pattern.block_cols)]
         blocks = blocks * s[:, None, :].astype(compute_dtype)
     lead = x.shape[:-1]
     xm = x.reshape(-1, K).astype(compute_dtype)
@@ -393,22 +403,23 @@ def _sparse_apply_jnp(p: Params, x, pattern: BlockSparsePattern,
     return y.reshape(*lead, N)
 
 
-def _gsparse_apply_jnp(p: Params, x, compute_dtype):
+def _gsparse_apply_jnp(w, scales, x, compute_dtype):
     """Group-diagonal static sparsity as s dense matmuls (engine-free for
     XLA): output column-group c reads input row-group (s - c) % s.
 
-    Feature -> group mapping is at *block* granularity implicitly: with the
-    whole (K/s, N/s) group dense, block size folds away and groups can be
-    taken directly on contiguous strides of the feature axes.
+    ``w`` is the (s, Kg, Ng) group stack, ``scales`` the optional (N,)
+    dequant vector.  Feature -> group mapping is at *block* granularity
+    implicitly: with the whole (K/s, N/s) group dense, block size folds
+    away and groups can be taken directly on contiguous strides of the
+    feature axes.
     """
-    w = p["w_grp"]  # (s, Kg, Ng)
     s, Kg, Ng = w.shape
     K, N = s * Kg, s * Ng
     lead = x.shape[:-1]
     xm = x.reshape(-1, Kg, s).astype(compute_dtype)   # feature f=(q, g)
     wf = w.astype(compute_dtype)
-    if "w_s" in p:
-        wf = wf * p["w_s"].reshape(s, 1, Ng).astype(compute_dtype)
+    if scales is not None:
+        wf = wf * scales.reshape(s, 1, Ng).astype(compute_dtype)
     # row group used by column group c: g = (s - c) % s  -> static roll
     order = [(s - c) % s for c in range(s)]
     xg = jnp.stack([xm[:, :, g] for g in order], axis=0)  # (s, M, Kg)
@@ -417,28 +428,27 @@ def _gsparse_apply_jnp(p: Params, x, compute_dtype):
     return y.reshape(*lead, N)
 
 
-def _quant_apply_jnp(p: Params, x, compute_dtype):
-    w = p["w_q"].astype(compute_dtype) * p["w_s"].astype(compute_dtype)[None, :]
-    return jnp.dot(x.astype(compute_dtype), w)
+def _quant_apply_jnp(w, scales, x, compute_dtype):
+    wf = w.astype(compute_dtype) * scales.astype(compute_dtype)[None, :]
+    return jnp.dot(x.astype(compute_dtype), wf)
 
 
-def _quant_apply_pallas(p: Params, x, cfg: DispatchConfig, out_dtype,
-                        bias, activation: Optional[str], entry=None):
+def _quant_apply_pallas(w, scales, x, cfg: DispatchConfig, out_dtype,
+                        bias, activation: Optional[str], entry=None, *,
+                        packed: bool = False):
     """quant_matmul kernel path with the fused bias/activation epilogue.
 
     Tiles come from the tuned entry when present, else the defaults; tiles
     fall back to whole-dim blocks when 128 does not divide — legal only in
     interpret mode, which is the sole way here for such shapes (_use_pallas
-    gates compiled execution on quant_kernel_eligible).  A ``w_qp`` leaf
-    (bit-packed int4 container, K axis, even K — guaranteed by the caller)
-    rides the kernel's packed prologue: half the weight bytes, identical
-    numerics."""
-    packed = "w_qp" in p
+    gates compiled execution on quant_kernel_eligible).  ``packed=True``
+    takes the bit-packed int4 container (uint8 along K, even K —
+    guaranteed by the caller) through the kernel's packed prologue: half
+    the weight bytes, identical numerics."""
     if packed:
-        w, N = p["w_qp"], int(p["w_qp"].shape[1])
+        N = int(w.shape[1])
         K = x.shape[-1]
     else:
-        w = p["w_q"]
         K, N = w.shape
     lead = x.shape[:-1]
     xm = x.reshape(-1, K)
@@ -451,7 +461,7 @@ def _quant_apply_pallas(p: Params, x, cfg: DispatchConfig, out_dtype,
     if bk is None or K % bk:
         bk = 128 if K % 128 == 0 else K
     xm, M = _pad_rows(xm, bm)
-    y = quant_matmul(xm, w, p["w_s"].reshape(N), bias,
+    y = quant_matmul(xm, w, scales.reshape(N), bias,
                      bm=bm, bn=bn, bk=bk, activation=activation,
                      out_dtype=out_dtype, interpret=cfg.run_interpret,
                      packed=packed)[:M]
@@ -474,15 +484,17 @@ def linear_dispatch(
 ) -> jnp.ndarray:
     """Apply one compiled linear leaf: y = act(x @ W + b).
 
-    Dispatches on the parameter leaves (see module docstring) and on the
-    resolved dispatch mode.  The bias leaf ``p["b"]`` and ``activation``
-    are fused into the sparse and quant kernels' epilogues on the Pallas
-    path and applied by the identical f32 formula on every other path.
-    A tuned table on the config supplies per-leaf backend and tile choices
-    (trace-time lookup — nothing here is a traced value); ``leaf`` names
-    the leaf for per-leaf tuned overrides, and ``op`` ("linear" | "conv")
-    tags the tuned key so im2col'd convs never share entries with linears
-    at the same shape.
+    Dispatches on the parameter leaves: the leaf dict's key leaf selects
+    its registered :class:`repro.core.payload_registry.PayloadFamily`,
+    whose ``apply`` hook owns the whole kernel-vs-twin selection for that
+    format (built from the shared helpers in this module).  The bias leaf
+    ``p["b"]`` and ``activation`` are fused into the sparse and quant
+    kernels' epilogues on the Pallas path and applied by the identical
+    f32 formula on every other path.  A tuned table on the config
+    supplies per-leaf backend and tile choices (trace-time lookup —
+    nothing here is a traced value); ``leaf`` names the leaf for per-leaf
+    tuned overrides, and ``op`` ("linear" | "conv") tags the tuned key so
+    im2col'd convs never share entries with linears at the same shape.
     """
     _check_activation(activation)
     if op not in ("linear", "conv"):
@@ -492,121 +504,12 @@ def linear_dispatch(
     if compute_dtype is None:
         compute_dtype = x.dtype
     bias = p.get("b")
-
-    if "w" in p:
-        y = jnp.dot(x.astype(compute_dtype), p["w"].astype(compute_dtype))
-        return _epilogue(y, bias, activation, compute_dtype)
-
-    if "w_q" in p:
-        K, N = p["w_q"].shape
-        entry = _tuned_entry(cfg, tag + "quant", _lead_rows(x), K, N,
-                             x.dtype, leaf=leaf)
-        if _pick_backend(cfg, entry, quant_kernel_eligible(K, N), leaf=leaf,
-                         predicate=f"quant_kernel_eligible(K={K}, N={N})"):
-            # epilogue fused into the kernel's emit step — no extra pass
-            return _quant_apply_pallas(p, x, cfg, compute_dtype, bias,
-                                       activation, entry)
-        y = _quant_apply_jnp(p, x, compute_dtype)
-        return _epilogue(y, bias, activation, compute_dtype)
-
-    if "w_qp" in p:
-        # bit-packed int4 quant container: uint8 (ceil(K/2), N) along K.
-        # The logical K comes from the activation (the container cannot
-        # distinguish K from K+1 when K is odd).
-        wp = p["w_qp"]
-        K, N = x.shape[-1], int(wp.shape[-1])
-        if wp.shape[-2] != (K + 1) // 2:
-            raise ValueError(
-                f"packed quant container rows {wp.shape[-2]} do not match "
-                f"activation K={K} (expected ceil(K/2)={(K + 1) // 2}) — "
-                "w_qp leaves are packed two codes per byte along K")
-        entry = _tuned_entry(cfg, tag + "quant", _lead_rows(x), K, N,
-                             x.dtype, leaf=leaf, container=PACKED_CONTAINER)
-        if _pick_backend(cfg, entry, quant_kernel_eligible(K, N), leaf=leaf,
-                         predicate=f"quant_kernel_eligible(K={K}, N={N})"):
-            if K % 2 == 0:  # in-kernel nibble decode: half the HBM bytes
-                return _quant_apply_pallas(p, x, cfg, compute_dtype, bias,
-                                           activation, entry)
-            p2 = {"w_q": unpack_int4(wp, K, axis=-2), "w_s": p["w_s"]}
-            return _quant_apply_pallas(p2, x, cfg, compute_dtype, bias,
-                                       activation, entry)
-        p2 = {"w_q": unpack_int4(wp, K, axis=-2), "w_s": p["w_s"]}
-        y = _quant_apply_jnp(p2, x, compute_dtype)
-        return _epilogue(y, bias, activation, compute_dtype)
-
-    if "w_grp" in p:
-        y = _gsparse_apply_jnp(p, x, compute_dtype)
-        return _epilogue(y, bias, activation, compute_dtype)
-
-    if "w_blk" in p:
-        if pattern is None:
-            raise ValueError(
-                "sparse linear needs its static pattern — pass the "
-                "compile_sparse pattern table through forward/decode_step "
-                "(patterns=cm.patterns) or a cfg-derived shared pattern")
-        K, N = pattern.shape
-        entry = _tuned_entry(cfg, tag + "sparse", _lead_rows(x), K, N,
-                             x.dtype, pattern, leaf=leaf)
-        use_k = _pick_backend(
-            cfg, entry, sparse_kernel_eligible(pattern, p["w_blk"].dtype),
-            leaf=leaf,
-            predicate=f"sparse_kernel_eligible(block={pattern.block})")
-        bm = cfg.bm if cfg.bm is not None else \
-            (entry.bm if entry is not None else None)
-        if use_k:
-            cl = CompressedLinear(pattern=pattern, blocks=p["w_blk"],
-                                  scales=p.get("w_s"))
-            return sparse_linear(
-                x, cl, bm=_effective_bm(bm, x.dtype), bias=bias,
-                activation=activation, out_dtype=compute_dtype,
-                interpret=cfg.run_interpret, use_kernel=True)
-        y = _sparse_apply_jnp(p, x, pattern, compute_dtype)
-        return _epilogue(y, bias, activation, compute_dtype)
-
-    if "w_blkp" in p:
-        # bit-packed int4 sparse container: uint8 (P, ceil(bk/2), bn)
-        # along the bk axis; the static pattern supplies the logical bk.
-        if pattern is None:
-            raise ValueError(
-                "sparse linear needs its static pattern — pass the "
-                "compile_sparse pattern table through forward/decode_step "
-                "(patterns=cm.patterns) or a cfg-derived shared pattern")
-        K, N = pattern.shape
-        bk, bn = pattern.block
-        wp = p["w_blkp"]
-        if wp.shape[-2] != (bk + 1) // 2 or wp.shape[-1] != bn:
-            raise ValueError(
-                f"packed sparse container block {tuple(wp.shape[-2:])} does "
-                f"not match the pattern block {(bk, bn)} (expected "
-                f"({(bk + 1) // 2}, {bn})) — w_blkp leaves are packed two "
-                "codes per byte along bk")
-        entry = _tuned_entry(cfg, tag + "sparse", _lead_rows(x), K, N,
-                             x.dtype, pattern, leaf=leaf,
-                             container=PACKED_CONTAINER)
-        use_k = _pick_backend(
-            cfg, entry, sparse_kernel_eligible(pattern, wp.dtype),
-            leaf=leaf,
-            predicate=f"sparse_kernel_eligible(block={pattern.block})")
-        bm = cfg.bm if cfg.bm is not None else \
-            (entry.bm if entry is not None else None)
-        if use_k:
-            # sparse_linear decodes in-kernel for even bk, else unpacks at
-            # trace time and runs the identical int8 kernel path
-            cl = CompressedLinear(
-                pattern=pattern,
-                blocks=PackedTensor(data=wp, shape=(int(wp.shape[0]), bk, bn),
-                                    axis=1, bits=4),
-                scales=p.get("w_s"), bits=4)
-            return sparse_linear(
-                x, cl, bm=_effective_bm(bm, x.dtype), bias=bias,
-                activation=activation, out_dtype=compute_dtype,
-                interpret=cfg.run_interpret, use_kernel=True)
-        p2 = {k: v for k, v in p.items() if k != "w_blkp"}
-        p2["w_blk"] = unpack_int4(wp, bk, axis=-2)
-        y = _sparse_apply_jnp(p2, x, pattern, compute_dtype)
-        return _epilogue(y, bias, activation, compute_dtype)
-
-    raise ValueError(f"unknown linear leaves {list(p)}")
+    fam = payload_registry.family_for_leaves(p)
+    if fam is None or fam.apply is None:
+        raise ValueError(f"unknown linear leaves {list(p)}")
+    return fam.apply(p, x, pattern=pattern, cfg=cfg, bias=bias,
+                     activation=activation, compute_dtype=compute_dtype,
+                     leaf=leaf, tag=tag)
 
 
 def payload_dispatch(
@@ -621,9 +524,14 @@ def payload_dispatch(
     op: str = "linear",
 ) -> jnp.ndarray:
     """Dispatch over a compile_lenet layer payload (CompressedLinear —
-    optionally bit-packed — / PackedTensor / QuantizedTensor / masked-dense
-    array) — the per-name analogue of :func:`linear_dispatch` for
-    non-pytree models.
+    optionally bit-packed — / PackedTensor / QuantizedTensor /
+    PerChannelQuant / masked-dense array) — the per-name analogue of
+    :func:`linear_dispatch` for non-pytree models.
+
+    The payload object resolves to its registered family through
+    :func:`repro.core.payload_registry.unwrap_payload` (packed container
+    variants match before their unpacked twins), lowers to the family's
+    leaf dict, and funnels into :func:`linear_dispatch`.
 
     ``compute_dtype`` defaults to ``x.dtype`` on every payload family,
     exactly like :func:`linear_dispatch` — bf16 activations stay bf16
@@ -638,45 +546,18 @@ def payload_dispatch(
             "ConvPayload must go through conv_dispatch (it carries the "
             "kernel geometry the im2col lowering needs), not "
             "payload_dispatch")
-    if isinstance(payload, CompressedLinear):
-        if payload.packed and payload.blocks.axis % 3 == 1:
-            # bk-axis container: the kernel's packed prologue understands it
-            p: Params = {"w_blkp": payload.blocks.data}
-        elif payload.packed:
-            # bn-axis container (odd bk): trace-time unpack, identical codes
-            p = {"w_blk": payload.block_values()}
-        else:
-            p = {"w_blk": payload.blocks}
-        if payload.scales is not None:
-            p["w_s"] = payload.scales
-        if bias is not None:
-            p["b"] = bias
-        return linear_dispatch(p, x, pattern=payload.pattern, dispatch=cfg,
-                               compute_dtype=compute_dtype,
-                               activation=activation, leaf=leaf, op=op)
-    if isinstance(payload, PackedTensor):
-        K, N = payload.shape
-        if payload.axis % len(payload.shape) == 0:
-            p = {"w_qp": payload.data, "w_s": payload.scales.reshape(N)}
-        else:  # N-axis container (odd K): trace-time unpack, same codes
-            p = {"w_q": payload.unpack(), "w_s": payload.scales.reshape(N)}
-        if bias is not None:
-            p["b"] = bias
-        return linear_dispatch(p, x, dispatch=cfg, activation=activation,
-                               compute_dtype=compute_dtype, leaf=leaf, op=op)
-    if isinstance(payload, QuantizedTensor):
-        K, N = payload.values.shape
-        p = {"w_q": payload.values, "w_s": payload.scales.reshape(N)}
-        if bias is not None:
-            p["b"] = bias
-        return linear_dispatch(p, x, dispatch=cfg, activation=activation,
-                               compute_dtype=compute_dtype, leaf=leaf, op=op)
-    # masked dense payload (plain array)
-    p = {"w": payload}
+    fam, leaves, pattern = payload_registry.unwrap_payload(payload)
+    if fam is None:
+        raise TypeError(
+            f"no registered payload family matches "
+            f"{type(payload).__name__} — registered: "
+            f"{[f.name for f in payload_registry.all_families()]}")
+    p: Params = dict(leaves)
     if bias is not None:
         p["b"] = bias
-    return linear_dispatch(p, x, dispatch=cfg, activation=activation,
-                           compute_dtype=compute_dtype, leaf=leaf, op=op)
+    return linear_dispatch(p, x, pattern=pattern, dispatch=cfg,
+                           compute_dtype=compute_dtype,
+                           activation=activation, leaf=leaf, op=op)
 
 
 # ------------------------------------------------------------ convolutions
@@ -694,15 +575,17 @@ class ConvPayload:
     ``(K = cin*kh*kw, N = cout)`` in the *patch feature order* of
     ``lax.conv_general_dilated_patches`` (cin major, then kh, kw).
 
-    ``strides``/``padding`` record the conv the leaf was compiled (and
-    cost-modelled) for; :func:`conv_dispatch` rejects a mismatching call
-    loudly instead of silently running a differently-shaped conv.
+    ``strides``/``padding``/``dilation`` record the conv the leaf was
+    compiled (and cost-modelled) for; :func:`conv_dispatch` rejects a
+    mismatching call loudly instead of silently running a
+    differently-shaped conv.
     """
 
     payload: Any
     kernel: Tuple[int, int, int, int]   # (kh, kw, cin, cout)
     strides: Tuple[int, int] = (1, 1)
     padding: str = "VALID"
+    dilation: Tuple[int, int] = (1, 1)
 
     @property
     def K(self) -> int:
@@ -714,9 +597,58 @@ class ConvPayload:
         return self.kernel[3]
 
 
+def conv_out_hw(in_hw: Tuple[int, int], kernel_hw: Tuple[int, int],
+                strides: Tuple[int, int], padding: str,
+                dilation: Tuple[int, int] = (1, 1)) -> Tuple[int, int]:
+    """Static (H_out, W_out) of a conv — the one geometry formula every
+    lowering (fused kernels, im2col, the compile passes) shares.  SAME
+    follows XLA's ``ceil(H / stride)``; VALID uses the effective (dilated)
+    kernel extent ``(k - 1) * d + 1``."""
+    H, W = in_hw
+    kh, kw = kernel_hw
+    sh, sw = strides
+    dh, dw = dilation
+    if padding == "SAME":
+        return -(-H // sh), -(-W // sw)
+    ekh, ekw = (kh - 1) * dh + 1, (kw - 1) * dw + 1
+    return (H - ekh) // sh + 1, (W - ekw) // sw + 1
+
+
+def _same_pads(H: int, k: int, s: int, d: int) -> Tuple[int, int]:
+    """XLA's SAME padding split for one spatial axis: total pad
+    ``max((ceil(H/s) - 1)*s + (k-1)*d + 1 - H, 0)``, low gets the floor
+    half (matching ``lax.conv_general_dilated(padding="SAME")``)."""
+    Ho = -(-H // s)
+    p = max((Ho - 1) * s + (k - 1) * d + 1 - H, 0)
+    return p // 2, p - p // 2
+
+
+def conv_pre_pad(x: jnp.ndarray, kernel_hw: Tuple[int, int], *,
+                 strides: Tuple[int, int], padding: str,
+                 dilation: Tuple[int, int] = (1, 1)) -> jnp.ndarray:
+    """Resolve SAME padding to an explicit zero-pad so every downstream
+    lowering (fused conv kernels AND the trace-time im2col) only ever
+    sees VALID geometry — the single source of truth for pad placement."""
+    if padding == "VALID":
+        return x
+    if padding != "SAME":
+        raise ValueError(
+            f"conv supports 'VALID' or 'SAME' padding, got {padding!r}")
+    kh, kw = kernel_hw
+    sh, sw = strides
+    dh, dw = dilation
+    _, H, W, _ = x.shape
+    ph_lo, ph_hi = _same_pads(H, kh, sh, dh)
+    pw_lo, pw_hi = _same_pads(W, kw, sw, dw)
+    if not (ph_lo or ph_hi or pw_lo or pw_hi):
+        return x
+    return jnp.pad(x, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+
+
 def conv_im2col(x: jnp.ndarray, kernel_hw: Tuple[int, int], *,
                 strides: Tuple[int, int] = (1, 1),
-                padding: str = "VALID") -> jnp.ndarray:
+                padding: str = "VALID",
+                dilation: Tuple[int, int] = (1, 1)) -> jnp.ndarray:
     """Static im2col: NHWC image -> (B, H_out, W_out, cin*kh*kw) patches.
 
     Trace-time lowering as kh*kw static shifted slices of the image,
@@ -726,28 +658,21 @@ def conv_im2col(x: jnp.ndarray, kernel_hw: Tuple[int, int], *,
     dilated-patches lowering materialises a conv with K output channels
     (O(K²) MACs of pure data shuffling), which dominated the whole-model
     compressed batch time; slicing is O(K) data movement that XLA fuses.
+    Strides walk the slices, ``dilation`` spaces the taps (rhs dilation),
+    and SAME padding zero-pads up front via :func:`conv_pre_pad`.
     """
     if x.ndim != 4:
         raise ValueError(
             f"conv_im2col expects NHWC input, got shape {x.shape}")
     kh, kw = kernel_hw
     sh, sw = strides
+    dl_h, dl_w = dilation
+    x = conv_pre_pad(x, kernel_hw, strides=strides, padding=padding,
+                     dilation=dilation)
     B, H, W, C = x.shape
-    if padding == "SAME":
-        Ho, Wo = -(-H // sh), -(-W // sw)
-        ph = max((Ho - 1) * sh + kh - H, 0)
-        pw = max((Wo - 1) * sw + kw - W, 0)
-        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
-                        (pw // 2, pw - pw // 2), (0, 0)))
-        H, W = H + ph, W + pw
-    elif padding != "VALID":
-        raise ValueError(
-            f"conv_im2col supports 'VALID' or 'SAME' padding, got "
-            f"{padding!r}")
-    Ho = (H - kh) // sh + 1
-    Wo = (W - kw) // sw + 1
-    taps = [x[:, dh:dh + sh * (Ho - 1) + 1:sh,
-              dw:dw + sw * (Wo - 1) + 1:sw, :]
+    Ho, Wo = conv_out_hw((H, W), kernel_hw, strides, "VALID", dilation)
+    taps = [x[:, dh * dl_h:dh * dl_h + sh * (Ho - 1) + 1:sh,
+              dw * dl_w:dw * dl_w + sw * (Wo - 1) + 1:sw, :]
             for dh in range(kh) for dw in range(kw)]
     t = jnp.stack(taps, axis=-2)          # (B, Ho, Wo, kh*kw, C)
     t = jnp.swapaxes(t, -1, -2)           # (B, Ho, Wo, C, kh*kw)
@@ -774,81 +699,34 @@ def _conv_fused(cp: ConvPayload, x: jnp.ndarray, cfg: DispatchConfig,
                 ) -> Optional[jnp.ndarray]:
     """Try the fused conv entries (in-kernel patch gather, pooled emit).
 
-    Returns the conv output, or None when the fused path does not apply:
-    non-unit stride / non-VALID padding (the in-kernel patch builder is
-    stride-1 by construction), a pool window that does not tile the
-    output, a dense/group payload (no kernel family), or the backend pick
-    resolving to the jnp twin.  Kind ``fusedconv_sparse`` /
-    ``fusedconv_quant`` keys the tuned table — fused and im2col'd runs of
-    the same leaf never share entries (they stream different bytes).
+    The payload's registered family supplies the kernel entry via its
+    ``conv_fused`` hook; SAME padding is resolved to an explicit zero-pad
+    here (:func:`conv_pre_pad`), so the kernels only ever see VALID
+    geometry with static strides/dilation.  Returns the conv output, or
+    None when the fused path does not apply: a family with no fused
+    entry (dense/group), a pool window that does not tile the output, an
+    empty output, or the backend pick resolving to the jnp twin.  Kind
+    ``fusedconv_sparse`` / ``fusedconv_quant`` keys the tuned table —
+    fused and im2col'd runs of the same leaf never share entries (they
+    stream different bytes).
     """
-    if tuple(cp.strides) != (1, 1) or cp.padding != "VALID":
+    fam = payload_registry.family_of_payload(cp.payload)
+    if fam is None or fam.conv_fused is None:
         return None
     kh, kw, cin, cout = cp.kernel
     B, H, W, _ = x.shape
-    Ho, Wo = H - kh + 1, W - kw + 1
+    Ho, Wo = conv_out_hw((H, W), (kh, kw), cp.strides, cp.padding,
+                         cp.dilation)
     if Ho < 1 or Wo < 1:
         return None
     if pool is not None and (Ho % pool[1] or Wo % pool[1]):
         return None
-    payload = cp.payload
+    xp = conv_pre_pad(x, (kh, kw), strides=cp.strides, padding=cp.padding,
+                      dilation=cp.dilation)
     M = B * Ho * Wo
     out_dtype = compute_dtype if compute_dtype is not None else x.dtype
-
-    if isinstance(payload, CompressedLinear):
-        pat = payload.pattern
-        eligible = sparse_kernel_eligible(pat, None)  # 128-rule, dtype-free
-        container = PACKED_CONTAINER if payload.packed else None
-        entry = _tuned_entry(cfg, "fusedconv_sparse", M, cp.K, cp.N,
-                             x.dtype, pat, leaf=leaf, container=container)
-        if not _pick_backend(
-                cfg, entry, eligible, leaf=leaf,
-                predicate=f"sparse_kernel_eligible(block={pat.block})"):
-            return None
-        blocks, packed_kernel = payload.blocks, False
-        if payload.packed:
-            if payload.blocks.axis % 3 == 1 and pat.block[0] % 2 == 0:
-                blocks, packed_kernel = payload.blocks.data, True
-            else:  # bn-axis container: trace-time unpack, same codes
-                blocks = payload.block_values()
-        return block_sparse_conv(
-            x, blocks, pat.block_rows, pat.block_cols,
-            kernel_hw=(kh, kw),
-            n_row_blocks=pat.bitmap.shape[0],
-            n_col_blocks=pat.bitmap.shape[1],
-            scales=payload.scales, bias=bias, activation=activation,
-            pool=pool, out_dtype=out_dtype,
-            interpret=cfg.run_interpret, packed=packed_kernel)
-
-    if isinstance(payload, (QuantizedTensor, PackedTensor)):
-        K, N = cp.K, cp.N
-        container = PACKED_CONTAINER if isinstance(payload, PackedTensor) \
-            else None
-        entry = _tuned_entry(cfg, "fusedconv_quant", M, K, N, x.dtype,
-                             leaf=leaf, container=container)
-        if not _pick_backend(
-                cfg, entry, quant_kernel_eligible(K, N), leaf=leaf,
-                predicate=f"quant_kernel_eligible(K={K}, N={N})"):
-            return None
-        packed_kernel = False
-        if isinstance(payload, PackedTensor):
-            if payload.axis % len(payload.shape) == 0 and K % 2 == 0:
-                w_q, packed_kernel = payload.data, True
-            else:
-                w_q = payload.unpack()
-            scales = payload.scales.reshape(N)
-        else:
-            w_q = payload.values
-            scales = payload.scales.reshape(N)
-        bn = bk = None
-        if entry is not None:
-            bn, bk = entry.bn, entry.bk
-        return quant_conv(
-            x, w_q, scales, bias, kernel_hw=(kh, kw), bn=bn, bk=bk,
-            interpret=cfg.run_interpret, out_dtype=out_dtype,
-            activation=activation, packed=packed_kernel, pool=pool)
-
-    return None  # dense / group payloads: no fused kernel family
+    return fam.conv_fused(cp, xp, cfg=cfg, bias=bias, activation=activation,
+                          out_dtype=out_dtype, leaf=leaf, pool=pool, M=M)
 
 
 def conv_dispatch(
@@ -857,6 +735,7 @@ def conv_dispatch(
     *,
     strides: Optional[Tuple[int, int]] = None,
     padding: Optional[str] = None,
+    dilation: Optional[Tuple[int, int]] = None,
     dispatch: Union[None, str, DispatchConfig] = None,
     bias: Optional[jnp.ndarray] = None,
     activation: Optional[str] = None,
@@ -880,10 +759,10 @@ def conv_dispatch(
     ``M = B*H_out*W_out`` under ``conv_``- (im2col) or ``fusedconv_``-
     (fused) tagged kinds.
 
-    ``strides``/``padding`` default to the compiled geometry; passing a
-    *different* value raises — the payload was packed and cost-modelled
-    for one specific conv, and silently running another would be a wrong
-    answer with the right shape.
+    ``strides``/``padding``/``dilation`` default to the compiled geometry;
+    passing a *different* value raises — the payload was packed and
+    cost-modelled for one specific conv, and silently running another
+    would be a wrong answer with the right shape.
     """
     if not isinstance(cp, ConvPayload):
         raise TypeError(
@@ -901,6 +780,12 @@ def conv_dispatch(
             f"conv_dispatch padding {padding!r} does not match the compiled "
             f"payload's padding {cp.padding!r} — recompile instead of "
             "overriding")
+    if dilation is not None and tuple(dilation) != tuple(cp.dilation):
+        raise ValueError(
+            f"conv_dispatch dilation {tuple(dilation)} does not match the "
+            f"compiled payload's dilation {tuple(cp.dilation)} — the leaf "
+            "was packed and cost-modelled for that geometry; recompile "
+            "instead of overriding")
     if x.ndim != 4 or x.shape[-1] != cin:
         raise ValueError(
             f"conv_dispatch: input shape {x.shape} does not match the "
@@ -916,7 +801,7 @@ def conv_dispatch(
     if y is not None:
         return y
     patches = conv_im2col(x, (kh, kw), strides=cp.strides,
-                          padding=cp.padding)
+                          padding=cp.padding, dilation=cp.dilation)
     y = payload_dispatch(cp.payload, patches, dispatch=cfg,
                          bias=bias, activation=activation,
                          compute_dtype=compute_dtype, leaf=leaf,
@@ -931,29 +816,20 @@ def conv_dispatch(
 
 def _payload_dense_f32(payload: Any) -> jnp.ndarray:
     """Trace-time densification of any linear payload family to (K, N)
-    f32 — the weight lowering of the fused FC-stack kernel (containers
-    dequantise/decompress exactly like their jnp twins)."""
-    if isinstance(payload, CompressedLinear):
-        return decompress(payload).astype(jnp.float32)
-    if isinstance(payload, PackedTensor):
-        K, N = payload.shape
-        codes = payload.unpack().astype(jnp.float32)
-        return codes * payload.scales.reshape(N).astype(jnp.float32)[None, :]
-    if isinstance(payload, QuantizedTensor):
-        N = payload.values.shape[1]
-        return payload.values.astype(jnp.float32) * \
-            payload.scales.reshape(N).astype(jnp.float32)[None, :]
-    return jnp.asarray(payload, jnp.float32)
+    f32 — the weight lowering of the fused FC-stack kernel (each family's
+    ``payload_dense`` hook dequantises/decompresses exactly like its jnp
+    twin)."""
+    fam = payload_registry.family_of_payload(payload)
+    if fam is None or fam.payload_dense is None:
+        return jnp.asarray(payload, jnp.float32)
+    return fam.payload_dense(payload)
 
 
 def _payload_kn(payload: Any) -> Tuple[int, int]:
-    if isinstance(payload, CompressedLinear):
-        return tuple(map(int, payload.pattern.shape))
-    if isinstance(payload, (PackedTensor,)):
-        return tuple(map(int, payload.shape))
-    if isinstance(payload, QuantizedTensor):
-        return tuple(map(int, payload.values.shape))
-    return tuple(map(int, jnp.shape(payload)))
+    fam = payload_registry.family_of_payload(payload)
+    if fam is None or fam.payload_kn is None:
+        return tuple(map(int, jnp.shape(payload)))
+    return fam.payload_kn(payload)
 
 
 def fc_stack_dispatch(
@@ -999,3 +875,9 @@ def fc_stack_dispatch(
                              activation=act, compute_dtype=compute_dtype,
                              leaf=lf)
     return y
+
+
+# Register the built-in payload families eagerly: the family modules pull
+# their kernel-selection helpers from THIS module at call time, so the
+# import has to sit below every definition.
+from . import families as _families  # noqa: E402,F401

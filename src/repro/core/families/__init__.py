@@ -1,0 +1,13 @@
+"""Built-in payload families — importing this package registers them.
+
+Registration order IS match priority (``payload_registry.unwrap_payload``
+and friends walk it front to back): packed container variants come before
+their unpacked twins so a bit-packed payload resolves to its container
+family first, and dense registers LAST because its ``matches`` claims any
+plain array.
+"""
+from . import sparse as _sparse            # noqa: F401
+from . import quant as _quant              # noqa: F401
+from . import gsparse as _gsparse          # noqa: F401
+from . import perchannel as _perchannel    # noqa: F401
+from . import dense as _dense              # noqa: F401

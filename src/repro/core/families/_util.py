@@ -1,0 +1,10 @@
+"""Shared helpers for the built-in payload-family modules."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def he_init(key, shape, dtype, fan_in):
+    """He-style random init shared by the families' linear_init modes."""
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)

@@ -1,0 +1,65 @@
+"""Dense family — the XLA matmul IS the engine-free form.
+
+Leaf form ``{"w": (K, N)}``; the payload form is a plain (possibly
+masked) array.  No kernel entry, no container, nothing to decompress:
+this family exists so the consumers can treat "not compressed" as just
+another registered format instead of a special case.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import dispatch as _d
+from .. import payload_registry as _reg
+from ._util import he_init
+
+
+def _apply(p, x, *, pattern, cfg, bias, activation, compute_dtype, leaf,
+           tag):
+    del pattern, cfg, leaf, tag
+    y = jnp.dot(x.astype(compute_dtype), p["w"].astype(compute_dtype))
+    return _d._epilogue(y, bias, activation, compute_dtype)
+
+
+def _matches(payload):
+    return isinstance(payload, (jax.Array, np.ndarray))
+
+
+def _from_payload(payload):
+    if not _matches(payload):
+        return None
+    return {"w": payload}, None
+
+
+def _payload_dense(payload):
+    return jnp.asarray(payload, jnp.float32)
+
+
+def _payload_kn(payload):
+    return tuple(map(int, jnp.shape(payload)))
+
+
+def _init_dense(key, K, N, *, dtype, pattern):
+    del pattern
+    return {"w": he_init(key, (K, N), dtype, K)}
+
+
+def _sample(rng):
+    return {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)}, None
+
+
+FAMILY = _reg.register(_reg.PayloadFamily(
+    name="dense",
+    key_leaf="w",
+    leaf_names=("w",),
+    apply=_apply,
+    matches=_matches,
+    from_payload=_from_payload,
+    payload_dense=_payload_dense,
+    payload_kn=_payload_kn,
+    leaf_ndim={"w": 2},
+    init_modes={"dense": _init_dense},
+    sample=_sample,
+))

@@ -1,0 +1,57 @@
+"""Group-diagonal static sparsity family (jnp-only).
+
+Leaf form ``{"w_grp": (s, Kg, Ng) [, "w_s": (N,) f32]}``: output column
+group c reads input row group ``(s - c) % s``, so the layer factorises
+into s dense matmuls — engine-free for XLA with no kernel entry needed.
+There is no payload form: gsparse weights only exist as pytree leaves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import dispatch as _d
+from .. import payload_registry as _reg
+from ._util import he_init
+
+
+def _apply(p, x, *, pattern, cfg, bias, activation, compute_dtype, leaf,
+           tag):
+    del pattern, cfg, leaf, tag
+    y = _d._gsparse_apply_jnp(p["w_grp"], p.get("w_s"), x, compute_dtype)
+    return _d._epilogue(y, bias, activation, compute_dtype)
+
+
+def _init_gsparse(key, K, N, *, dtype, pattern):
+    assert pattern is not None  # the group count s
+    s = pattern
+    Kg, Ng = K // s, N // s
+    return {"w_grp": he_init(key, (s, Kg, Ng), dtype, Kg)}
+
+
+def _init_gsparse_int8(key, K, N, *, dtype, pattern):
+    del dtype
+    assert pattern is not None
+    s = pattern
+    Kg, Ng = K // s, N // s
+    return {"w_grp": jax.random.randint(key, (s, Kg, Ng), -127, 128,
+                                        dtype=jnp.int8),
+            "w_s": jnp.full((N,), 1.0 / (127 * np.sqrt(Kg)), jnp.float32)}
+
+
+def _sample(rng):
+    return {"w_grp": jnp.asarray(rng.normal(size=(2, 8, 4)),
+                                 jnp.float32)}, None
+
+
+FAMILY = _reg.register(_reg.PayloadFamily(
+    name="gsparse",
+    key_leaf="w_grp",
+    leaf_names=("w_grp", "w_s"),
+    apply=_apply,
+    leaf_ndim={"w_grp": 3, "w_s": 1},
+    init_modes={"gsparse": _init_gsparse,
+                "gsparse_int8": _init_gsparse_int8},
+    sample=_sample,
+))

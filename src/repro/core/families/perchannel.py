@@ -1,0 +1,197 @@
+"""Per-INPUT-channel-scale quant family — the registry's proof format.
+
+Symmetric int8 (or int4-range) codes with one f32 scale per *input*
+channel (the K axis), the transposed twin of the ``quant`` family's
+per-output-channel scales:
+
+    W = diag(s) @ W_q          =>   x @ W = (x * s) @ W_q
+
+Leaf form ``{"w_pc": (K, N) int8, "w_pcs": (K,) f32}``; payload form
+:class:`PerChannelQuant`.  The scale folds into the *activation*, so the
+Pallas leg rides the existing ``quant_matmul`` kernel with unit output
+scales — no new kernel, no engine.
+
+This module is the whole format: dispatch, compile_sparse, autotune,
+sharding and checkpointing pick it up from the registration below with
+zero family-specific branches added anywhere else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import dispatch as _d
+from .. import payload_registry as _reg
+from ..quant import quantize
+
+# container tag for tuned-table keys: per-channel leaves pre-scale the
+# activation, so their timings must never be shared with plain quant
+# entries at the same (M, K, N)
+PERCHANNEL_CONTAINER = "perchannel"
+
+
+@dataclasses.dataclass
+class PerChannelQuant:
+    """Payload form: int8 codes + per-input-channel (K,) f32 scales."""
+
+    values: jnp.ndarray   # (K, N) int8 codes
+    scales: jnp.ndarray   # (K,) f32 per-input-channel
+    bits: int = 8
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.values.shape
+
+    def dequantize(self) -> jnp.ndarray:
+        K = self.values.shape[-2]
+        return self.values.astype(jnp.float32) * \
+            self.scales.reshape(K).astype(jnp.float32)[:, None]
+
+
+def _pcq_flatten(pcq: PerChannelQuant):
+    return (pcq.values, pcq.scales), (pcq.bits,)
+
+
+def _pcq_unflatten(aux, children):
+    values, scales = children
+    return PerChannelQuant(values=values, scales=scales, bits=aux[0])
+
+
+jax.tree_util.register_pytree_node(PerChannelQuant, _pcq_flatten,
+                                   _pcq_unflatten)
+
+
+def quantize_per_channel(w, bits: int = 8) -> PerChannelQuant:
+    """Symmetric quantisation with one scale per input channel (K axis)."""
+    qt = quantize(w, bits, axis=0)
+    K = qt.values.shape[0]
+    return PerChannelQuant(values=qt.values,
+                           scales=qt.scales.reshape(K).astype(jnp.float32),
+                           bits=bits)
+
+
+# ----------------------------------------------------------------- execute
+
+
+def _apply(p, x, *, pattern, cfg, bias, activation, compute_dtype, leaf,
+           tag):
+    del pattern
+    w = p["w_pc"]
+    K, N = w.shape
+    # fold the per-input-channel scale into the activation: the matmul
+    # then sees plain int8 codes with unit output scales
+    xs = x.astype(compute_dtype) * p["w_pcs"].astype(compute_dtype)
+    entry = _d._tuned_entry(cfg, tag + "quant", _d._lead_rows(x), K, N,
+                            x.dtype, leaf=leaf,
+                            container=PERCHANNEL_CONTAINER)
+    if _d._pick_backend(cfg, entry, _d.quant_kernel_eligible(K, N), leaf=leaf,
+                        predicate=f"quant_kernel_eligible(K={K}, N={N})"):
+        return _d._quant_apply_pallas(w, jnp.ones((N,), jnp.float32), xs,
+                                      cfg, compute_dtype, bias, activation,
+                                      entry)
+    y = jnp.dot(xs, w.astype(compute_dtype))
+    return _d._epilogue(y, bias, activation, compute_dtype)
+
+
+# ------------------------------------------------------------------ payload
+
+
+def _matches(payload):
+    return isinstance(payload, PerChannelQuant)
+
+
+def _from_payload(payload):
+    if not _matches(payload):
+        return None
+    K = payload.values.shape[0]
+    return {"w_pc": payload.values, "w_pcs": payload.scales.reshape(K)}, None
+
+
+def _payload_dense(payload):
+    return payload.dequantize()
+
+
+def _payload_kn(payload):
+    return tuple(map(int, payload.values.shape))
+
+
+# --------------------------------------------------------------- decompress
+
+
+def _decompress(leaf, *, pattern, shape, dtype):
+    del pattern, shape
+    w_pc = np.asarray(leaf["w_pc"])
+    w_pcs = np.asarray(leaf["w_pcs"])
+    # scales broadcast over the K axis; stacked leaves carry (L, K)
+    w = w_pc.astype(np.float32) * w_pcs[..., :, None]
+    out = {k: v for k, v in leaf.items() if k not in ("w_pc", "w_pcs")}
+    out["w"] = jnp.asarray(w, dtype)
+    return out
+
+
+# ------------------------------------------------------------------- policy
+
+
+def _compile_stack(stack, masks, *, pattern, bits, rules):
+    del pattern, rules
+    masked = stack if masks is None else stack * masks
+    qs, ss = [], []
+    for wl in masked:
+        pcq = quantize_per_channel(wl, bits)
+        qs.append(np.asarray(pcq.values))
+        ss.append(np.asarray(pcq.scales).reshape(-1))
+    w_pc = jnp.asarray(np.stack(qs))
+    w_pcs = jnp.asarray(np.stack(ss).astype(np.float32))
+    code_bytes = int(w_pc.size + w_pcs.size * 4)
+    return {"w_pc": w_pc, "w_pcs": w_pcs}, code_bytes, code_bytes, None
+
+
+def _compile_payload(w, mask, *, bits, rules, block):
+    del rules, block
+    K, N = w.shape
+    pcq = quantize_per_channel(w if mask is None else w * mask, bits)
+    comp_bytes = cont_bytes = K * N + K * 4
+    return pcq, None, comp_bytes, cont_bytes, None, None
+
+
+# --------------------------------------------------------------------- init
+
+
+def _init_perchannel_int8(key, K, N, *, dtype, pattern):
+    del dtype, pattern
+    return {"w_pc": jax.random.randint(key, (K, N), -127, 128,
+                                       dtype=jnp.int8),
+            "w_pcs": jnp.full((K,), 1.0 / (127 * np.sqrt(K)), jnp.float32)}
+
+
+def _sample(rng):
+    pcq = quantize_per_channel(
+        rng.normal(size=(16, 8)).astype(np.float32), 8)
+    return {"w_pc": pcq.values, "w_pcs": pcq.scales}, None
+
+
+FAMILY = _reg.register(_reg.PayloadFamily(
+    name="perchannel",
+    key_leaf="w_pc",
+    leaf_names=("w_pc", "w_pcs"),
+    apply=_apply,
+    matches=_matches,
+    from_payload=_from_payload,
+    decompress=_decompress,
+    payload_dense=_payload_dense,
+    payload_kn=_payload_kn,
+    leaf_ndim={"w_pc": 2, "w_pcs": 1},
+    shard_tails={"w_pc": "replicate", "w_pcs": "replicate"},
+    init_modes={"perchannel_int8": _init_perchannel_int8},
+    sample=_sample,
+))
+
+POLICY = _reg.register_policy(_reg.PolicyCompiler(
+    name="perchannel",
+    compile_stack=_compile_stack,
+    compile_payload=_compile_payload,
+))

@@ -1,0 +1,391 @@
+"""Block-sparse families: scheduled block stacks (int8 or float) and the
+bit-packed int4 block container, plus the ``"sparse"`` policy compiler.
+
+Leaf forms:
+
+* ``sparse``        — ``{"w_blk": (P, bk, bn) [, "w_s": (P*bn,) f32]}``
+  plus the static :class:`BlockSparsePattern` carried out-of-band.
+* ``sparse_packed`` — ``{"w_blkp": (P, ceil(bk/2), bn) uint8, "w_s"}``
+  (two 4-bit codes per byte along the block-row axis)
+
+Payload form: :class:`repro.core.sparsity.CompressedLinear`.
+
+The pattern is NOT a leaf: it is static schedule metadata, threaded
+through dispatch by the compile tables (``cm.patterns``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import dispatch as _d
+from .. import payload_registry as _reg
+from ..quant import PACKED_CONTAINER, PackedTensor, pack_int4, quantize, \
+    unpack_int4
+from ..sparsity import CompressedLinear, compress, decompress
+from ._util import he_init
+
+# ----------------------------------------------------------------- execute
+
+_NEED_PATTERN = (
+    "sparse linear needs its static pattern — pass the compile_sparse "
+    "pattern table through forward/decode_step (patterns=cm.patterns) or "
+    "a cfg-derived shared pattern")
+
+
+def _apply_sparse(p, x, *, pattern, cfg, bias, activation, compute_dtype,
+                  leaf, tag):
+    if pattern is None:
+        raise ValueError(_NEED_PATTERN)
+    K, N = pattern.shape
+    entry = _d._tuned_entry(cfg, tag + "sparse", _d._lead_rows(x), K, N,
+                            x.dtype, pattern, leaf=leaf)
+    use_k = _d._pick_backend(
+        cfg, entry, _d.sparse_kernel_eligible(pattern, p["w_blk"].dtype),
+        leaf=leaf, predicate=f"sparse_kernel_eligible(block={pattern.block})")
+    if use_k:
+        bm = cfg.bm if cfg.bm is not None else (
+            entry.bm if entry is not None else None)
+        cl = CompressedLinear(pattern=pattern, blocks=p["w_blk"],
+                              scales=p.get("w_s"))
+        return _d.sparse_linear(x, cl, bm=_d._effective_bm(bm, x.dtype),
+                                bias=bias, activation=activation,
+                                out_dtype=compute_dtype,
+                                interpret=cfg.run_interpret, use_kernel=True)
+    y = _d._sparse_apply_jnp(p["w_blk"], p.get("w_s"), x, pattern,
+                             compute_dtype)
+    return _d._epilogue(y, bias, activation, compute_dtype)
+
+
+def _apply_sparse_packed(p, x, *, pattern, cfg, bias, activation,
+                         compute_dtype, leaf, tag):
+    # bit-packed int4 sparse container: uint8 (P, ceil(bk/2), bn)
+    if pattern is None:
+        raise ValueError(_NEED_PATTERN)
+    wp = p["w_blkp"]
+    bk, bn = pattern.block
+    if wp.shape[-2] != (bk + 1) // 2 or wp.shape[-1] != bn:
+        raise ValueError(
+            f"packed sparse container block {tuple(wp.shape[-2:])} does not "
+            f"match the pattern block {(bk, bn)} (expected "
+            f"({(bk + 1) // 2}, {bn})) — w_blkp leaves are packed two codes "
+            "per byte along bk")
+    K, N = pattern.shape
+    entry = _d._tuned_entry(cfg, tag + "sparse", _d._lead_rows(x), K, N,
+                            x.dtype, pattern, leaf=leaf,
+                            container=PACKED_CONTAINER)
+    use_k = _d._pick_backend(
+        cfg, entry, _d.sparse_kernel_eligible(pattern, wp.dtype),
+        leaf=leaf,
+        predicate=f"sparse_kernel_eligible(block={pattern.block})")
+    if use_k:
+        bm = cfg.bm if cfg.bm is not None else (
+            entry.bm if entry is not None else None)
+        cl = CompressedLinear(
+            pattern=pattern,
+            blocks=PackedTensor(data=wp, shape=(int(wp.shape[0]), bk, bn),
+                                axis=1, bits=4),
+            scales=p.get("w_s"), bits=4)
+        return _d.sparse_linear(x, cl, bm=_d._effective_bm(bm, x.dtype),
+                                bias=bias, activation=activation,
+                                out_dtype=compute_dtype,
+                                interpret=cfg.run_interpret, use_kernel=True)
+    y = _d._sparse_apply_jnp(unpack_int4(wp, bk, axis=-2), p.get("w_s"), x,
+                             pattern, compute_dtype)
+    return _d._epilogue(y, bias, activation, compute_dtype)
+
+
+# ------------------------------------------------------------------ payload
+
+
+def _matches_packed(payload):
+    return isinstance(payload, CompressedLinear) and payload.packed \
+        and payload.blocks.axis % 3 == 1
+
+
+def _from_payload_packed(payload):
+    if not _matches_packed(payload):
+        return None
+    leaves = {"w_blkp": payload.blocks.data}
+    if payload.scales is not None:
+        leaves["w_s"] = payload.scales
+    return leaves, payload.pattern
+
+
+def _matches(payload):
+    return isinstance(payload, CompressedLinear)
+
+
+def _from_payload(payload):
+    if not isinstance(payload, CompressedLinear):
+        return None
+    # bn-axis container (odd bk): trace-time unpack into the int8 path
+    blocks = payload.block_values() if payload.packed else payload.blocks
+    leaves = {"w_blk": blocks}
+    if payload.scales is not None:
+        leaves["w_s"] = payload.scales
+    return leaves, payload.pattern
+
+
+def _payload_dense(payload):
+    return decompress(payload).astype(jnp.float32)
+
+
+def _payload_kn(payload):
+    return tuple(map(int, payload.pattern.shape))
+
+
+# --------------------------------------------------------------- fused conv
+
+
+def _conv_fused(cp, x, *, cfg, bias, activation, out_dtype, leaf, pool, M):
+    """block_sparse_conv fused entry (in-kernel im2col + scheduled blocks)
+    over a pre-padded VALID input; shared by both container forms."""
+    payload = cp.payload
+    kh, kw = cp.kernel[:2]
+    K, N = cp.K, cp.N
+    pat = payload.pattern
+    eligible = _d.sparse_kernel_eligible(pat, None)
+    container = PACKED_CONTAINER if payload.packed else None
+    entry = _d._tuned_entry(cfg, "fusedconv_sparse", M, K, N, x.dtype, pat,
+                            leaf=leaf, container=container)
+    if not _d._pick_backend(
+            cfg, entry, eligible, leaf=leaf,
+            predicate=f"sparse_kernel_eligible(block={pat.block})"):
+        return None
+    if payload.packed and payload.blocks.axis % 3 == 1 \
+            and pat.block[0] % 2 == 0:
+        blocks, packed_kernel = payload.blocks.data, True
+    else:
+        blocks = payload.block_values() if payload.packed else payload.blocks
+        packed_kernel = False
+    return _d.block_sparse_conv(
+        x, blocks, pat.block_rows, pat.block_cols, kernel_hw=(kh, kw),
+        n_row_blocks=pat.bitmap.shape[0], n_col_blocks=pat.bitmap.shape[1],
+        scales=payload.scales, bias=bias, activation=activation, pool=pool,
+        out_dtype=out_dtype, interpret=cfg.run_interpret,
+        packed=packed_kernel, strides=cp.strides, dilation=cp.dilation)
+
+
+# --------------------------------------------------------------- decompress
+
+
+def _decompress(leaf, *, pattern, shape, dtype):
+    del shape
+    assert pattern is not None, "compiled sparse leaf without a pattern"
+    blk = np.asarray(leaf["w_blk"])
+    scales = None if "w_s" not in leaf else np.asarray(leaf["w_s"])
+    stacked = blk.ndim == 4
+    blks = blk if stacked else blk[None]
+    scs = None if scales is None else (
+        scales if scales.ndim == 2 else scales[None])
+    ws = []
+    for li in range(blks.shape[0]):
+        cl = CompressedLinear(
+            pattern=pattern, blocks=jnp.asarray(blks[li]),
+            scales=None if scs is None else jnp.asarray(scs[li]))
+        ws.append(np.asarray(decompress(cl)))
+    w = np.stack(ws) if stacked else ws[0]
+    out = {k: v for k, v in leaf.items() if k not in ("w_blk", "w_s")}
+    out["w"] = jnp.asarray(w, dtype)
+    return out
+
+
+def _decompress_packed(leaf, *, pattern, shape, dtype):
+    assert pattern is not None, "compiled sparse leaf without a pattern"
+    blk = unpack_int4(leaf["w_blkp"], pattern.block[0], axis=-2)
+    leaf = {**{k: v for k, v in leaf.items() if k != "w_blkp"},
+            "w_blk": blk}
+    return _decompress(leaf, pattern=pattern, shape=shape, dtype=dtype)
+
+
+# ----------------------------------------------------------------- autotune
+
+
+def _tune_prepare(leaves, pattern, K):
+    """Packed container -> unpacked block codes for the runner."""
+    del K
+    leaf = {**{k: v for k, v in leaves.items() if k != "w_blkp"},
+            "w_blk": unpack_int4(leaves["w_blkp"], pattern.block[0],
+                                 axis=-2)}
+    return leaf, PACKED_CONTAINER
+
+
+def _tune_runner(cand, x, leaf, pattern, interpret):
+    import jax
+
+    from ...kernels.sparse_matmul.ops import sparse_linear
+
+    cl = CompressedLinear(pattern=pattern, blocks=leaf["w_blk"],
+                         scales=leaf.get("w_s"))
+    if cand.use_pallas:
+        fn = jax.jit(lambda xx: sparse_linear(xx, cl, bm=cand.bm,
+                                              interpret=interpret,
+                                              use_kernel=True))
+    else:
+        fn = jax.jit(lambda xx: sparse_linear(xx, cl, use_kernel=False))
+    return lambda: fn(x)
+
+
+def _leaf_kn(leaves, pattern):
+    del leaves
+    return tuple(map(int, pattern.shape))
+
+
+# ------------------------------------------------------------------- policy
+
+
+def _compile_stack(stack, masks, *, pattern, bits, rules):
+    """Compress an (L, K, N) stack onto a shared schedule.
+
+    Returns (leaves, code_bytes, container_bytes, element_density)."""
+    L, K, N = stack.shape
+    block = pattern.block
+    blk_list, scale_list = [], []
+    total_bytes = 0
+    nnz = 0
+    for li in range(L):
+        wl = np.asarray(stack[li])
+        ml = np.asarray(masks[li])
+        if rules.quantize_sparse:
+            qt = quantize(wl * ml, bits, axis=1)
+            cl = compress(wl, ml, block, pattern=pattern,
+                          quant_scales=np.asarray(qt.scales).reshape(-1),
+                          quant_bits=bits)
+            scale_list.append(np.asarray(cl.scales))
+            total_bytes += cl.scales.size * cl.scales.dtype.itemsize
+        else:
+            cl = compress(wl, ml, block, pattern=pattern, dtype=rules.dtype)
+        blk_list.append(np.asarray(cl.blocks))
+        total_bytes += cl.blocks.size * cl.blocks.dtype.itemsize
+        nnz += cl.pattern.nnz
+    blk = jnp.asarray(np.stack(blk_list))
+    cont_bytes = total_bytes
+    if rules.quantize_sparse and bits <= 4:
+        # bit-pack the int4 block codes two per byte along bk
+        w_blkp = pack_int4(blk, axis=2)
+        leaves = {"w_blkp": w_blkp}
+        cont_bytes += int(w_blkp.size) - int(blk.size)
+    else:
+        leaves = {"w_blk": blk}
+    if scale_list:
+        leaves["w_s"] = jnp.asarray(np.stack(scale_list))
+    return leaves, total_bytes, cont_bytes, nnz / (L * K * N)
+
+
+def _compile_payload(w, mask, *, bits, rules, block):
+    if rules.quantize_sparse:
+        qt = quantize(w * mask, bits, axis=1)
+        cl = compress(w, mask, block,
+                      quant_scales=np.asarray(qt.scales).reshape(-1),
+                      quant_bits=bits, pack=bits <= 4)
+    else:
+        cl = compress(w, mask, block, dtype=rules.dtype)
+    cont_bytes = cl.storage_bytes - cl.pattern.meta_bytes
+    comp_bytes = cont_bytes
+    if cl.packed:
+        comp_bytes += int(np.prod(cl.blocks.shape)) - int(cl.blocks.data.size)
+    return cl, cl.pattern, comp_bytes, cont_bytes, \
+        cl.pattern.block_density, cl.pattern.element_density
+
+
+# --------------------------------------------------------------------- init
+
+
+def _init_sparse(key, K, N, *, dtype, pattern):
+    assert pattern is not None
+    P = pattern.n_blocks_present
+    bk, bn = pattern.block
+    return {"w_blk": he_init(key, (P, bk, bn), dtype,
+                             K * pattern.block_density)}
+
+
+def _init_sparse_int8(key, K, N, *, dtype, pattern):
+    import jax
+
+    del dtype
+    assert pattern is not None
+    P = pattern.n_blocks_present
+    bk, bn = pattern.block
+    return {"w_blk": jax.random.randint(key, (P, bk, bn), -127, 128,
+                                        dtype=jnp.int8),
+            "w_s": jnp.full((N,), 1.0 / (127 * np.sqrt(K)), jnp.float32)}
+
+
+def _sample_pattern(rng):
+    from ..sparsity import pattern_from_mask
+
+    mask = (rng.random(size=(16, 8)) < 0.6).astype(np.float32)
+    mask[:8, :4] = 1.0  # keep at least one block fully present
+    return pattern_from_mask(mask, (8, 4))
+
+
+def _sample(rng):
+    pattern = _sample_pattern(rng)
+    P = pattern.n_blocks_present
+    bk, bn = pattern.block
+    return {"w_blk": jnp.asarray(rng.normal(size=(P, bk, bn)),
+                                 jnp.float32)}, pattern
+
+
+def _sample_packed(rng):
+    pattern = _sample_pattern(rng)
+    P = pattern.n_blocks_present
+    bk, bn = pattern.block
+    codes = rng.integers(-8, 8, size=(P, bk, bn)).astype(np.int8)
+    N = pattern.shape[1]
+    return {"w_blkp": pack_int4(jnp.asarray(codes), axis=1),
+            "w_s": jnp.full((N,), 1.0 / (7 * np.sqrt(16)),
+                            jnp.float32)}, pattern
+
+
+PACKED_FAMILY = _reg.register(_reg.PayloadFamily(
+    name="sparse_packed",
+    key_leaf="w_blkp",
+    leaf_names=("w_blkp", "w_s"),
+    apply=_apply_sparse_packed,
+    kind="sparse",
+    container=PACKED_CONTAINER,
+    needs_pattern=True,
+    matches=_matches_packed,
+    from_payload=_from_payload_packed,
+    conv_fused=_conv_fused,
+    decompress=_decompress_packed,
+    payload_dense=_payload_dense,
+    payload_kn=_payload_kn,
+    tune_prepare=_tune_prepare,
+    leaf_ndim={"w_blkp": 3, "w_s": 1},
+    shard_tails={"w_blkp": "pattern"},
+    legacy_tp=("model", None, None),
+    container_leaves=("w_blkp",),
+    sample=_sample_packed,
+))
+
+FAMILY = _reg.register(_reg.PayloadFamily(
+    name="sparse",
+    key_leaf="w_blk",
+    leaf_names=("w_blk", "w_s"),
+    apply=_apply_sparse,
+    kind="sparse",
+    needs_pattern=True,
+    matches=_matches,
+    from_payload=_from_payload,
+    conv_fused=_conv_fused,
+    decompress=_decompress,
+    payload_dense=_payload_dense,
+    payload_kn=_payload_kn,
+    tune_runner=_tune_runner,
+    leaf_kn=_leaf_kn,
+    leaf_ndim={"w_blk": 3, "w_s": 1},
+    shard_tails={"w_blk": "pattern"},
+    legacy_tp=("model", None, None),
+    init_modes={"sparse": _init_sparse, "sparse_int8": _init_sparse_int8},
+    sample=_sample,
+))
+
+POLICY = _reg.register_policy(_reg.PolicyCompiler(
+    name="sparse",
+    eliminates_blocks=True,
+    compile_stack=_compile_stack,
+    compile_payload=_compile_payload,
+))

@@ -1,0 +1,391 @@
+"""Payload-family protocol + registry — ONE description per leaf format.
+
+Every compressed-leaf format the datapath understands (dense / int8 quant
+/ bit-packed int4 quant / block-sparse / bit-packed block-sparse /
+group-diagonal / per-channel-scale quant / ...) is a single registered
+:class:`PayloadFamily`: its leaf names, payload types, kernel entry, jnp
+twin, tune-key fields, shard behaviour, checkpoint containers and
+decompression all live in one module under ``repro.core.families``.
+
+The consumers — ``core.dispatch`` (linear/payload/conv/fc-stack
+dispatch), ``core.compile_sparse`` (leaf emission + accounting +
+decompress), ``core.autotune`` (tune keys, representative leaves, packed
+handling), ``launch.sharding`` (leaf PartitionSpec rules) and
+``train.checkpoint`` (container round-trip guard) — iterate this
+registry instead of branching on family names, so adding a format is one
+new module plus a registration line, never a fifth copy of the plumbing.
+
+Two registries live here:
+
+* **families** (:func:`register`) — the leaf-format descriptors used at
+  dispatch/serve time.  Matching order is registration order: packed
+  container variants register before their unpacked twins so
+  :func:`unwrap_payload` resolves a bit-packed ``CompressedLinear`` /
+  ``PackedTensor`` to its container family first.
+* **policy compilers** (:func:`register_policy`) — how
+  ``compile_sparse`` lowers a weight (stack) onto a family's leaves
+  under a named per-layer policy ("quant", "sparse", "perchannel", ...).
+  ``compile_model`` / ``compile_lenet`` keep only the policy *skeleton*
+  (masking, pattern union, report accounting); the leaf bytes are
+  emitted by the registered compiler.
+
+Nothing here imports jax or the families at module import time — the
+family modules themselves pull in ``core.dispatch`` (for the shared
+kernel-selection helpers), and :func:`ensure_registered` imports them
+lazily on first registry query.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+__all__ = [
+    "PayloadFamily",
+    "PolicyCompiler",
+    "register",
+    "register_policy",
+    "ensure_registered",
+    "all_families",
+    "get",
+    "family_for_leaves",
+    "family_for_leaf_name",
+    "family_of_payload",
+    "unwrap_payload",
+    "weight_leaf_names",
+    "container_leaf_names",
+    "pattern_leaf",
+    "shard_info",
+    "init_leaves",
+    "kind_family",
+    "tunable_kinds",
+    "kind_needs_pattern",
+    "representative_leaves",
+    "policy_compiler",
+    "policy_names",
+    "policy_eliminates_blocks",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadFamily:
+    """One compressed-leaf format, self-described.
+
+    Required:
+
+    * ``name`` — registry key ("quant", "sparse_packed", ...).
+    * ``key_leaf`` — the discriminating weight-leaf name; a parameter
+      dict belongs to this family iff ``key_leaf`` is present.
+    * ``leaf_names`` — every leaf the family may emit (scales included).
+    * ``apply(p, x, *, pattern, cfg, bias, activation, compute_dtype,
+      leaf, tag)`` — execute ``y = act(x @ W + b)`` for this family:
+      the whole kernel-vs-twin selection (tuned-table lookups, hardware
+      eligibility, forced-fallback reporting) lives here, built from the
+      shared helpers in :mod:`repro.core.dispatch`.
+
+    Optional hooks (None/empty = the capability does not apply):
+
+    * ``matches(payload)`` / ``from_payload(payload)`` — payload-object
+      unwrap: ``from_payload`` returns ``(leaves, pattern)`` or None.
+      This is THE one ConvPayload/payload unwrap helper — dispatch and
+      autotune both resolve containers through it.
+    * ``conv_fused(cp, x, *, cfg, bias, activation, out_dtype, leaf,
+      pool, M)`` — fused conv kernel entry (in-kernel patch gather) for
+      a pre-padded VALID input; return None to fall back to the
+      trace-time im2col lowering.
+    * ``decompress(leaf, pattern, shape, dtype)`` — rebuild a plain
+      ``{"w": dense}`` dict from this family's (possibly stacked)
+      leaves; ``payload_dense(payload)`` — densify a payload object to
+      (K, N) f32.
+    * ``tune_prepare(leaves, pattern, K)`` — (reference leaves,
+      container tag) for the autotuner: packed containers unpack into
+      the twin's reference form and tag their tuned keys.
+      ``tune_runner(cand, x, leaves, pattern, interpret)`` — build the
+      jitted thunk that executes one tuning candidate on real arrays
+      (lives on the *unpacked* reference family of each ``kind``).
+      ``leaf_kn(leaves, pattern)`` — logical (K, N) of a leaf dict;
+      ``payload_kn(payload)`` — same for a payload object.
+    * ``kind`` — tune-key family ("sparse" / "quant"); None = the
+      family is not autotuned.  ``container`` — storage container tag
+      ("int4x2") carried into tune keys; None = unpacked.
+    * ``leaf_ndim`` — unstacked ndim per leaf name (stacked leaves carry
+      one extra leading layer axis).
+    * ``shard_tails`` — leaf name -> "pattern" (pattern-aware TP over
+      the packed block axis) or "replicate"; leaves not listed follow
+      the path-based TP rules.  ``legacy_tp`` — blind TP tail applied to
+      ``key_leaf`` when no pattern side-table is available.
+    * ``container_leaves`` — leaf names whose buffers are bit-exact
+      storage containers: the checkpointer refuses to widen them.
+    * ``init_modes`` — ``models.layers.linear_init`` mode name ->
+      ``fn(key, K, N, dtype, pattern) -> leaves``.
+    * ``sample(rng)`` — ``(leaves, pattern)`` exemplar used to
+      parametrise checkpoint round-trip / sharding-spec tests over the
+      whole registry.
+    * ``needs_pattern`` — the family's leaves are meaningless without
+      the static pattern side-table.
+    * ``code_leaf`` — the leaf holding the quantised codes (bit-width
+      introspection; defaults to ``key_leaf``).
+    """
+
+    name: str
+    key_leaf: str
+    leaf_names: Tuple[str, ...]
+    apply: Optional[Callable] = None
+    kind: Optional[str] = None
+    container: Optional[str] = None
+    needs_pattern: bool = False
+    code_leaf: Optional[str] = None
+    matches: Optional[Callable] = None
+    from_payload: Optional[Callable] = None
+    conv_fused: Optional[Callable] = None
+    decompress: Optional[Callable] = None
+    payload_dense: Optional[Callable] = None
+    payload_kn: Optional[Callable] = None
+    tune_prepare: Optional[Callable] = None
+    tune_runner: Optional[Callable] = None
+    leaf_kn: Optional[Callable] = None
+    leaf_ndim: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    shard_tails: Mapping[str, str] = dataclasses.field(default_factory=dict)
+    legacy_tp: Optional[Tuple] = None
+    container_leaves: Tuple[str, ...] = ()
+    init_modes: Mapping[str, Callable] = dataclasses.field(
+        default_factory=dict)
+    sample: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.key_leaf not in self.leaf_names:
+            raise ValueError(
+                f"family {self.name!r}: key_leaf {self.key_leaf!r} must be "
+                f"one of its leaf_names {self.leaf_names}")
+        if self.code_leaf is None:
+            object.__setattr__(self, "code_leaf", self.key_leaf)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyCompiler:
+    """How ``compile_sparse`` lowers weights under one policy name.
+
+    * ``compile_stack(stack, masks, *, pattern, bits, rules)`` —
+      (L, K, N) stack -> ``(leaves, code_bytes, container_bytes, ed)``
+      where ``ed`` is the realised element density (None = keep the
+      caller's mask-derived estimate).  ``masks`` may be None.
+    * ``compile_payload(w, mask, *, bits, rules, block)`` — one (K, N)
+      weight -> ``(payload, pattern, code_bytes, container_bytes, bd,
+      ed)`` for payload-style models (compile_lenet / compile_conv);
+      ``pattern``/``bd``/``ed`` are None for non-pattern families.
+    * ``eliminates_blocks`` — the policy compacts against a shared
+      BlockSparsePattern: the compile passes run their pattern-union /
+      mask-derivation machinery for it and key the payload's pattern
+      into the side-table.
+    """
+
+    name: str
+    eliminates_blocks: bool = False
+    compile_stack: Optional[Callable] = None
+    compile_payload: Optional[Callable] = None
+
+
+_FAMILIES: Dict[str, PayloadFamily] = {}
+_ORDER: List[PayloadFamily] = []
+_POLICIES: Dict[str, PolicyCompiler] = {}
+
+
+def register(family: PayloadFamily) -> PayloadFamily:
+    """Register a family; match priority is registration order."""
+    if family.name in _FAMILIES:
+        raise ValueError(f"payload family {family.name!r} already registered")
+    for prev in _ORDER:
+        if prev.key_leaf == family.key_leaf:
+            raise ValueError(
+                f"payload family {family.name!r} reuses key leaf "
+                f"{family.key_leaf!r} already claimed by {prev.name!r}")
+    _FAMILIES[family.name] = family
+    _ORDER.append(family)
+    return family
+
+
+def register_policy(pc: PolicyCompiler) -> PolicyCompiler:
+    if pc.name in _POLICIES:
+        raise ValueError(f"policy compiler {pc.name!r} already registered")
+    _POLICIES[pc.name] = pc
+    return pc
+
+
+def ensure_registered() -> None:
+    """Import the built-in family modules (idempotent)."""
+    if not _FAMILIES:
+        from . import families  # noqa: F401  (registers on import)
+
+
+# ------------------------------------------------------------------ queries
+
+
+def all_families() -> Tuple[PayloadFamily, ...]:
+    ensure_registered()
+    return tuple(_ORDER)
+
+
+def get(name: str) -> PayloadFamily:
+    ensure_registered()
+    return _FAMILIES[name]
+
+
+def family_for_leaves(p: Mapping[str, Any]) -> Optional[PayloadFamily]:
+    """The family owning a parameter-leaf dict (None = no weight leaf)."""
+    for fam in all_families():
+        if fam.key_leaf in p:
+            return fam
+    return None
+
+
+def family_for_leaf_name(name: str) -> Optional[PayloadFamily]:
+    """The family that emits leaf ``name`` (key leaves match first, so a
+    shared scales leaf resolves to the first family declaring it)."""
+    for fam in all_families():
+        if name == fam.key_leaf:
+            return fam
+    for fam in all_families():
+        if name in fam.leaf_names:
+            return fam
+    return None
+
+
+def family_of_payload(payload: Any) -> Optional[PayloadFamily]:
+    for fam in all_families():
+        if fam.matches is not None and fam.matches(payload):
+            return fam
+    return None
+
+
+def unwrap_payload(payload: Any):
+    """THE payload-object unwrap: ``(family, leaves, pattern)`` for a
+    compile_sparse payload (CompressedLinear — bit-packed or not —
+    PackedTensor, QuantizedTensor, PerChannelQuant, plain dense array),
+    ``(None, None, None)`` when no family claims it.  Dispatch and the
+    autotuner both resolve containers through this one helper, so packed
+    handling can never drift between them again."""
+    for fam in all_families():
+        if fam.from_payload is None:
+            continue
+        out = fam.from_payload(payload)
+        if out is not None:
+            leaves, pattern = out
+            return fam, leaves, pattern
+    return None, None, None
+
+
+def weight_leaf_names() -> Tuple[str, ...]:
+    """Every registered key leaf — the 'is this dict a (compiled or raw)
+    linear leaf' membership test."""
+    return tuple(fam.key_leaf for fam in all_families())
+
+
+def container_leaf_names() -> Tuple[str, ...]:
+    """Leaf names whose buffers are bit-exact storage containers (the
+    checkpointer must never widen them)."""
+    out: List[str] = []
+    for fam in all_families():
+        out.extend(fam.container_leaves)
+    return tuple(out)
+
+
+def pattern_leaf(p: Mapping[str, Any]) -> bool:
+    """Does this leaf dict need the static pattern side-table?"""
+    fam = family_for_leaves(p)
+    return fam is not None and fam.needs_pattern
+
+
+def shard_info(leaf_name: str) -> Tuple[Optional[str], bool]:
+    """(shard mode, packed) for a leaf name: mode is "pattern" /
+    "replicate" / None (= follow the path-based TP rules); packed marks
+    a bit-packed container whose block axis halves."""
+    for fam in all_families():
+        mode = fam.shard_tails.get(leaf_name)
+        if mode is not None:
+            return mode, fam.container is not None
+    return None, False
+
+
+def init_leaves(mode: str, key, K: int, N: int, *, dtype,
+                pattern=None) -> Dict[str, Any]:
+    """Random-init leaves for ``models.layers.linear_init`` — every
+    family contributes its init modes, so a new format is initialisable
+    without touching ``layers.py``."""
+    ensure_registered()
+    modes: Dict[str, Callable] = {}
+    for fam in all_families():
+        modes.update(fam.init_modes)
+    if mode not in modes:
+        raise ValueError(
+            f"unknown linear mode {mode!r} — registered: {sorted(modes)}")
+    return modes[mode](key, K, N, dtype=dtype, pattern=pattern)
+
+
+# ----------------------------------------------------------------- autotune
+
+
+def kind_family(kind: str) -> Optional[PayloadFamily]:
+    """The *unpacked reference* family of a tune kind ("sparse" /
+    "quant"): the one whose jnp twin and kernel entry the tuner times.
+    Packed container variants share their reference family's kind but
+    carry a container tag, so they never win this lookup."""
+    for fam in all_families():
+        if fam.kind == kind and fam.container is None:
+            return fam
+    return None
+
+
+def tunable_kinds() -> Tuple[str, ...]:
+    """Every tune-kind the registry knows (policy names the autotuner
+    measures; everything else is skipped by ``autotune_model``)."""
+    out: List[str] = []
+    for fam in all_families():
+        if fam.kind is not None and fam.kind not in out:
+            out.append(fam.kind)
+    return tuple(out)
+
+
+def kind_needs_pattern(kind: str) -> bool:
+    fam = kind_family(kind)
+    return fam is not None and fam.needs_pattern
+
+
+def representative_leaves(leaf: Mapping[str, Any]) -> Dict[str, Any]:
+    """Slice layer 0 out of a stacked leaf dict — the autotuner's
+    representative view.  A leaf is stacked when its ndim is one above
+    the family-declared unstacked ndim; names no family declares are
+    dropped (they are not tuner inputs)."""
+    ndim: Dict[str, int] = {}
+    for fam in all_families():
+        for k, n in fam.leaf_ndim.items():
+            ndim.setdefault(k, n)
+    out: Dict[str, Any] = {}
+    for k, v in leaf.items():
+        if k not in ndim:
+            continue
+        out[k] = v[0] if v.ndim == ndim[k] + 1 else v
+    return out
+
+
+# ----------------------------------------------------------------- policies
+
+
+def policy_compiler(name: str,
+                    default: Any = "__raise__") -> Optional[PolicyCompiler]:
+    ensure_registered()
+    if name in _POLICIES:
+        return _POLICIES[name]
+    if default == "__raise__":
+        raise KeyError(
+            f"no registered policy compiler {name!r} — registered: "
+            f"{sorted(_POLICIES)}")
+    return default
+
+
+def policy_names() -> Tuple[str, ...]:
+    ensure_registered()
+    return tuple(sorted(_POLICIES))
+
+
+def policy_eliminates_blocks(name: str) -> bool:
+    pc = policy_compiler(name, default=None)
+    return pc is not None and pc.eliminates_blocks

@@ -17,7 +17,7 @@ and sparse paths stay numerically symmetric.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -192,7 +192,7 @@ def quant_matmul(
 
 def _conv_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, patch_ref, *,
                  n_k: int, activation: Optional[str], packed: bool,
-                 conv, pool):
+                 conv, strides, dilation, pool):
     """Fused-conv (m, n, k) step: m is the batch index; the (Ho*Wo, K)
     patch tile is built in VMEM at the image's first step and each k step
     reads its (Ho*Wo, bk) activation tile as a dynamic lane slice."""
@@ -202,7 +202,8 @@ def _conv_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, patch_ref, *,
 
     @pl.when((n == 0) & (k == 0))
     def _patches():
-        patch_ref[...] = _im2col_tile(x_ref[0], kh, kw, Ho, Wo)
+        patch_ref[...] = _im2col_tile(x_ref[0], kh, kw, Ho, Wo,
+                                      strides, dilation)
 
     @pl.when(k == 0)
     def _zero():
@@ -229,11 +230,12 @@ def _conv_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, patch_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kernel_hw", "bn", "bk", "interpret", "out_dtype",
-                     "activation", "packed", "pool"),
+    static_argnames=("kernel_hw", "bn", "bk", "strides", "dilation",
+                     "interpret", "out_dtype", "activation", "packed",
+                     "pool"),
 )
 def quant_conv(
-    x: jnp.ndarray,       # (B, H, W, cin) NHWC, stride 1 / VALID
+    x: jnp.ndarray,       # (B, H, W, cin) NHWC, pre-padded (VALID geometry)
     w_q: jnp.ndarray,     # (K, N) int8 — or (K/2, N) uint8 when packed
     scales: jnp.ndarray,  # (N,) f32
     bias: Optional[jnp.ndarray] = None,
@@ -241,6 +243,8 @@ def quant_conv(
     kernel_hw,
     bn: Optional[int] = None,
     bk: Optional[int] = None,
+    strides: Tuple[int, int] = (1, 1),
+    dilation: Tuple[int, int] = (1, 1),
     interpret: bool = False,
     out_dtype=jnp.float32,
     activation: Optional[str] = None,
@@ -251,10 +255,12 @@ def quant_conv(
 
     The dense-quantised twin of
     :func:`repro.kernels.sparse_matmul.kernel.block_sparse_conv`: same
-    in-kernel patch construction and pooled emit, over the quant kernel's
-    (m, n, k) accumulation.  ``bn``/``bk`` default to 128 when the dim
-    divides, else the whole dim (interpret-only shapes, same rule as the
-    linear dispatch path).  Output is bitwise identical to
+    in-kernel patch construction (static ``strides``/``dilation`` baked
+    into the patch gather; the input must already carry any explicit
+    zero-pad) and pooled emit, over the quant kernel's (m, n, k)
+    accumulation.  ``bn``/``bk`` default to 128 when the dim divides,
+    else the whole dim (interpret-only shapes, same rule as the linear
+    dispatch path).  Output is bitwise identical to
     im2col + :func:`quant_matmul` at the same tiles.
     """
     _check_activation(activation)
@@ -262,7 +268,12 @@ def quant_conv(
         raise ValueError(f"quant_conv expects NHWC input, got {x.shape}")
     B, H, W, cin = x.shape
     kh, kw = kernel_hw
-    Ho, Wo = H - kh + 1, W - kw + 1
+    strides = (int(strides[0]), int(strides[1]))
+    dilation = (int(dilation[0]), int(dilation[1]))
+    ekh = (kh - 1) * dilation[0] + 1
+    ekw = (kw - 1) * dilation[1] + 1
+    Ho = (H - ekh) // strides[0] + 1
+    Wo = (W - ekw) // strides[1] + 1
     if Ho < 1 or Wo < 1:
         raise ValueError(
             f"conv kernel {tuple(kernel_hw)} does not fit the {H}x{W} input")
@@ -292,7 +303,7 @@ def quant_conv(
     return pl.pallas_call(
         functools.partial(_conv_kernel, n_k=n_k, activation=activation,
                           packed=packed, conv=(kh, kw, Ho, Wo, bk),
-                          pool=pool),
+                          strides=strides, dilation=dilation, pool=pool),
         grid=(B, N // bn, n_k),
         in_specs=[
             pl.BlockSpec((1, H, W, cin), lambda m, n, k: (m, 0, 0, 0)),

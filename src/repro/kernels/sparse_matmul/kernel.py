@@ -112,17 +112,23 @@ def _check_pool(pool: Optional[Tuple[str, int]], Ho: int, Wo: int) -> None:
             f"({Ho}x{Wo}) — the emit step pools non-overlapping windows")
 
 
-def _im2col_tile(img: jnp.ndarray, kh: int, kw: int, Ho: int,
-                 Wo: int) -> jnp.ndarray:
+def _im2col_tile(img: jnp.ndarray, kh: int, kw: int, Ho: int, Wo: int,
+                 strides: Tuple[int, int] = (1, 1),
+                 dilation: Tuple[int, int] = (1, 1)) -> jnp.ndarray:
     """(H, W, cin) image -> (Ho*Wo, cin*kh*kw) patch tile, in VMEM.
 
     Static shifted slices — one per (dh, dw) tap — stacked and transposed
     into the channel-major patch feature order of
     ``lax.conv_general_dilated_patches`` (f = c*kh*kw + dh*kw + dw), so
     the result is bitwise the tile the trace-time im2col would produce.
-    Stride 1, VALID only: the fused-conv gate enforces that geometry.
+    Strides/dilation bake into the per-tap slice (start ``d*dl``, step
+    ``s``); padding is the caller's job — the image must already carry any
+    explicit zero-pad, so this always sees VALID geometry.
     """
-    taps = [img[dh:dh + Ho, dw:dw + Wo, :]
+    sh, sw = strides
+    dl_h, dl_w = dilation
+    taps = [img[dh * dl_h:dh * dl_h + sh * (Ho - 1) + 1:sh,
+                dw * dl_w:dw * dl_w + sw * (Wo - 1) + 1:sw, :]
             for dh in range(kh) for dw in range(kw)]
     t = jnp.stack(taps, axis=-2)          # (Ho, Wo, kh*kw, cin)
     t = jnp.swapaxes(t, -1, -2)           # (Ho, Wo, cin, kh*kw)
@@ -407,6 +413,7 @@ def block_sparse_matmul(
 def _conv_kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
                  acc_ref, patch_ref, *, activation: Optional[str],
                  packed: bool, conv: Tuple[int, int, int, int, int],
+                 strides: Tuple[int, int], dilation: Tuple[int, int],
                  pool: Optional[Tuple[str, int]]):
     """Fused-conv schedule step: grid (B, P), one image per m index.
 
@@ -424,7 +431,8 @@ def _conv_kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
 
     @pl.when(p == 0)
     def _patches():
-        patch_ref[...] = _im2col_tile(x_ref[0], kh, kw, Ho, Wo)
+        patch_ref[...] = _im2col_tile(x_ref[0], kh, kw, Ho, Wo,
+                                      strides, dilation)
 
     is_first = meta_ref[3, p]
     is_last = meta_ref[4, p]
@@ -459,8 +467,8 @@ def _conv_kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("block_rows", "block_cols", "block", "n_rows", "n_cols",
-                     "kernel_hw", "pool", "interpret", "out_dtype",
-                     "activation", "packed"),
+                     "kernel_hw", "strides", "dilation", "pool", "interpret",
+                     "out_dtype", "activation", "packed"),
 )
 def _conv_call(
     x: jnp.ndarray,
@@ -474,6 +482,8 @@ def _conv_call(
     n_rows: int,
     n_cols: int,
     kernel_hw: Tuple[int, int],
+    strides: Tuple[int, int],
+    dilation: Tuple[int, int],
     pool: Optional[Tuple[str, int]],
     interpret: bool,
     out_dtype,
@@ -482,7 +492,10 @@ def _conv_call(
 ):
     B, H, W, cin = x.shape
     kh, kw = kernel_hw
-    Ho, Wo = H - kh + 1, W - kw + 1
+    ekh = (kh - 1) * dilation[0] + 1
+    ekw = (kw - 1) * dilation[1] + 1
+    Ho = (H - ekh) // strides[0] + 1
+    Wo = (W - ekw) // strides[1] + 1
     bk, bn = block
     N = n_cols * bn
     rows, cols, packed_idx, first, last = _schedule(
@@ -504,6 +517,7 @@ def _conv_call(
     w_bk = bk // 2 if packed else bk
     kernel = functools.partial(_conv_kernel, activation=activation,
                                packed=packed, conv=(kh, kw, Ho, Wo, bk),
+                               strides=strides, dilation=dilation,
                                pool=pool)
     out = pl.pallas_call(
         kernel,
@@ -541,6 +555,8 @@ def block_sparse_conv(
     scales: Optional[jnp.ndarray] = None,
     bias: Optional[jnp.ndarray] = None,
     activation: Optional[str] = None,
+    strides: Tuple[int, int] = (1, 1),
+    dilation: Tuple[int, int] = (1, 1),
     pool: Optional[Tuple[str, int]] = None,
     out_dtype=jnp.float32,
     interpret: bool = False,
@@ -548,10 +564,13 @@ def block_sparse_conv(
 ) -> jnp.ndarray:
     """Fused-im2col conv entry: y = pool(act(conv(x, W) + b)) in one launch.
 
-    ``x`` is NHWC, stride 1, VALID; W is the block-compacted im2col weight
-    (same container families as :func:`block_sparse_matmul`, including the
-    bit-packed int4 one).  Patch rows are gathered from the image *inside
-    the kernel* (VMEM scratch) — no (B*Ho*Wo, K) patch matrix ever exists —
+    ``x`` is NHWC and already explicitly padded (the kernel only sees
+    VALID geometry — SAME resolves to a trace-time zero-pad upstream);
+    ``strides``/``dilation`` are static and bake into the in-kernel patch
+    gather.  W is the block-compacted im2col weight (same container
+    families as :func:`block_sparse_matmul`, including the bit-packed
+    int4 one).  Patch rows are gathered from the image *inside the
+    kernel* (VMEM scratch) — no (B*Ho*Wo, K) patch matrix ever exists —
     and the per-step activation tile dynamics match the linear kernel
     exactly, so the output is bitwise identical to im2col + matmul.
 
@@ -566,7 +585,12 @@ def block_sparse_conv(
             f"block_sparse_conv expects NHWC input, got shape {x.shape}")
     kh, kw = kernel_hw
     B, H, W, cin = x.shape
-    Ho, Wo = H - kh + 1, W - kw + 1
+    strides = (int(strides[0]), int(strides[1]))
+    dilation = (int(dilation[0]), int(dilation[1]))
+    ekh = (kh - 1) * dilation[0] + 1
+    ekw = (kw - 1) * dilation[1] + 1
+    Ho = (H - ekh) // strides[0] + 1
+    Wo = (W - ekw) // strides[1] + 1
     if Ho < 1 or Wo < 1:
         raise ValueError(
             f"conv kernel {kernel_hw} does not fit the {H}x{W} input")
@@ -603,6 +627,8 @@ def block_sparse_conv(
         n_rows=n_row_blocks,
         n_cols=n_col_blocks,
         kernel_hw=(kh, kw),
+        strides=strides,
+        dilation=dilation,
         pool=pool,
         interpret=interpret,
         out_dtype=out_dtype,

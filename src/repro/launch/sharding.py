@@ -17,6 +17,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core import payload_registry
 from ..models.config import ArchConfig
 from .mesh import data_axes, mesh_size
 
@@ -24,11 +25,11 @@ PyTree = Any
 
 # (path-substring, spec for the *trailing* dims of the unstacked param)
 # first match wins; stacked layer dims are padded with None on the left.
+# Compressed-leaf rows are NOT listed here: each payload family declares
+# its own shard behaviour (``shard_tails`` / ``legacy_tp`` on the
+# registered PayloadFamily) and :func:`_family_tp_rules` prepends those,
+# so a new leaf format shards correctly without editing this table.
 _TP_RULES = [
-    ("w_blk", P("model", None, None)),    # sparse: packed block axis over TP
-    ("w_blkp", P("model", None, None)),   # bit-packed int4 form of w_blk:
-                                          # same block axis (packing is
-                                          # within-block along bk)
     ("embed", P("model", None)),          # vocab-sharded embedding
     ("head", P(None, "model")),           # vocab-sharded unembedding
     ("frontend_proj", P(None, None)),
@@ -118,8 +119,20 @@ def _pattern_tail(leaf_shape, patterns, n_shards: int,
     return (None, None, None)
 
 
+def _family_tp_rules():
+    """Legacy blind-TP rows contributed by the payload families — the
+    pattern-free fallback.  Each family with a ``legacy_tp`` tail shards
+    its key leaf by name; these rows match before the path rules so a
+    compressed leaf never falls through to its projection's dense rule."""
+    rules = []
+    for fam in payload_registry.all_families():
+        if fam.legacy_tp is not None:
+            rules.append((fam.key_leaf, P(*fam.legacy_tp)))
+    return rules
+
+
 def _tp_spec(pstr: str, ndim: int) -> Tuple:
-    for frag, spec in _TP_RULES:
+    for frag, spec in _family_tp_rules() + _TP_RULES:
         if frag in pstr.split("/"):
             tail = tuple(spec)
             if len(tail) > ndim:
@@ -145,12 +158,17 @@ def param_specs(params: PyTree, cfg: ArchConfig, mesh, *, fsdp: bool = True,
     always FSDP-extended, mirroring ZeRO-1).
 
     ``patterns`` is the compile_sparse side-table ((K, N) ->
-    BlockSparsePattern).  When given, ``w_blk`` (and bit-packed
-    ``w_blkp``) leaves get *pattern-aware* specs: the packed block axis is sharded over 'model' only when the
-    shared schedule itself partitions into equal per-shard sub-schedules
-    (see :func:`schedule_shardable`); otherwise the leaf is replicated so
-    the side-table stays valid on every shard.  Without it the legacy
-    blind packed-axis rule applies (sanitize_specs remains the net)."""
+    BlockSparsePattern).  Compressed leaves are resolved through the
+    payload-family registry (``shard_tails``): a leaf a family marks
+    ``"pattern"`` (the sparse ``w_blk``/``w_blkp`` containers) gets a
+    *pattern-aware* spec when ``patterns`` is given — the packed block
+    axis is sharded over 'model' only when the shared schedule itself
+    partitions into equal per-shard sub-schedules (see
+    :func:`schedule_shardable`), replicated otherwise so the side-table
+    stays valid on every shard.  Leaves marked ``"replicate"`` stay
+    replicated; everything else (and the no-``patterns`` fallback)
+    follows the path rules, which include each family's ``legacy_tp``
+    row (sanitize_specs remains the net)."""
     dp = data_axes(mesh)
     dp_size = int(np.prod([mesh_size(mesh, a) for a in dp]))
     mdl_size = mesh_size(mesh, "model")
@@ -158,10 +176,15 @@ def param_specs(params: PyTree, cfg: ArchConfig, mesh, *, fsdp: bool = True,
     def one(path, leaf):
         pstr = _path_str(path)
         leaf_name = pstr.split("/")[-1]
-        if patterns is not None and leaf_name in ("w_blk", "w_blkp"):
+        mode, packed = payload_registry.shard_info(leaf_name)
+        if mode == "pattern" and patterns is not None:
             tail = _pattern_tail(leaf.shape, patterns, mdl_size,
-                                 packed=leaf_name == "w_blkp")
+                                 packed=packed)
             spec = (None,) * (leaf.ndim - len(tail)) + tail
+        elif mode == "replicate":
+            # the family declares this leaf sharding-inert (e.g. a scale
+            # vector whose axis disagrees with the codes' TP split)
+            spec = (None,) * leaf.ndim
         else:
             spec = _tp_spec(pstr, leaf.ndim)
         if (fsdp or zero) and leaf.size >= _FSDP_MIN_ELEMS and dp_size > 1:

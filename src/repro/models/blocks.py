@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import payload_registry
 from .config import ArchConfig
 from .layers import (
     Params,
@@ -78,7 +79,7 @@ def lin_apply(cfg: ArchConfig, p: Params, x, K: int, N: int, patterns=None,
     fall back to the cfg-derived shared pattern (synthetic perf models).
     ``dispatch`` selects the kernel path (see repro.core.dispatch)."""
     pat = None
-    if "w_blk" in p or "w_blkp" in p:  # incl. bit-packed int4 containers
+    if payload_registry.pattern_leaf(p):  # family declares it pattern-bound
         pat = (patterns or {}).get((K, N)) or _pattern(cfg, K, N)
     return linear_apply(p, x, pattern=pat, dispatch=dispatch)
 

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import payload_registry
 from ..core.dispatch import conv_dispatch, linear_dispatch
 from ..core.sparsity import BlockSparsePattern
 
@@ -38,57 +39,30 @@ Params = Dict[str, Any]
 # --------------------------------------------------------------------- init
 
 
-def _he(key, shape, dtype, fan_in):
-    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
-
-
 def linear_init(
     key,
     K: int,
     N: int,
     *,
     dtype=jnp.bfloat16,
-    mode: str = "dense",
     bias: bool = False,
+    mode: str = "dense",
     pattern: Optional[BlockSparsePattern] = None,
 ) -> Params:
-    """mode: dense | int8 | sparse (sparse also implies int8 if pattern set
-    with quantised storage — decided by caller)."""
-    p: Params = {}
-    if mode == "dense":
-        p["w"] = _he(key, (K, N), dtype, K)
-    elif mode == "int8":
-        # initialised near-zero-symmetric; scales learn via recalibration
-        p["w_q"] = jax.random.randint(key, (K, N), -127, 128, dtype=jnp.int8)
-        p["w_s"] = jnp.full((N,), 1.0 / (127 * np.sqrt(K)), jnp.float32)
-    elif mode in ("gsparse", "gsparse_int8"):
-        # group-diagonal engine-free form: the shared diagonal pattern
-        # (block (i,j) present iff (i+j) % s == 0) factorises into s dense
-        # (K/s, N/s) matmuls — zero gather/scatter overhead under XLA,
-        # exactly 1/s of the dense FLOPs and bytes.  `pattern` here is the
-        # group count s encoded via block_density = 1/s.
-        assert pattern is not None
-        s = pattern  # int group count
-        Kg, Ng = K // s, N // s
-        if mode == "gsparse_int8":
-            p["w_grp"] = jax.random.randint(key, (s, Kg, Ng), -127, 128,
-                                            dtype=jnp.int8)
-            p["w_s"] = jnp.full((N,), 1.0 / (127 * np.sqrt(Kg)), jnp.float32)
-        else:
-            p["w_grp"] = _he(key, (s, Kg, Ng), dtype, Kg)
-    elif mode in ("sparse", "sparse_int8"):
-        assert pattern is not None
-        P = pattern.n_blocks_present
-        bk, bn = pattern.block
-        if mode == "sparse_int8":
-            p["w_blk"] = jax.random.randint(key, (P, bk, bn), -127, 128,
-                                            dtype=jnp.int8)
-            p["w_s"] = jnp.full((N,), 1.0 / (127 * np.sqrt(K)), jnp.float32)
-        else:
-            p["w_blk"] = _he(key, (P, bk, bn), dtype,
-                             K * pattern.block_density)
-    else:
-        raise ValueError(mode)
+    """Synthesize one linear leaf in any registered payload family's form.
+
+    ``mode`` names an init mode contributed by a registered family (e.g.
+    "dense" | "int8" | "sparse" | "sparse_int8" | "gsparse" |
+    "gsparse_int8" | "perchannel_int8") — the leaf layout, fan-in scaling
+    and scale conventions live on the family, so a new format is
+    initialisable here without this module learning its leaves.
+    ``pattern`` is the family's static side-information (a
+    BlockSparsePattern for the block-sparse modes, the group count for the
+    group-diagonal modes).  ``bias`` adds a ``b`` leaf — bias is a
+    dispatch-level epilogue, not a family concern.
+    """
+    p = dict(payload_registry.init_leaves(mode, key, K, N, dtype=dtype,
+                                          pattern=pattern))
     if bias:
         p["b"] = jnp.zeros((N,), dtype)
     return p

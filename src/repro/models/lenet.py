@@ -84,10 +84,12 @@ def lenet_fusion_plan(compressed) -> Dict[str, object]:
     which tests and the autotuner observe layer by layer — stay the
     default.  The plan says:
 
-    - ``{name: {"pool": ("avg", 2)}}`` for each compressed conv whose
-      geometry the fused conv entry supports (stride 1, VALID): the 2×2
+    - ``{name: {"pool": ("avg", 2)}}`` for each compressed conv: the 2×2
       average pool runs inside the conv kernel's emit step instead of as
-      a separate HBM round-trip.
+      a separate HBM round-trip.  Any static geometry qualifies — the
+      fused conv entries carry strides/dilation and SAME padding resolves
+      to a trace-time pre-pad, so the old stride-1 VALID restriction is
+      gone.
     - ``"fc_stack": ("fc1", "fc2", "fc3")`` when all three FC layers are
       compressed: they chain through one fused kernel launch
       (:func:`repro.core.dispatch.fc_stack_dispatch`) with no
@@ -98,9 +100,7 @@ def lenet_fusion_plan(compressed) -> Dict[str, object]:
         return plan
     for name in ("conv1", "conv2"):
         cp = compressed.get(name)
-        if (isinstance(cp, ConvPayload)
-                and tuple(cp.strides) == (1, 1)
-                and cp.padding == "VALID"):
+        if isinstance(cp, ConvPayload):
             plan[name] = {"pool": ("avg", 2)}
     if all(n in compressed for n in ("fc1", "fc2", "fc3")):
         plan["fc_stack"] = ("fc1", "fc2", "fc3")

@@ -41,6 +41,8 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from ..core import payload_registry
+
 PyTree = Any
 
 _SEP = "::"
@@ -48,6 +50,7 @@ _SEP = "::"
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     flat = {}
+    containers = payload_registry.container_leaf_names()
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
                         for k in path)
@@ -57,7 +60,16 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
             # restore casts back to the template leaf dtype.  Integer
             # containers (int8 codes, uint8 int4x2 packed buffers) are
             # npz-native and MUST stay verbatim: widening them would break
-            # the bit-exact packed-leaf round trip.
+            # the bit-exact packed-leaf round trip, so a container leaf
+            # reaching this branch is a hard error, not a silent cast.
+            # The registry (each family's ``container_leaves``) names
+            # them, so a new packed family is guarded without edits here.
+            if key.split(_SEP)[-1] in containers:
+                raise TypeError(
+                    f"{key}: bit-exact container leaf has non-npz-native "
+                    f"dtype {arr.dtype} — widening would corrupt the "
+                    "packed round trip; store containers in an npz-native "
+                    "integer dtype")
             arr = arr.astype(np.float32)
         flat[key] = arr
     return flat

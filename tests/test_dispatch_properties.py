@@ -427,10 +427,11 @@ def test_tuned_cache_round_trips_deterministically(tmp_path):
 # ------------------------------------------ fused conv vs im2col lowering
 
 
-def _fused_conv_payload(density, storage, seed):
+def _fused_conv_payload(density, storage, seed, strides=(1, 1),
+                        padding="VALID", dilation=(1, 1)):
     """ConvPayload over a two-level pattern in the requested storage
-    container: 'float' | 'int8' | 'int4x2' (bit-packed, even-bk kernel
-    decode path)."""
+    container ('float' | 'int8' | 'int4x2' — bit-packed, even-bk kernel
+    decode path) with arbitrary static conv geometry."""
     rng = np.random.default_rng(seed)
     kh, kw, cin, cout = 3, 3, 4, 8
     K, N = cin * kh * kw, cout
@@ -449,7 +450,8 @@ def _fused_conv_payload(density, storage, seed):
                       quant_bits=bits, pack=(storage == "int4x2"))
         if storage == "int4x2":
             assert cl.packed
-    cp = ConvPayload(payload=cl, kernel=(kh, kw, cin, cout))
+    cp = ConvPayload(payload=cl, kernel=(kh, kw, cin, cout),
+                     strides=strides, padding=padding, dilation=dilation)
     x = jnp.asarray(rng.normal(size=(2, 7, 7, cin)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(cout,)), jnp.float32)
     return cp, x, b
@@ -473,6 +475,77 @@ def test_fused_conv_bitwise_matches_im2col_lowering(density, storage):
                                 bias=b, activation="relu", op="conv")
     assert y_fused.shape == y_im2col.shape == (2, 5, 5, 8)
     np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_im2col))
+
+
+_CONV_GEOMS = [
+    ((2, 2), "SAME", (1, 1)),    # resnet stem: stride 2, SAME
+    ((2, 1), "VALID", (1, 1)),   # anisotropic stride
+    ((1, 1), "VALID", (2, 2)),   # dilated (atrous) taps
+    ((2, 2), "SAME", (2, 2)),    # strided AND dilated, padded
+]
+
+
+def _conv_oracle(cp, x, b):
+    """lax.conv_general_dilated on the DECOMPRESSED weights (quantisation
+    lives in the weights, so the oracle shares it; only accumulation
+    order differs) + relu/bias epilogue."""
+    w2 = decompress(cp.payload).astype(jnp.float32)
+    w4 = conv_weight_unmatrix(w2, cp.kernel)
+    y = jax.lax.conv_general_dilated(
+        x, w4, cp.strides, cp.padding, rhs_dilation=cp.dilation,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+@pytest.mark.parametrize("storage", ["float", "int8", "int4x2"])
+@pytest.mark.parametrize(
+    "geom", _CONV_GEOMS,
+    ids=[f"s{s[0]}{s[1]}-{p}-d{d[0]}{d[1]}" for s, p, d in _CONV_GEOMS])
+def test_fused_conv_geometry_bitwise_and_oracle(geom, storage):
+    """Strided/SAME/dilated geometry: the fused conv entry stays BITWISE
+    identical to the trace-time im2col lowering on the same Pallas leg
+    (identical patches, identical accumulation), and both match the
+    ``lax.conv_general_dilated`` oracle on the decompressed weights —
+    for every storage container."""
+    from repro.core.dispatch import conv_im2col, payload_dispatch
+
+    strides, padding, dilation = geom
+    cp, x, b = _fused_conv_payload(0.5, storage, seed=29, strides=strides,
+                                   padding=padding, dilation=dilation)
+    y_fused = conv_dispatch(cp, x, dispatch="pallas", bias=b,
+                            activation="relu")
+    patches = conv_im2col(x, (3, 3), strides=strides, padding=padding,
+                          dilation=dilation)
+    y_im2col = payload_dispatch(cp.payload, patches, dispatch="pallas",
+                                bias=b, activation="relu", op="conv")
+    np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_im2col))
+    ref = _conv_oracle(cp, x, b)
+    assert y_fused.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("storage", ["float", "int8", "int4x2"])
+@pytest.mark.parametrize("density", [1.0, 0.5, 0.1])
+def test_fused_conv_strided_density_container_matrix(density, storage):
+    """The density x container matrix holds off the stride-1 VALID fast
+    path too: stride-2 SAME, every storage container, every density
+    regime — fused vs im2col bitwise, both vs the lax.conv oracle."""
+    from repro.core.dispatch import conv_im2col, payload_dispatch
+
+    cp, x, b = _fused_conv_payload(density, storage,
+                                   seed=31 + int(density * 10),
+                                   strides=(2, 2), padding="SAME")
+    y_fused = conv_dispatch(cp, x, dispatch="pallas", bias=b,
+                            activation="relu")
+    patches = conv_im2col(x, (3, 3), strides=(2, 2), padding="SAME")
+    y_im2col = payload_dispatch(cp.payload, patches, dispatch="pallas",
+                                bias=b, activation="relu", op="conv")
+    assert y_fused.shape == y_im2col.shape == (2, 4, 4, 8)
+    np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_im2col))
+    np.testing.assert_allclose(np.asarray(y_fused),
+                               np.asarray(_conv_oracle(cp, x, b)),
+                               atol=2e-5, rtol=2e-5)
 
 
 def test_fused_conv_entry_actually_engaged(monkeypatch):

@@ -128,7 +128,7 @@ def main() -> None:
         import json as _json
 
         from . import serve_traffic
-        result = serve_traffic.run()
+        result = serve_traffic.run(check_reference=True)
         for r in result["variants"]:
             us = 1e6 / max(r["tokens_per_sec_saturated"], 1e-9)
             print(f"serve/{r['variant']},{us:.1f},"

@@ -78,6 +78,7 @@ __all__ = [
     "tune_key",
     "sparse_candidates",
     "quant_candidates",
+    "autotune_attn",
     "autotune_leaf",
     "autotune_model",
     "autotune_lenet",
@@ -509,6 +510,127 @@ def autotune_leaf(
     if table is not None:
         table.put(key, winner)
         table.log.append({"key": key, "cached": False, "n_timed": n_timed})
+    return winner
+
+
+# ------------------------------------------------- packed-attention tuning
+
+# kv-tile candidates for the fused packed-attention read: power-of-two row
+# counts the kernel's uint8 VMEM tiles can take (128 = one MXU pass; the
+# hardware floor is 32 — smaller tiles are twin-only shapes)
+_ATTN_BT_CANDIDATES = (8, 16, 32, 64, 128)
+
+
+def autotune_attn(
+    *,
+    B: int,
+    T: int,
+    H: int,
+    Hkv: int,
+    Dh: int,
+    x_dtype=jnp.float32,
+    options: TuneOptions = TuneOptions(),
+    table: Optional[TunedTable] = None,
+    key: Optional[str] = None,
+    save: bool = True,
+    seed: int = 0,
+) -> TunedConfig:
+    """Tune the fused packed-KV attention read (kind ``attn_packed``).
+
+    The search space is one axis — the kv tile rows ``bt`` (carried in the
+    entry's ``bm`` slot) — crossed with kernel-vs-twin.  Candidates run on
+    synthetic packed codes + scales at the serving shape (B slots, T cache
+    positions, full-length reads: the steady-state worst case).  Off-TPU
+    the kernel runs in interpret mode and is never timed (unless
+    ``options.measure_interpret``), so the winner is the honestly-measured
+    jnp twin at its best tile — still a real signal, since the twin IS the
+    CPU serving path.  A pre-existing ``table`` entry for ``key``
+    short-circuits with zero timings, sharing the on-disk cache contract
+    of :func:`autotune_leaf`.
+
+    The attention read has no payload family (KV caches are activations,
+    not compiled weight leaves), so this tunes against the kernel/twin
+    entries directly instead of going through ``autotune_leaf``'s
+    registry runners.
+    """
+    from ..kernels.flash_attention.decode_packed import (
+        packed_decode_attention,
+        tiled_packed_attention,
+    )
+    from .quant import pack_int4
+
+    if key is None:
+        key = tune_key(kind="attn_packed", M=B, K=T, N=H * Dh, dtype=x_dtype)
+    if table is not None:
+        hit = table.get(key)
+        if hit is not None:
+            table.log.append({"key": key, "cached": True, "n_timed": 0})
+            return hit
+
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = not on_tpu
+    measurable_pallas = on_tpu or options.measure_interpret
+
+    rng = np.random.default_rng(seed)
+    codes_k = rng.integers(-7, 8, size=(B, T, Hkv, Dh)).astype(np.int8)
+    codes_v = rng.integers(-7, 8, size=(B, T, Hkv, Dh)).astype(np.int8)
+    k_p = pack_int4(jnp.asarray(codes_k), axis=-1)
+    v_p = pack_int4(jnp.asarray(codes_v), axis=-1)
+    k_s = jnp.asarray(rng.uniform(0.01, 0.2, (B, T, Hkv)), jnp.float32)
+    v_s = jnp.asarray(rng.uniform(0.01, 0.2, (B, T, Hkv)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, Dh)), x_dtype)
+    lengths = jnp.full((B, 1), T, jnp.int32)
+
+    # the engine pins ONE bt for its lifetime but reads the cache at
+    # bucketed power-of-two extents (32, 64, ... T) as slots fill, so a
+    # candidate's cost is the SUM over those extents — timing only the
+    # full-length read crowns the tile that amortises best at T (one big
+    # tile) and ignores that it pads every short extent back up to T,
+    # which is where a serving engine spends most of its steps
+    extents = []
+    e = 32
+    while e < T:
+        extents.append(e)
+        e *= 2
+    extents.append(T)
+
+    measured: List[Tuple[TunedConfig, float]] = []
+    n_timed = 0
+    for bt in _ATTN_BT_CANDIDATES:
+        if bt > T and bt != _ATTN_BT_CANDIDATES[0]:
+            continue  # one tile already covers the whole cache
+
+        def twin(bt=bt):
+            return [tiled_packed_attention(
+                q, k_p[:, :e], v_p[:, :e], k_s[:, :e], v_s[:, :e],
+                jnp.minimum(lengths, e), bt=bt, packed=True)
+                for e in extents]
+
+        us = _time_fn(twin, options.iters, options.warmup)
+        measured.append((TunedConfig(use_pallas=False, bm=bt), us))
+        n_timed += 1
+        from .dispatch import attn_packed_eligible
+        if measurable_pallas and attn_packed_eligible(Dh, bt):
+
+            def kern(bt=bt):
+                return [packed_decode_attention(
+                    q, k_p[:, :e], v_p[:, :e], k_s[:, :e], v_s[:, :e],
+                    jnp.minimum(lengths[:, 0], e), bt=bt,
+                    interpret=interpret)
+                    for e in extents]
+
+            us = _time_fn(kern, options.iters, options.warmup)
+            measured.append((TunedConfig(use_pallas=True, bm=bt), us))
+            n_timed += 1
+
+    valid = [t for t in measured if on_tpu or not t[0].use_pallas]
+    cand, us = min(valid or measured, key=lambda t: t[1])
+    winner = dataclasses.replace(cand, measured_us=float(us))
+    if table is not None:
+        table.put(key, winner)
+        table.log.append({"key": key, "cached": False, "n_timed": n_timed})
+        if save and table.path:
+            table.save()
     return winner
 
 

@@ -123,6 +123,9 @@ __all__ = [
     "resolve",
     "sparse_kernel_eligible",
     "quant_kernel_eligible",
+    "ATTN_BT_DEFAULT",
+    "attn_packed_eligible",
+    "attn_packed_dispatch",
     "linear_dispatch",
     "payload_dispatch",
     "conv_dispatch",
@@ -239,6 +242,26 @@ def sparse_kernel_eligible(pattern: BlockSparsePattern, blocks_dtype) -> bool:
 def quant_kernel_eligible(K: int, N: int) -> bool:
     """quant_matmul tiles (128, 128, 128) on real hardware."""
     return K % 128 == 0 and N % 128 == 0
+
+
+# Default kv-tile rows for the fused packed-attention decode read.  The
+# serving engine resolves the tile size ONCE at startup (tuned entry or
+# this default) and passes it to every prefill/decode step: the online
+# softmax is only extent-invariant at a *fixed* tile size, so letting the
+# tile drift with the cache-length bucket would break cross-step bitwise
+# consistency between the kernel and its twin.
+ATTN_BT_DEFAULT = 64
+
+
+def attn_packed_eligible(Dh: int, bt: int) -> bool:
+    """Can the packed-decode attention kernel tile on real hardware?
+
+    The packed uint8 tiles land in VMEM as (bt, ceil(Dh/2)) blocks: bt is
+    the sublane dim and must be a multiple of the uint8 sublane minimum
+    (32); an even head dim keeps the nibble pairs within one row so the
+    in-register decode never crosses a byte boundary.
+    """
+    return Dh % 2 == 0 and bt % 32 == 0
 
 
 class DispatchFallbackWarning(UserWarning):
@@ -558,6 +581,64 @@ def payload_dispatch(
     return linear_dispatch(p, x, pattern=pattern, dispatch=cfg,
                            compute_dtype=compute_dtype,
                            activation=activation, leaf=leaf, op=op)
+
+
+# ------------------------------------------------- packed-KV attention read
+
+
+def attn_packed_dispatch(
+    q: jnp.ndarray,        # (B, C, H, Dh) — decode C=1, prefill chunk C>1
+    k_c: jnp.ndarray,      # packed uint8 / int8 codes, (B, T, Hkv, ·)
+    v_c: jnp.ndarray,
+    k_s: jnp.ndarray,      # (B, T, Hkv) f32 per-row scales
+    v_s: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B, C) live length per query row
+    *,
+    packed: bool,
+    dispatch: Union[None, str, DispatchConfig] = None,
+    bt: Optional[int] = None,
+    leaf: Optional[str] = None,
+) -> jnp.ndarray:
+    """The quantised-KV-cache attention read: codes → attention output,
+    without ever materialising the dequantised cache.
+
+    The Pallas leg (:func:`repro.kernels.flash_attention.decode_packed.
+    packed_decode_attention`) streams the packed uint8 tiles HBM→VMEM
+    double-buffered and nibble-decodes in-register; it applies only to
+    the packed container on single-query-row (decode) calls.  Everything
+    else — prefill chunks (C>1), the unpacked ``int4`` cache mode, the
+    jnp twin — runs :func:`tiled_packed_attention`, bitwise identical by
+    construction (same tile walk, same masking, shared ``unpack_int4``).
+
+    The kv tile size comes from the caller (``bt``), else the tuned entry
+    for kind ``attn_packed`` (the entry's ``bm`` slot carries it), else
+    :data:`ATTN_BT_DEFAULT`.  The serving engine resolves the tile once
+    and pins it for the cache's whole lifetime — see the note on
+    :data:`ATTN_BT_DEFAULT`.
+    """
+    from ..kernels.flash_attention.decode_packed import (
+        packed_decode_attention,
+        tiled_packed_attention,
+    )
+    cfg = resolve(dispatch)
+    B, C, H, Dh = q.shape
+    T = k_s.shape[1]
+    entry = _tuned_entry(cfg, "attn_packed", M=B, K=T, N=H * Dh,
+                         x_dtype=q.dtype, leaf=leaf)
+    if bt is None:
+        bt = (entry.bm if entry is not None and entry.bm else None) \
+            or ATTN_BT_DEFAULT
+    # kernel applies only to packed decode reads — short-circuit before
+    # the backend pick so forced-pallas never warns about chunk (C>1) or
+    # unpacked-container calls the kernel was never meant to take
+    if packed and C == 1 and _pick_backend(
+            cfg, entry, attn_packed_eligible(Dh, bt),
+            leaf=leaf or "attn.kv", predicate="attn_packed_eligible"):
+        return packed_decode_attention(q, k_c, v_c, k_s, v_s,
+                                       lengths[:, 0], bt=bt,
+                                       interpret=cfg.run_interpret)
+    return tiled_packed_attention(q, k_c, v_c, k_s, v_s, lengths,
+                                  bt=bt, packed=packed)
 
 
 # ------------------------------------------------------------ convolutions

@@ -1,0 +1,258 @@
+"""Fused packed-KV decode/prefill attention — Pallas kernel + jnp twin.
+
+The serving cache stores K/V as bit-packed int4 codes (two per uint8
+byte, ``int4x2``) with per-(slot, position, kv-head) f32 scales.  Before
+this kernel, every decode step unpacked the *entire* ``max_len`` history
+to f32 and ran plain softmax attention over it — an O(L·Dh) per-step
+materialisation tax.  Here the packed uint8 tiles are streamed
+HBM→VMEM with the double-buffered DMA prologue from the quant-matmul
+kernel, nibble-decoded and dequantised in-register per tile, and
+attended with an online softmax that only touches tiles below the
+slot's live length.  The unpacked f32 cache copy never exists.
+
+Two entry points:
+
+* :func:`packed_decode_attention` — the Pallas kernel, single query row
+  per slot (decode).  Grid ``(B·Hkv, n_t)`` with the kv-tile index
+  innermost; online-softmax state (m, l, acc) lives in VMEM scratch and
+  the output is emitted at the last tile.  Dead tiles (``it·bt >= L``)
+  are skipped entirely — no DMA is issued and the softmax state is
+  untouched, so results are invariant to the cache extent at fixed
+  ``bt``.
+* :func:`tiled_packed_attention` — the jnp twin, additionally batched
+  over a chunk axis C with per-row lengths (the prefill read).  It
+  replays the *same* op order tile by tile (shared ``unpack_int4``,
+  same ``NEG_INF`` masking, same explicit dead-tile skip, one final
+  ``acc / max(l, 1e-30)`` division), so kernel and twin are bitwise
+  identical — asserted by tests on every dispatch leg.  With
+  ``packed=False`` the twin reads int8 codes directly (the unpacked
+  ``int4`` cache mode), which keeps int4 and int4x2 serving
+  bitwise-equal.
+
+Both paths compute f32 straight from codes × scales; the old read's
+intermediate cast of the dequantised cache to the model compute dtype
+is gone (documented in docs/architecture.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.quant import unpack_int4
+
+__all__ = ["packed_decode_attention", "tiled_packed_attention"]
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, ks_ref, vs_ref, kp_hbm, vp_hbm, o_ref,
+                   kbuf, vbuf, ksem, vsem, m_ref, l_ref, acc_ref, *,
+                   bt: int, n_t: int, Dh: int, Hkv: int):
+    bh = pl.program_id(0)
+    it = pl.program_id(1)
+    b = bh // Hkv
+    h = bh % Hkv
+    length = len_ref[b]
+
+    def _stream(j, slot):
+        pltpu.make_async_copy(kp_hbm.at[b, pl.ds(j * bt, bt), h],
+                              kbuf.at[slot], ksem.at[slot]).start()
+        pltpu.make_async_copy(vp_hbm.at[b, pl.ds(j * bt, bt), h],
+                              vbuf.at[slot], vsem.at[slot]).start()
+
+    @pl.when(it == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _stream(0, 0)
+
+    slot = jax.lax.rem(it, 2)
+    live = (it * bt) < length
+
+    # prefetch the next live tile into the other buffer while this one
+    # computes — the PR 6 double-buffered prologue pattern
+    @pl.when(((it + 1) < n_t) & (((it + 1) * bt) < length))
+    def _prefetch():
+        _stream(it + 1, 1 - slot)
+
+    # tile 0's copy is always started (grid warm-up), so always wait on
+    # it; later tiles only started a copy when live
+    @pl.when((it == 0) | live)
+    def _wait():
+        pltpu.make_async_copy(kp_hbm.at[b, pl.ds(it * bt, bt), h],
+                              kbuf.at[slot], ksem.at[slot]).wait()
+        pltpu.make_async_copy(vp_hbm.at[b, pl.ds(it * bt, bt), h],
+                              vbuf.at[slot], vsem.at[slot]).wait()
+
+    @pl.when(live)
+    def _block():
+        qf = q_ref[0, 0]                                   # (G, Dh) f32
+        codes_k = unpack_int4(kbuf[slot], Dh, axis=-1)     # (bt, Dh) int8
+        codes_v = unpack_int4(vbuf[slot], Dh, axis=-1)
+        ks = ks_ref[0, :, 0]                               # (bt,) f32
+        vs = vs_ref[0, :, 0]
+        kf = codes_k.astype(jnp.float32) * ks[:, None]
+        vf = codes_v.astype(jnp.float32) * vs[:, None]
+        s = jnp.dot(qf, kf.T, preferred_element_type=jnp.float32)  # (G, bt)
+        kpos = it * bt + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+        m_prev = m_ref[...]                                # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, vf, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(it == n_t - 1)
+    def _emit():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _pad_t(arr, t_pad):
+    if arr.shape[1] == t_pad:
+        return arr
+    pad = [(0, 0)] * arr.ndim
+    pad[1] = (0, t_pad - arr.shape[1])
+    return jnp.pad(arr, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def packed_decode_attention(
+    q: jnp.ndarray,     # (B, 1, H, Dh)
+    k_p: jnp.ndarray,   # (B, T, Hkv, ceil(Dh/2)) uint8 packed codes
+    v_p: jnp.ndarray,   # (B, T, Hkv, ceil(Dh/2)) uint8
+    k_s: jnp.ndarray,   # (B, T, Hkv) f32 per-row scales
+    v_s: jnp.ndarray,   # (B, T, Hkv) f32
+    length: jnp.ndarray,  # (B,) live cache length per slot
+    *,
+    bt: int = 64,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, C, H, Dh = q.shape
+    assert C == 1, "kernel path is decode-only (one query row per slot)"
+    T, Hkv, Dhp = k_p.shape[1], k_p.shape[2], k_p.shape[3]
+    assert H % Hkv == 0
+    G = H // Hkv
+    n_t = max(1, -(-T // bt))
+    t_pad = n_t * bt
+
+    k_p = _pad_t(k_p, t_pad)
+    v_p = _pad_t(v_p, t_pad)
+    k_s = _pad_t(k_s, t_pad)
+    v_s = _pad_t(v_s, t_pad)
+
+    scale = 1.0 / np.sqrt(Dh)
+    qf = (q.astype(jnp.float32) * scale)[:, 0].reshape(B, Hkv, G, Dh)
+
+    def q_idx(bh, it):
+        return (bh // Hkv, bh % Hkv, 0, 0)
+
+    def s_idx(bh, it):
+        return (bh // Hkv, it, bh % Hkv)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, bt=bt, n_t=n_t, Dh=Dh, Hkv=Hkv),
+        grid=(B * Hkv, n_t),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # lengths (B,)
+            pl.BlockSpec((1, 1, G, Dh), q_idx),              # q (f32, scaled)
+            pl.BlockSpec((1, bt, 1), s_idx),                 # k scales
+            pl.BlockSpec((1, bt, 1), s_idx),                 # v scales
+            pl.BlockSpec(memory_space=pltpu.ANY),            # k packed (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),            # v packed (HBM)
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), q_idx),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2, bt, Dhp), jnp.uint8),   # k tile double buffer
+            pltpu.VMEM((2, bt, Dhp), jnp.uint8),   # v tile double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((G, 1), jnp.float32),       # m
+            pltpu.VMEM((G, 1), jnp.float32),       # l
+            pltpu.VMEM((G, Dh), jnp.float32),      # acc
+        ],
+        interpret=interpret,
+        name="logicsparse_packed_decode_attention",
+    )(length.astype(jnp.int32), qf, k_s, v_s, k_p, v_p)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "packed"))
+def tiled_packed_attention(
+    q: jnp.ndarray,        # (B, C, H, Dh) query rows (decode C=1, prefill C>1)
+    k_c: jnp.ndarray,      # packed uint8 (B, T, Hkv, ceil(Dh/2)) or int8 codes
+    v_c: jnp.ndarray,      #   (B, T, Hkv, Dh) when packed=False
+    k_s: jnp.ndarray,      # (B, T, Hkv) f32
+    v_s: jnp.ndarray,      # (B, T, Hkv) f32
+    lengths: jnp.ndarray,  # (B, C) live length per query row
+    *,
+    bt: int = 64,
+    packed: bool = True,
+) -> jnp.ndarray:
+    """jnp twin of the kernel, batched over the chunk axis C.
+
+    Tile-by-tile online softmax with the exact op order of
+    :func:`packed_decode_attention`; a tile that is dead for a given
+    (b, c) row leaves that row's (m, l, acc) state untouched via a
+    ``where`` select, mirroring the kernel's ``pl.when`` skip.
+    """
+    B, C, H, Dh = q.shape
+    T, Hkv = k_c.shape[1], k_c.shape[2]
+    G = H // Hkv
+    n_t = max(1, -(-T // bt))
+    t_pad = n_t * bt
+
+    k_c = _pad_t(k_c, t_pad)
+    v_c = _pad_t(v_c, t_pad)
+    k_s = _pad_t(k_s, t_pad)
+    v_s = _pad_t(v_s, t_pad)
+
+    scale = 1.0 / np.sqrt(Dh)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, C, Hkv, G, Dh)
+
+    m = jnp.full((B, C, Hkv, G), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, C, Hkv, G), jnp.float32)
+    acc = jnp.zeros((B, C, Hkv, G, Dh), jnp.float32)
+
+    for it in range(n_t):
+        tile_k = jax.lax.slice_in_dim(k_c, it * bt, (it + 1) * bt, axis=1)
+        tile_v = jax.lax.slice_in_dim(v_c, it * bt, (it + 1) * bt, axis=1)
+        if packed:
+            codes_k = unpack_int4(tile_k, Dh, axis=-1)
+            codes_v = unpack_int4(tile_v, Dh, axis=-1)
+        else:
+            codes_k, codes_v = tile_k, tile_v
+        ks = jax.lax.slice_in_dim(k_s, it * bt, (it + 1) * bt, axis=1)
+        vs = jax.lax.slice_in_dim(v_s, it * bt, (it + 1) * bt, axis=1)
+        kf = codes_k.astype(jnp.float32) * ks[..., None]   # (B, bt, Hkv, Dh)
+        vf = codes_v.astype(jnp.float32) * vs[..., None]
+        s = jnp.einsum("bcHgd,btHd->bcHgt", qf, kf,
+                       preferred_element_type=jnp.float32)
+        kpos = it * bt + jnp.arange(bt, dtype=jnp.int32)
+        valid = kpos[None, None, :] < lengths[:, :, None]  # (B, C, bt)
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bcHgt,btHd->bcHgd", p, vf,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        live = (it * bt) < lengths                         # (B, C)
+        m = jnp.where(live[:, :, None, None], m_new, m)
+        l = jnp.where(live[:, :, None, None], l_new, l)
+        acc = jnp.where(live[:, :, None, None, None], acc_new, acc)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # head order h = kv_head * G + g matches q's reshape above, so a
+    # plain reshape restores (B, C, H, Dh)
+    return out.reshape(B, C, H, Dh).astype(q.dtype)

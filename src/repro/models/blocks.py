@@ -19,6 +19,7 @@ from .layers import (
     layernorm_init,
     linear_apply,
     linear_init,
+    prefill_attention,
     rmsnorm,
     rmsnorm_init,
 )
@@ -147,15 +148,32 @@ def _kv_quant(u: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def _kv_insert(cache_kv, upd, idx):
-    """Insert one decode row at per-sequence position ``idx`` (vmap over B).
+    """Insert rows at per-sequence position ``idx`` (vmap over B).
 
-    Works for any trailing layout — codes (T, Hkv, Dh), packed bytes
-    (T, Hkv, ceil(Dh/2)) and scales (T, Hkv) all update at (i, 0[, 0]).
+    ``upd``'s second axis may hold one decode row or a whole prefill
+    chunk — ``dynamic_update_slice`` writes the T rows contiguously from
+    ``idx``, exactly the cells T sequential single-row inserts would
+    write.  Works for any trailing layout: codes (T, Hkv, Dh), packed
+    bytes (T, Hkv, ceil(Dh/2)) and scales (T, Hkv) all update at
+    (i, 0[, 0]).
     """
     def one(c, u, i):
         start = (i,) + (0,) * (c.ndim - 1)
         return jax.lax.dynamic_update_slice(c, u, start)
     return jax.vmap(one)(cache_kv, upd, idx)
+
+
+def _extent(arr, t_bound: Optional[int]):
+    """Slice a cache leaf to a static position bound (axis 1).
+
+    The quantised read's online softmax skips dead tiles, so at a fixed
+    kv tile size the result is invariant to the extent — the engine uses
+    this to run bucketed (shorter) reads early in a sequence without
+    changing a single bit of the output.
+    """
+    if t_bound is not None and t_bound < arr.shape[1]:
+        return jax.lax.slice_in_dim(arr, 0, t_bound, axis=1)
+    return arr
 
 
 def attn_init(key, cfg: ArchConfig) -> Params:
@@ -177,6 +195,11 @@ def attn_apply(
     cache: Optional[Dict] = None,      # decode: {"k","v","length"}
     patterns=None,
     dispatch=None,
+    *,
+    n_valid: Optional[jnp.ndarray] = None,  # (B,) valid rows of the T axis
+    t_bound: Optional[int] = None,     # static cache-read extent (axis 1)
+    bt: Optional[int] = None,          # fused-read kv tile rows (None=tuned)
+    packed_read: str = "fused",        # quantised read: "fused" | "unpack"
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     B, T, D = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -203,18 +226,43 @@ def attn_apply(
         o = chunked_attention(q, k, v, causal=cfg.causal)
         new_cache = None
     else:
-        # decode: T == 1; insert at position `length`.  Which container the
-        # cache uses is a trace-time fact read off its keys — the float
-        # form stores activations, the int4/int4x2 forms quantise-(pack-)on
-        # -append and decode nibbles at the attention read (bitwise
-        # identical to each other; see attn_cache_init).
+        # cached step: T == 1 is a decode row, T > 1 a prefill chunk; both
+        # insert at position `length` and attend with a per-row causal
+        # extent.  Which container the cache uses is a trace-time fact read
+        # off its keys — the float form stores activations, the int4/int4x2
+        # forms quantise-(pack-)on-append *vectorised over the whole chunk*
+        # (one amax/scale pass, one pack_int4) and decode nibbles at the
+        # attention read (bitwise identical to each other; see
+        # attn_cache_init).  ``n_valid`` marks how many of the T rows are
+        # real (chunk tails / inactive decode slots write garbage rows at
+        # positions >= the new length — masked on every later read, or
+        # overwritten by the next real write at the same position).
+        if packed_read not in ("fused", "unpack"):
+            raise ValueError(
+                f"unknown packed_read {packed_read!r} — 'fused' (tiled "
+                "nibble-decode read) or 'unpack' (full-container decode "
+                "baseline)")
         idx = cache["length"]  # (B,)
+        nv = jnp.full((B,), T, jnp.int32) if n_valid is None \
+            else n_valid.astype(jnp.int32)
+        row = jnp.arange(T, dtype=jnp.int32)
+        # row c of the chunk attends to idx + c + 1 positions; garbage rows
+        # (c >= n_valid) are clamped to the last valid extent (>= 1, so no
+        # all-masked softmax row can produce NaN) — their output is never
+        # consumed
+        lengths = idx[:, None] + jnp.minimum(row + 1, nv[:, None])
+        lengths = jnp.maximum(lengths, 1)
         if "k" in cache:
             k_cache = _kv_insert(cache["k"], k, idx)
             v_cache = _kv_insert(cache["v"], v, idx)
-            o = decode_attention(q, k_cache, v_cache, idx + 1)
-            new_cache = {"k": k_cache, "v": v_cache, "length": idx + 1}
+            kx, vx = _extent(k_cache, t_bound), _extent(v_cache, t_bound)
+            if T == 1:
+                o = decode_attention(q, kx, vx, lengths[:, 0])
+            else:
+                o = prefill_attention(q, kx, vx, lengths)
+            new_cache = {"k": k_cache, "v": v_cache, "length": idx + nv}
         else:
+            from ..core.dispatch import attn_packed_dispatch
             from ..core.quant import pack_int4, unpack_int4
             Dh_ = k.shape[-1]
             kq, ks = _kv_quant(k)
@@ -224,21 +272,39 @@ def attn_apply(
             if "k_p" in cache:  # int4x2: two codes per byte along Dh
                 k_st = _kv_insert(cache["k_p"], pack_int4(kq, axis=-1), idx)
                 v_st = _kv_insert(cache["v_p"], pack_int4(vq, axis=-1), idx)
-                k_codes = unpack_int4(k_st, Dh_, axis=-1)
-                v_codes = unpack_int4(v_st, Dh_, axis=-1)
+                packed = True
                 new_cache = {"k_p": k_st, "v_p": v_st}
             else:               # int4: int8 container, same codes
                 k_st = _kv_insert(cache["k_q"], kq, idx)
                 v_st = _kv_insert(cache["v_q"], vq, idx)
-                k_codes, v_codes = k_st, v_st
+                packed = False
                 new_cache = {"k_q": k_st, "v_q": v_st}
-            dt = _dtype(cfg)
-            k_cache = (k_codes.astype(jnp.float32)
-                       * k_s[..., None]).astype(dt)
-            v_cache = (v_codes.astype(jnp.float32)
-                       * v_s[..., None]).astype(dt)
-            o = decode_attention(q, k_cache, v_cache, idx + 1)
-            new_cache.update({"k_s": k_s, "v_s": v_s, "length": idx + 1})
+            if packed_read == "unpack":
+                # pre-fused baseline: decode the FULL container history to
+                # the compute dtype, then the plain attention read (kept as
+                # the bench comparison variant — this is the O(L·Dh)
+                # materialisation the fused read exists to kill)
+                k_codes = unpack_int4(k_st, Dh_, axis=-1) if packed else k_st
+                v_codes = unpack_int4(v_st, Dh_, axis=-1) if packed else v_st
+                dt = _dtype(cfg)
+                k_cache = (k_codes.astype(jnp.float32)
+                           * k_s[..., None]).astype(dt)
+                v_cache = (v_codes.astype(jnp.float32)
+                           * v_s[..., None]).astype(dt)
+                if T == 1:
+                    o = decode_attention(q, k_cache, v_cache, lengths[:, 0])
+                else:
+                    o = prefill_attention(q, k_cache, v_cache, lengths)
+            else:
+                # fused tiled read: codes -> attention without the f32
+                # cache copy (and without the old intermediate cast to
+                # _dtype(cfg) — scores come straight from codes x scales)
+                o = attn_packed_dispatch(
+                    q, _extent(k_st, t_bound), _extent(v_st, t_bound),
+                    _extent(k_s, t_bound), _extent(v_s, t_bound),
+                    lengths, packed=packed, dispatch=dispatch, bt=bt,
+                    leaf="attn.kv")
+            new_cache.update({"k_s": k_s, "v_s": v_s, "length": idx + nv})
     o = o.reshape(B, T, H * Dh)
     return lin_apply(cfg, p["wo"], o, H * Dh, D, patterns, dispatch), new_cache
 

@@ -252,3 +252,35 @@ def _decode_attention(
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bHgt,btHd->bHgd", p, v_cache.astype(jnp.float32))
     return o.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def prefill_attention(*args, **kwargs):
+    with jax.named_scope("prefill_attention"):
+        return _prefill_attention(*args, **kwargs)
+
+
+def _prefill_attention(
+    q: jnp.ndarray,        # (B, C, H, Dh) — one prompt chunk of C rows
+    k_cache: jnp.ndarray,  # (B, T, Hkv, Dh)
+    v_cache: jnp.ndarray,  # (B, T, Hkv, Dh)
+    lengths: jnp.ndarray,  # (B, C) valid length per chunk row
+) -> jnp.ndarray:
+    """:func:`decode_attention` batched over a chunk axis.
+
+    Op-for-op the decode read applied to every chunk row at once (same
+    einsum contraction batched over c, same -inf mask, same plain
+    softmax), with a per-row causal extent ``lengths[b, c]`` — so a
+    chunked prefill read is bitwise identical to running the per-row
+    decode read C times.
+    """
+    B, C, H, Dh = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    qf = (q * scale).astype(jnp.float32).reshape(B, C, Hkv, G, Dh)
+    s = jnp.einsum("bcHgd,btHd->bcHgt", qf, k_cache.astype(jnp.float32))
+    mask = jnp.arange(T)[None, None, :] < lengths[:, :, None]  # (B, C, T)
+    s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bcHgt,btHd->bcHgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, C, H, Dh).astype(q.dtype)

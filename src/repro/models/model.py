@@ -120,10 +120,13 @@ def init_params(key, cfg: ArchConfig) -> Params:
 
 
 def _dense_block(p, cfg, h, positions, cache=None, patterns=None,
-                 dispatch=None):
+                 dispatch=None, n_valid=None, t_bound=None, bt=None,
+                 packed_read="fused"):
     a, new_cache = attn_apply(p["attn"], cfg, norm_apply(cfg, p["ln1"], h),
                               positions, cache, patterns=patterns,
-                              dispatch=dispatch)
+                              dispatch=dispatch, n_valid=n_valid,
+                              t_bound=t_bound, bt=bt,
+                              packed_read=packed_read)
     h = h + a
     key = "moe" if cfg.family == "moe" else "mlp"
     f = moe_apply if cfg.family == "moe" else mlp_apply
@@ -149,12 +152,14 @@ def _ssm_superblock(p, cfg, h, cache=None):
 
 
 def _hybrid_superblock(p, shared, cfg, h, positions, cache=None,
-                       patterns=None, dispatch=None):
+                       patterns=None, dispatch=None, t_bound=None, bt=None,
+                       packed_read="fused"):
     """Zamba2 super-block: tied shared attention + attn_every Mamba2 blocks."""
     ac = cache["attn"] if cache else None
     a, new_ac = attn_apply(shared["attn"], cfg,
                            norm_apply(cfg, shared["ln"], h), positions, ac,
-                           patterns=patterns, dispatch=dispatch)
+                           patterns=patterns, dispatch=dispatch,
+                           t_bound=t_bound, bt=bt, packed_read=packed_read)
     h = h + a
     h = h + mlp_apply(shared["mlp"], cfg, norm_apply(cfg, shared["ln2"], h),
                       patterns=patterns, dispatch=dispatch)
@@ -319,24 +324,49 @@ def cache_batch_axes(cfg: ArchConfig, kv_cache: str = "float") -> Params:
 
 
 def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray,
-                *, patterns=None, dispatch=None) -> Tuple[jnp.ndarray, Any]:
+                *, patterns=None, dispatch=None, active=None, t_bound=None,
+                bt=None, packed_read="fused") -> Tuple[jnp.ndarray, Any]:
     """One token per sequence: tokens (B, 1) -> logits (B, 1, V), new cache.
 
     Position comes from the per-layer cache lengths (attention) or is
     implicit in the SSM state.  ``patterns`` (static) enables serving from
     compile_sparse's compacted parameter format; ``dispatch`` (static)
     selects Pallas kernels vs jnp twins for the compiled leaves.
+
+    Serving knobs (all trace-time constants except ``active``):
+    ``active`` — optional (B,) 0/1 mask; an inactive slot's write is a
+    garbage row beyond its (unadvanced) length, so interleaved engines can
+    step a partially-occupied batch without corrupting idle slots.  Only
+    the attention families support it (an SSM/hybrid recurrent state
+    cannot skip a step).  ``t_bound`` statically bounds the attention
+    cache read extent, ``bt`` pins the fused read's kv tile rows, and
+    ``packed_read`` selects the quantised read ("fused" tiled
+    nibble-decode vs the "unpack" full-container baseline) — see
+    :func:`repro.models.blocks.attn_apply`.
     """
     h = params["embed"]["w"][tokens]
     B = h.shape[0]
+    if active is not None and cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError(
+            f"decode_step active= mask is attention-only — the {cfg.family} "
+            "family's recurrent state advances on every step and cannot "
+            "mask a slot out")
+    if active is not None and cfg.family == "moe":
+        raise ValueError(
+            "decode_step active= mask is unsupported for moe — a masked "
+            "garbage row still competes for expert capacity and can "
+            "displace live tokens' routing")
     if cfg.family in ("dense", "vlm", "moe"):
         pos0 = cache["length"][0]  # (B,) same across layers
         positions = pos0[:, None]
+        nv = None if active is None else active.astype(jnp.int32)
 
         def body(h, xs):
             p_layer, c_layer = xs
             out, new_c = _dense_block(p_layer, cfg, h, positions, c_layer,
-                                      patterns=patterns, dispatch=dispatch)
+                                      patterns=patterns, dispatch=dispatch,
+                                      n_valid=nv, t_bound=t_bound, bt=bt,
+                                      packed_read=packed_read)
             return out, new_c
     elif cfg.family == "ssm":
         positions = None
@@ -355,10 +385,67 @@ def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jnp.ndarray,
             out, new_c = _hybrid_superblock(p_layer, shared, cfg, h,
                                             positions, c_layer,
                                             patterns=patterns,
-                                            dispatch=dispatch)
+                                            dispatch=dispatch,
+                                            t_bound=t_bound, bt=bt,
+                                            packed_read=packed_read)
             return out, new_c
     else:
         raise ValueError(cfg.family)
+
+    h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache))
+    h = norm_apply(cfg, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = jnp.dot(h, params["embed"]["w"].T.astype(h.dtype))
+    else:
+        logits = linear_apply(params["head"], h, pattern=(patterns or {}).get(
+            (cfg.d_model, cfg.vocab)), dispatch=dispatch)
+    return logits, new_cache
+
+
+def prefill_step(params: Params, cfg: ArchConfig, cache,
+                 tokens: jnp.ndarray, *, patterns=None, dispatch=None,
+                 n_valid=None, t_bound=None, bt=None,
+                 packed_read="fused") -> Tuple[jnp.ndarray, Any]:
+    """One prompt chunk per sequence: tokens (B, C) -> logits (B, C, V).
+
+    Runs C prompt positions through the cached attention path in one
+    step: each layer quantise-packs the whole chunk's K/V vectorised
+    (one amax/scale pass per (slot, pos, head) row, one ``pack_int4``
+    over the chunk) and writes it into the cache at the slot's current
+    length — bitwise identical to appending the same C tokens through
+    :func:`decode_step` one at a time, which tests assert.  Row ``c``
+    attends causally to ``length + c + 1`` positions via the batched
+    chunk read (:func:`repro.models.blocks.attn_apply` with T > 1).
+
+    ``n_valid`` is an optional (B,) count of real rows in the chunk
+    (ragged tails of a batched prompt); rows beyond it write garbage
+    past the advanced length (never read) and their logits are
+    meaningless.  The final real row's logits are the first generated
+    token's — no separate decode step is needed for it.
+
+    Only the attention-only families chunk: an SSM/hybrid state must
+    advance token-by-token, and a MoE chunk changes the router's static
+    expert capacity (a function of the token count), which would break
+    the bitwise-equals-drip contract.
+    """
+    if cfg.family not in ("dense", "vlm"):
+        raise ValueError(
+            f"prefill_step supports the attention-only families "
+            f"('dense', 'vlm'), not {cfg.family!r} — serve other families "
+            "through per-token decode_step")
+    h = params["embed"]["w"][tokens]
+    B, C = tokens.shape[:2]
+    pos0 = cache["length"][0]  # (B,) same across layers
+    positions = pos0[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    nv = None if n_valid is None else n_valid.astype(jnp.int32)
+
+    def body(h, xs):
+        p_layer, c_layer = xs
+        out, new_c = _dense_block(p_layer, cfg, h, positions, c_layer,
+                                  patterns=patterns, dispatch=dispatch,
+                                  n_valid=nv, t_bound=t_bound, bt=bt,
+                                  packed_read=packed_read)
+        return out, new_c
 
     h, new_cache = jax.lax.scan(body, h, (params["blocks"], cache))
     h = norm_apply(cfg, params["final_norm"], h)

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CompileRules, block_aware_prune, compile_lenet, compile_model
+from repro.core import payload_registry as pr
 from repro.core.dispatch import linear_dispatch, resolve as resolve_dispatch
 from repro.core.sparsity import CompressedLinear
 from repro.kernels.sparse_matmul.ops import sparse_linear
@@ -57,6 +58,11 @@ CFG = ArchConfig(name="bench", family="dense", n_layers=4, d_model=256,
 BATCH = 8
 ITERS = 20
 LINEAR_KEYS = ("wq", "wk", "wv", "wo", "wg", "wu", "wd", "head")
+# sparse-family leaf names via the registry (the leaf-literal lint bars
+# naming compressed leaves outside repro/core/families/)
+_SPARSE = pr.get("sparse")
+_BLK = _SPARSE.key_leaf
+_SCL = next(n for n in _SPARSE.leaf_names if n != _BLK)
 DEFAULT_JSON = os.path.join("results", "compressed_vs_dense.json")
 # stable top-level name: the autotune perf trajectory is diffed run-over-run
 AUTOTUNE_JSON = "BENCH_autotune.json"
@@ -92,13 +98,13 @@ def _layer_kernel_vs_gather(cm, dispatch) -> List[Dict]:
         # one representative packed leaf for this shape
         rep = next(r for r in sparse_layers if r.shape == (K, N))
         leaf = _find_leaf(cm.params, rep.name)
-        blocks = leaf["w_blk"][0] if leaf["w_blk"].ndim == 4 else leaf["w_blk"]
-        scales = leaf.get("w_s")
+        blocks = leaf[_BLK][0] if leaf[_BLK].ndim == 4 else leaf[_BLK]
+        scales = leaf.get(_SCL)
         if scales is not None and scales.ndim == 2:
             scales = scales[0]
         cl = CompressedLinear(pattern=pat, blocks=blocks, scales=scales)
-        p = {"w_blk": blocks} if scales is None \
-            else {"w_blk": blocks, "w_s": scales}
+        p = {_BLK: blocks} if scales is None \
+            else {_BLK: blocks, _SCL: scales}
         gather = jax.jit(lambda xx, p=p, pat=pat: linear_dispatch(
             p, xx, pattern=pat, dispatch="jnp"))
         pallas = jax.jit(lambda xx, cl=cl: sparse_linear(
@@ -182,10 +188,10 @@ def _autotune_section(cm, cache_path=None) -> Dict:
     for (K, N), pat in cm.patterns.items():
         rep = next(r for r in sparse_layers if r.shape == (K, N))
         leaf = _find_leaf(cm.params, rep.name)
-        blocks = leaf["w_blk"][0] if leaf["w_blk"].ndim == 4 else leaf["w_blk"]
-        p = {"w_blk": blocks}
-        if "w_s" in leaf:
-            p["w_s"] = leaf["w_s"][0] if leaf["w_s"].ndim == 2 else leaf["w_s"]
+        blocks = leaf[_BLK][0] if leaf[_BLK].ndim == 4 else leaf[_BLK]
+        p = {_BLK: blocks}
+        if _SCL in leaf:
+            p[_SCL] = leaf[_SCL][0] if leaf[_SCL].ndim == 2 else leaf[_SCL]
         x = jnp.asarray(rng.normal(size=(BATCH, K)).astype(np.float32))
         default = jax.jit(lambda xx, p=p, pat=pat: linear_dispatch(
             p, xx, pattern=pat))

@@ -1,0 +1,89 @@
+"""Model-zoo compression acceptance matrix (CLI for
+``repro.core.acceptance``).
+
+Sweeps LeNet-5 + the reduced-shape llama3.2-1b / qwen1.5-4b /
+starcoder2-7b configs across the registered policies (dense / sparse /
+quant / quant_sparse / perchannel / bfp8 / actsparse / autotune) and
+bit-widths (16/8/4/2), recording per cell:
+
+* logit MSE + top-1 agreement vs the decompressed oracle (datapath
+  fidelity) AND vs the original dense model (compression loss),
+* stored-bits ratio and container bytes,
+* steady-state decode time (transformers: one jitted ``decode_step``;
+  LeNet: one jitted compressed forward over the eval batch).
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/zoo_matrix.py           # regenerate
+    PYTHONPATH=src python benchmarks/zoo_matrix.py --check   # CI guard
+
+``--check`` re-evaluates every cell WITHOUT timing and enforces the
+per-cell floors: oracle fidelity everywhere, dense-reference floors on
+the weight-preserving cells, honest ``expected_fail`` on the known
+2-bit collapse cells (quant@2 / perchannel@2 — asserted to really fail
+while bfp8@2 passes at the same sweep coordinate), byte-exact container
+accounting vs the committed file (autotune cells excepted: their policy
+choice follows the live ``REPRO_AUTOTUNE_CACHE`` tuned table), and
+no top-1 regression beyond the committed tolerance.
+
+Schema of the committed ``BENCH_zoo_matrix.json`` is documented in
+``docs/benchmarks.md``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import acceptance  # noqa: E402
+
+BENCH_JSON = "BENCH_zoo_matrix.json"
+
+
+def _bench_path() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                        BENCH_JSON)
+
+
+def run() -> None:
+    print(f"zoo acceptance matrix: {len(acceptance.cell_specs())} cells "
+          f"({' x '.join(acceptance.ZOO_CONFIGS)})")
+    bench = acceptance.build_matrix(time_cells=True)
+    path = _bench_path()
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    n_fail = sum(1 for c in bench["cells"].values() if c["expected_fail"])
+    print(f"wrote {os.path.normpath(path)}: {len(bench['cells'])} cells, "
+          f"{n_fail} expected_fail")
+
+
+def check() -> None:
+    path = _bench_path()
+    if not os.path.exists(path):
+        print(f"FAIL: no committed {BENCH_JSON} — run zoo_matrix.py first")
+        raise SystemExit(1)
+    with open(path) as f:
+        committed = json.load(f)
+    print(f"zoo acceptance check: {len(acceptance.cell_specs())} cells vs "
+          f"committed {BENCH_JSON}")
+    fails = acceptance.check_matrix(committed)
+    if fails:
+        print(f"\nFAIL ({len(fails)}):")
+        for msg in fails:
+            print(f"  - {msg}")
+        raise SystemExit(1)
+    print("check OK")
+
+
+def main() -> None:
+    if "--check" in sys.argv:
+        check()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -14,16 +14,18 @@ This script enforces that mechanically: it
    a ``leaf_names=...`` registration keyword (filtered to names with an
    underscore — the bare dense ``w`` is the *uncompiled* convention and
    legitimately appears everywhere);
-2. AST-walks every other module under ``src/repro`` and fails on any
-   string constant that is exactly one of those leaf names.
+2. AST-walks every other module under ``src/repro`` AND the benchmark
+   drivers under ``benchmarks/`` and fails on any string constant that
+   is exactly one of those leaf names.
 
 Exact-match on ``ast.Constant`` means prose mentions inside docstrings
 ("the ``w_blk`` container...") pass, while code-level uses — dict keys,
 ``"w_blk" in p`` membership tests, comparisons — fail.  Tests are not
 scanned: they pin the on-disk leaf layout on purpose.
 
-Usage:  python scripts/check_family_literals.py [src-root]
-Exit 1 with a per-site report when any literal leaks.
+Usage:  python scripts/check_family_literals.py [root ...]
+Exit 1 with a per-site report when any literal leaks.  With no
+arguments both default roots are scanned.
 """
 from __future__ import annotations
 
@@ -70,7 +72,8 @@ def leaked_literals(root: Path, names: set[str]):
 
 
 def main(argv: list[str]) -> int:
-    root = Path(argv[1]) if len(argv) > 1 else Path("src/repro")
+    roots = [Path(a) for a in argv[1:]] or \
+        [Path("src/repro"), Path("benchmarks")]
     if not FAMILIES_DIR.is_dir():
         print(f"family modules not found at {FAMILIES_DIR}", file=sys.stderr)
         return 2
@@ -79,7 +82,8 @@ def main(argv: list[str]) -> int:
         print("no leaf_names registrations found — lint is vacuous",
               file=sys.stderr)
         return 2
-    leaks = list(leaked_literals(root, names))
+    leaks = [leak for root in roots
+             for leak in leaked_literals(root, names)]
     for f, line, lit in leaks:
         print(f"{f}:{line}: family leaf literal {lit!r} outside the "
               "registry — use repro.core.payload_registry queries instead")
@@ -89,7 +93,7 @@ def main(argv: list[str]) -> int:
               "leaves.", file=sys.stderr)
         return 1
     print(f"ok: no family leaf literals ({len(names)} registered names) "
-          f"outside the registry under {root}")
+          f"under {', '.join(map(str, roots))}")
     return 0
 
 

@@ -719,7 +719,10 @@ def autotune_model(
             done.add(key)
             x = jnp.asarray(rng.normal(size=(M_leaf, K)), x_dtype)
             if container is not None:
-                wbits = 4  # bit-packed containers carry int4 codes
+                # bit-packed containers: code width from the tag
+                from .quant import PACKED_CONTAINER, PACKED_CONTAINER_INT2
+                wbits = {PACKED_CONTAINER: 4,
+                         PACKED_CONTAINER_INT2: 2}.get(container, 4)
             else:
                 w_arr = leaf.get(lf.code_leaf) if lf is not None else None
                 wbits = 8 if w_arr is not None and \

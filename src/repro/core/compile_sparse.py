@@ -130,6 +130,9 @@ class CompileRules:
     quantize_sparse: bool = True          # sparse blocks stored int8
     dtype: Any = jnp.float32              # float storage dtype (non-quant)
     policies: Optional[Dict[str, str]] = None  # per-leaf-name override
+    # threshold captured into the "actsparse" family: a following ReLU is
+    # sharpened to trelu(y, tau) so small positives become exact zeros
+    act_threshold: float = 0.0
 
 
 @dataclasses.dataclass

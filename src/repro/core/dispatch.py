@@ -106,6 +106,7 @@ from ..kernels.sparse_matmul.kernel import (
     _pad_rows,
     _row_tile,
     _sublane,
+    apply_activation,
     block_sparse_conv,
 )
 from ..kernels.sparse_matmul.ops import sparse_linear
@@ -387,7 +388,7 @@ def _epilogue(y: jnp.ndarray, bias, activation: Optional[str],
     if bias is not None:
         y = y + bias.astype(jnp.float32)
     if activation is not None:
-        y = ACTIVATIONS[activation](y)
+        y = apply_activation(y, activation)
     return y.astype(out_dtype)
 
 
@@ -457,17 +458,20 @@ def _quant_apply_jnp(w, scales, x, compute_dtype):
 
 
 def _quant_apply_pallas(w, scales, x, cfg: DispatchConfig, out_dtype,
-                        bias, activation: Optional[str], entry=None, *,
-                        packed: bool = False):
+                        bias, activation=None, entry=None, *,
+                        packed=False):
     """quant_matmul kernel path with the fused bias/activation epilogue.
 
     Tiles come from the tuned entry when present, else the defaults; tiles
     fall back to whole-dim blocks when 128 does not divide — legal only in
     interpret mode, which is the sole way here for such shapes (_use_pallas
-    gates compiled execution on quant_kernel_eligible).  ``packed=True``
-    takes the bit-packed int4 container (uint8 along K, even K —
-    guaranteed by the caller) through the kernel's packed prologue: half
-    the weight bytes, identical numerics."""
+    gates compiled execution on quant_kernel_eligible).  ``packed`` takes
+    a bit-packed sub-byte container (uint8 along K; K divisible by the
+    code count — guaranteed by the caller) through the kernel's packed
+    prologue: a fraction of the weight bytes, identical numerics.  Tags:
+    ``True``/"int4x2" two codes per byte, "int2x4" four."""
+    from ..kernels.sparse_matmul.kernel import _packed_ratio
+    ratio = _packed_ratio(packed)
     if packed:
         N = int(w.shape[1])
         K = x.shape[-1]
@@ -481,7 +485,7 @@ def _quant_apply_pallas(w, scales, x, cfg: DispatchConfig, out_dtype,
     bm = _effective_bm(bm, xm.dtype) or _row_tile(xm.shape[0], xm.dtype)
     if bn is None or N % bn:
         bn = 128 if N % 128 == 0 else N
-    if bk is None or K % bk:
+    if bk is None or K % bk or bk % ratio:
         bk = 128 if K % 128 == 0 else K
     xm, M = _pad_rows(xm, bm)
     y = quant_matmul(xm, w, scales.reshape(N), bias,
@@ -527,7 +531,10 @@ def linear_dispatch(
     if compute_dtype is None:
         compute_dtype = x.dtype
     bias = p.get("b")
-    fam = payload_registry.family_for_leaves(p)
+    # structural lint first: corrupted leaves (dtype drift, truncated
+    # container axes, stale scale vectors) fail loudly with the family
+    # name instead of silently-wrong numerics or a bare XLA shape error
+    fam = payload_registry.validate_leaves(p, pattern)
     if fam is None or fam.apply is None:
         raise ValueError(f"unknown linear leaves {list(p)}")
     return fam.apply(p, x, pattern=pattern, cfg=cfg, bias=bias,

@@ -7,7 +7,10 @@ family first, and dense registers LAST because its ``matches`` claims any
 plain array.
 """
 from . import sparse as _sparse            # noqa: F401
+from . import int2 as _int2                # noqa: F401
 from . import quant as _quant              # noqa: F401
 from . import gsparse as _gsparse          # noqa: F401
 from . import perchannel as _perchannel    # noqa: F401
+from . import bfp8 as _bfp8                # noqa: F401
+from . import actsparse as _actsparse      # noqa: F401
 from . import dense as _dense              # noqa: F401

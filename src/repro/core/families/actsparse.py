@@ -1,0 +1,233 @@
+"""Activation-sparsity family: block-compacted float weights plus a
+compile-time threshold-ReLU captured into the format itself.
+
+Leaf form ``{"w_ablk": (P, bk, bn) f32, "w_atau": () f32}`` plus the
+static :class:`BlockSparsePattern` carried out-of-band; payload form
+:class:`ActSparsePayload` (a float CompressedLinear + the threshold).
+
+The format's semantics: weights are block-compacted exactly like the
+``sparse`` family's float path, and any ReLU that follows the layer is
+*sharpened* into a threshold-ReLU ``trelu(y, tau) = where(y > tau, y,
+0)`` — small positive activations are clamped to exact zeros so the
+NEXT layer sees genuinely sparse activations (the LogicSparse
+activation-sparsity story: zeros cost nothing on an engine-free
+datapath).  The threshold is captured at compile time
+(``CompileRules.act_threshold``) and exploited in the kernels' emit
+step: dispatch rewrites ``activation="relu"`` into the static
+``("trelu", tau)`` tuple the sparse/quant kernel epilogues fuse
+in-register.  With no activation (or a non-ReLU one) the threshold does
+not apply and execution is bitwise the float sparse path — the
+registry-wide oracle tests run unchanged.
+
+When ``tau`` arrives as a traced array (the transformer passes leaves
+through jit), the kernel runs with no fused activation and the
+threshold is applied as one ``where`` in the XLA epilogue — identical
+numerics, still a single fused elementwise op after the matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import dispatch as _d
+from .. import payload_registry as _reg
+from ..sparsity import CompressedLinear, compress, decompress
+from .sparse import _NEED_PATTERN, _validate_blocks
+from .sparse import _decompress as _sparse_decompress
+
+# container tag for tuned-table keys: actsparse emits a different fused
+# epilogue than plain sparse, so timings are kept apart
+ACTSPARSE_CONTAINER = "actsparse"
+
+
+@dataclasses.dataclass
+class ActSparsePayload:
+    """Payload form: float block-sparse weights + static threshold."""
+
+    cl: CompressedLinear
+    tau: float = 0.0
+
+    @property
+    def pattern(self):
+        return self.cl.pattern
+
+
+def _asp_flatten(p: ActSparsePayload):
+    return (p.cl,), (p.tau,)
+
+
+def _asp_unflatten(aux, children):
+    return ActSparsePayload(cl=children[0], tau=aux[0])
+
+
+jax.tree_util.register_pytree_node(ActSparsePayload, _asp_flatten,
+                                   _asp_unflatten)
+
+
+def _static_tau(tau):
+    """Concrete threshold as a Python float, or None under tracing."""
+    try:
+        return float(tau)
+    except (TypeError,
+            jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return None
+
+
+# ----------------------------------------------------------------- execute
+
+
+def _apply(p, x, *, pattern, cfg, bias, activation, compute_dtype, leaf,
+           tag):
+    if pattern is None:
+        raise ValueError(_NEED_PATTERN)
+    act, post_tau = activation, None
+    if activation == "relu":
+        tau = p["w_atau"]
+        t = _static_tau(tau)
+        if t is not None:
+            act = ("trelu", t)  # fused into the kernel/twin emit step
+        else:
+            act, post_tau = None, tau  # traced tau: one XLA-fused where
+    K, N = pattern.shape
+    entry = _d._tuned_entry(cfg, tag + "sparse", _d._lead_rows(x), K, N,
+                            x.dtype, pattern, leaf=leaf,
+                            container=ACTSPARSE_CONTAINER)
+    use_k = _d._pick_backend(
+        cfg, entry, _d.sparse_kernel_eligible(pattern, p["w_ablk"].dtype),
+        leaf=leaf, predicate=f"sparse_kernel_eligible(block={pattern.block})")
+    if use_k:
+        bm = cfg.bm if cfg.bm is not None else (
+            entry.bm if entry is not None else None)
+        cl = CompressedLinear(pattern=pattern, blocks=p["w_ablk"])
+        y = _d.sparse_linear(x, cl, bm=_d._effective_bm(bm, x.dtype),
+                             bias=bias, activation=act,
+                             out_dtype=compute_dtype,
+                             interpret=cfg.run_interpret, use_kernel=True)
+    else:
+        y = _d._sparse_apply_jnp(p["w_ablk"], None, x, pattern,
+                                 compute_dtype)
+        y = _d._epilogue(y, bias, act, compute_dtype)
+    if post_tau is not None:
+        # trelu with tau >= 0 subsumes the ReLU: negatives are below tau
+        y = jnp.where(y > post_tau.astype(y.dtype), y,
+                      jnp.zeros((), y.dtype))
+    return y
+
+
+# ------------------------------------------------------------------ payload
+
+
+def _matches(payload):
+    return isinstance(payload, ActSparsePayload)
+
+
+def _from_payload(payload):
+    if not _matches(payload):
+        return None
+    return {"w_ablk": payload.cl.blocks,
+            "w_atau": jnp.float32(payload.tau)}, payload.cl.pattern
+
+
+def _payload_dense(payload):
+    # the threshold is an execution-time activation transform, not a
+    # weight transform — the dense oracle is the scattered blocks
+    return decompress(payload.cl).astype(jnp.float32)
+
+
+def _payload_kn(payload):
+    return tuple(map(int, payload.cl.pattern.shape))
+
+
+# --------------------------------------------------------------- decompress
+
+
+def _decompress(leaf, *, pattern, shape, dtype):
+    leaf = {("w_blk" if k == "w_ablk" else k): v
+            for k, v in leaf.items() if k != "w_atau"}
+    return _sparse_decompress(leaf, pattern=pattern, shape=shape,
+                              dtype=dtype)
+
+
+# ------------------------------------------------------------------- policy
+
+
+def _threshold_of(rules) -> float:
+    tau = float(getattr(rules, "act_threshold", 0.0))
+    if tau < 0.0:
+        raise ValueError(
+            f"actsparse needs a non-negative act_threshold, got {tau} — "
+            "trelu(y, tau) only subsumes the ReLU when tau >= 0")
+    return tau
+
+
+def _compile_stack(stack, masks, *, pattern, bits, rules):
+    """Block-compact an (L, K, N) stack (float storage) + the threshold."""
+    del bits
+    tau = _threshold_of(rules)
+    L, K, N = stack.shape
+    blk_list = []
+    total_bytes = 0
+    nnz = 0
+    for li in range(L):
+        cl = compress(np.asarray(stack[li]), np.asarray(masks[li]),
+                      pattern.block, pattern=pattern, dtype=rules.dtype)
+        blk_list.append(np.asarray(cl.blocks))
+        total_bytes += cl.blocks.size * cl.blocks.dtype.itemsize
+        nnz += cl.pattern.nnz
+    leaves = {"w_ablk": jnp.asarray(np.stack(blk_list)),
+              "w_atau": jnp.full((L,), tau, jnp.float32)}
+    total_bytes += L * 4
+    return leaves, total_bytes, total_bytes, nnz / (L * K * N)
+
+
+def _compile_payload(w, mask, *, bits, rules, block):
+    del bits
+    tau = _threshold_of(rules)
+    cl = compress(w, mask, block, dtype=rules.dtype)
+    cont_bytes = cl.storage_bytes - cl.pattern.meta_bytes + 4
+    return ActSparsePayload(cl=cl, tau=tau), cl.pattern, cont_bytes, \
+        cont_bytes, cl.pattern.block_density, cl.pattern.element_density
+
+
+# --------------------------------------------------------------------- init
+
+
+def _sample(rng):
+    from .sparse import _sample_pattern
+
+    pattern = _sample_pattern(rng)
+    P = pattern.n_blocks_present
+    bk, bn = pattern.block
+    return {"w_ablk": jnp.asarray(rng.normal(size=(P, bk, bn)),
+                                  jnp.float32),
+            "w_atau": jnp.float32(0.05)}, pattern
+
+
+FAMILY = _reg.register(_reg.PayloadFamily(
+    name="actsparse",
+    key_leaf="w_ablk",
+    leaf_names=("w_ablk", "w_atau"),
+    apply=_apply,
+    needs_pattern=True,
+    matches=_matches,
+    from_payload=_from_payload,
+    decompress=_decompress,
+    payload_dense=_payload_dense,
+    payload_kn=_payload_kn,
+    leaf_ndim={"w_ablk": 3, "w_atau": 0},
+    shard_tails={"w_ablk": "pattern", "w_atau": "replicate"},
+    legacy_tp=("model", None, None),
+    sample=_sample,
+    validate=_validate_blocks("actsparse", "w_ablk"),
+))
+
+POLICY = _reg.register_policy(_reg.PolicyCompiler(
+    name="actsparse",
+    eliminates_blocks=True,
+    compile_stack=_compile_stack,
+    compile_payload=_compile_payload,
+))

@@ -1,0 +1,224 @@
+"""BFP8 family: block-floating-point — int8 mantissas sharing one
+power-of-two exponent per output channel.
+
+Leaf form ``{"w_bfp": (K, N) int8, "w_bfpe": (N,) int8}``; payload form
+:class:`BFP8Tensor`.  The dequant scale of column n is exactly
+``2 ** w_bfpe[n]`` — one byte per channel instead of the four a f32
+scale pays, and the multiply is an exact binary shift.  The exponent is
+folded at the epilogue: execution rides the existing ``quant_matmul``
+kernel with ``exp2(e)`` as its per-output-channel scale vector — no new
+kernel, no engine.
+
+BFP8 is a fixed-mantissa format: the stored codes are ALWAYS 8-bit
+regardless of the sweep's requested bit-width.  What changes against
+naive low-bit quant is the *scale* storage (1 byte vs 4) and the
+dynamic-range behaviour — a naive 2-bit affine quant collapses to 3
+levels per channel while BFP8 keeps 255, which is exactly the
+acceptance-matrix contrast (``quant@2`` expected_fail vs ``bfp8@2``
+pass).  The stored-bits accounting reports what the format actually
+pays.
+
+This module is the whole format: dispatch, compile_sparse, autotune,
+sharding and checkpointing pick it up from the registration below with
+zero family-specific branches added anywhere else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import dispatch as _d
+from .. import payload_registry as _reg
+
+# container tag for tuned-table keys: bfp8 leaves feed an exp2-derived
+# scale vector, so their timings never mix with plain quant entries
+BFP8_CONTAINER = "bfp8"
+
+
+@dataclasses.dataclass
+class BFP8Tensor:
+    """Payload form: int8 mantissas + per-output-channel int8 exponents."""
+
+    mantissas: jnp.ndarray  # (K, N) int8
+    exponents: jnp.ndarray  # (N,) int8 — column scale is exactly 2**e
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.mantissas.shape
+
+    def dequantize(self) -> jnp.ndarray:
+        N = self.mantissas.shape[-1]
+        scales = jnp.exp2(self.exponents.reshape(N).astype(jnp.float32))
+        return self.mantissas.astype(jnp.float32) * scales[None, :]
+
+
+def _bfp_flatten(t: BFP8Tensor):
+    return (t.mantissas, t.exponents), ()
+
+
+def _bfp_unflatten(aux, children):
+    del aux
+    mantissas, exponents = children
+    return BFP8Tensor(mantissas=mantissas, exponents=exponents)
+
+
+jax.tree_util.register_pytree_node(BFP8Tensor, _bfp_flatten, _bfp_unflatten)
+
+
+def quantize_bfp8(w) -> BFP8Tensor:
+    """Shared-exponent quantisation: one power-of-two scale per column.
+
+    ``e = ceil(log2(amax / 127))`` guarantees every mantissa rounds into
+    [-127, 127]; an all-zero column stores ``e = 0`` with zero mantissas.
+    """
+    w = np.asarray(w, np.float32)
+    amax = np.max(np.abs(w), axis=0)
+    with np.errstate(divide="ignore"):
+        e = np.where(amax > 0.0,
+                     np.ceil(np.log2(amax / 127.0)), 0.0)
+    e = np.clip(e, -126, 127).astype(np.int8)
+    scale = np.exp2(e.astype(np.float32))
+    m = np.clip(np.round(w / scale[None, :]), -127, 127).astype(np.int8)
+    return BFP8Tensor(mantissas=jnp.asarray(m), exponents=jnp.asarray(e))
+
+
+# ----------------------------------------------------------------- execute
+
+
+def _apply(p, x, *, pattern, cfg, bias, activation, compute_dtype, leaf,
+           tag):
+    del pattern
+    w = p["w_bfp"]
+    K, N = w.shape
+    # exponent folded at the epilogue: the quant kernel's per-out-channel
+    # scale vector is exactly 2**e, so the emit-step multiply IS the
+    # block-float rescale
+    scales = jnp.exp2(p["w_bfpe"].astype(jnp.float32))
+    entry = _d._tuned_entry(cfg, tag + "quant", _d._lead_rows(x), K, N,
+                            x.dtype, leaf=leaf, container=BFP8_CONTAINER)
+    if _d._pick_backend(cfg, entry, _d.quant_kernel_eligible(K, N), leaf=leaf,
+                        predicate=f"quant_kernel_eligible(K={K}, N={N})"):
+        return _d._quant_apply_pallas(w, scales, x, cfg, compute_dtype, bias,
+                                      activation, entry)
+    y = _d._quant_apply_jnp(w, scales, x, compute_dtype)
+    return _d._epilogue(y, bias, activation, compute_dtype)
+
+
+# ------------------------------------------------------------------ payload
+
+
+def _matches(payload):
+    return isinstance(payload, BFP8Tensor)
+
+
+def _from_payload(payload):
+    if not _matches(payload):
+        return None
+    N = payload.mantissas.shape[-1]
+    return {"w_bfp": payload.mantissas,
+            "w_bfpe": payload.exponents.reshape(N)}, None
+
+
+def _payload_dense(payload):
+    return payload.dequantize()
+
+
+def _payload_kn(payload):
+    return tuple(map(int, payload.mantissas.shape))
+
+
+# --------------------------------------------------------------- decompress
+
+
+def _decompress(leaf, *, pattern, shape, dtype):
+    del pattern, shape
+    w_bfp = np.asarray(leaf["w_bfp"])
+    w_bfpe = np.asarray(leaf["w_bfpe"])
+    # exact: the scale is a power of two; stacked leaves carry (L, N)
+    w = w_bfp.astype(np.float32) * np.exp2(
+        w_bfpe.astype(np.float32))[..., None, :]
+    out = {k: v for k, v in leaf.items() if k not in ("w_bfp", "w_bfpe")}
+    out["w"] = jnp.asarray(w, dtype)
+    return out
+
+
+# ------------------------------------------------------------------- policy
+
+
+def _compile_stack(stack, masks, *, pattern, bits, rules):
+    # fixed-mantissa format: ``bits`` names the sweep's operating point,
+    # the stored codes are always 8-bit — the accounting below records
+    # what the format actually pays (1-byte exponents, 1-byte mantissas)
+    del pattern, bits, rules
+    masked = stack if masks is None else stack * masks
+    ms, es = [], []
+    for wl in masked:
+        t = quantize_bfp8(wl)
+        ms.append(np.asarray(t.mantissas))
+        es.append(np.asarray(t.exponents))
+    w_bfp = jnp.asarray(np.stack(ms))
+    w_bfpe = jnp.asarray(np.stack(es))
+    code_bytes = int(w_bfp.size + w_bfpe.size)
+    return {"w_bfp": w_bfp, "w_bfpe": w_bfpe}, code_bytes, code_bytes, None
+
+
+def _compile_payload(w, mask, *, bits, rules, block):
+    del bits, rules, block
+    K, N = w.shape
+    t = quantize_bfp8(w if mask is None else w * mask)
+    comp_bytes = cont_bytes = K * N + N
+    return t, None, comp_bytes, cont_bytes, None, None
+
+
+# --------------------------------------------------------------------- init
+
+
+def _init_bfp8(key, K, N, *, dtype, pattern):
+    del dtype, pattern
+    return {"w_bfp": jax.random.randint(key, (K, N), -127, 128,
+                                        dtype=jnp.int8),
+            "w_bfpe": jnp.full((N,), -10, jnp.int8)}
+
+
+def _validate(p, pattern):
+    del pattern
+    w, e = p.get("w_bfp"), p.get("w_bfpe")
+    if w is not None and e is not None and e.shape[-1] != w.shape[-1]:
+        raise ValueError(
+            f"bfp8 payload: exponent leaf 'w_bfpe' has {e.shape[-1]} "
+            f"channels but mantissa leaf 'w_bfp' has N={w.shape[-1]} "
+            f"output columns (shapes {tuple(e.shape)} vs "
+            f"{tuple(w.shape)}) — stale exponents rescale every column")
+
+
+def _sample(rng):
+    t = quantize_bfp8(rng.normal(size=(16, 8)).astype(np.float32))
+    return {"w_bfp": t.mantissas, "w_bfpe": t.exponents}, None
+
+
+FAMILY = _reg.register(_reg.PayloadFamily(
+    name="bfp8",
+    key_leaf="w_bfp",
+    leaf_names=("w_bfp", "w_bfpe"),
+    apply=_apply,
+    matches=_matches,
+    from_payload=_from_payload,
+    decompress=_decompress,
+    payload_dense=_payload_dense,
+    payload_kn=_payload_kn,
+    leaf_ndim={"w_bfp": 2, "w_bfpe": 1},
+    shard_tails={"w_bfp": "replicate", "w_bfpe": "replicate"},
+    init_modes={"bfp8": _init_bfp8},
+    sample=_sample,
+    validate=_validate,
+))
+
+POLICY = _reg.register_policy(_reg.PolicyCompiler(
+    name="bfp8",
+    compile_stack=_compile_stack,
+    compile_payload=_compile_payload,
+))

@@ -40,6 +40,18 @@ def _init_gsparse_int8(key, K, N, *, dtype, pattern):
             "w_s": jnp.full((N,), 1.0 / (127 * np.sqrt(Kg)), jnp.float32)}
 
 
+def _validate(p, pattern):
+    del pattern
+    w, s = p.get("w_grp"), p.get("w_s")
+    if w is not None and s is not None \
+            and s.shape[-1] != w.shape[-3] * w.shape[-1]:
+        raise ValueError(
+            f"gsparse payload: scale leaf 'w_s' has {s.shape[-1]} "
+            f"channels but 'w_grp' {tuple(w.shape)} factorises to "
+            f"N={w.shape[-3] * w.shape[-1]} output columns (s groups x "
+            "Ng each) — stale scales from a different group count")
+
+
 def _sample(rng):
     return {"w_grp": jnp.asarray(rng.normal(size=(2, 8, 4)),
                                  jnp.float32)}, None
@@ -51,7 +63,10 @@ FAMILY = _reg.register(_reg.PayloadFamily(
     leaf_names=("w_grp", "w_s"),
     apply=_apply,
     leaf_ndim={"w_grp": 3, "w_s": 1},
+    # float groups, or int8 codes + w_s scales (gsparse_int8 init mode)
+    leaf_dtype_kinds={"w_grp": "fi"},
     init_modes={"gsparse": _init_gsparse,
                 "gsparse_int8": _init_gsparse_int8},
     sample=_sample,
+    validate=_validate,
 ))

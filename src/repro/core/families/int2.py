@@ -1,0 +1,165 @@
+"""int2 packed quant family: four 2-bit codes per byte along K.
+
+Leaf form ``{"w_q2": (ceil(K/4), N) uint8, "w_s": (N,) f32}`` — the
+quarter-byte sibling of the ``quant_packed`` int4x2 container.  Payload
+form: :class:`repro.core.quant.PackedTensor` with ``per_byte == 4`` and a
+K-axis container (an N-axis int2x4 container — K not a multiple of 4 —
+falls through to the unpacked ``quant`` family, which trace-time unpacks
+it into the identical int8 path).
+
+The kernels decode the crumbs in-register (``packed="int2x4"`` rides the
+same prologue the int4x2 container uses at twice the density: a quarter
+of the HBM bytes per weight), the jnp twin unpacks at trace time —
+bitwise identical either way.
+
+This module registers BEFORE :mod:`repro.core.families.quant` (container
+variants match ahead of their unpacked twins), so it must not import
+that module at import time; the shared conv/decompress helpers are
+pulled in lazily at call time.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import dispatch as _d
+from .. import payload_registry as _reg
+from ..quant import (
+    PACKED_CONTAINER_INT2,
+    PackedTensor,
+    pack_codes,
+    quantize,
+    unpack_codes,
+)
+
+# ----------------------------------------------------------------- execute
+
+
+def _apply_int2(p, x, *, pattern, cfg, bias, activation, compute_dtype,
+                leaf, tag):
+    # bit-packed int2 quant container: uint8 (ceil(K/4), N) along K.  The
+    # logical K comes from the activation (the container cannot
+    # distinguish K from K+1..K+3 when K is not a multiple of 4).
+    del pattern
+    wp = p["w_q2"]
+    K, N = x.shape[-1], int(wp.shape[-1])
+    if wp.shape[-2] != -(-K // 4):
+        raise ValueError(
+            f"int2 container rows {wp.shape[-2]} do not match activation "
+            f"K={K} (expected ceil(K/4)={-(-K // 4)}) — w_q2 leaves are "
+            "packed four codes per byte along K")
+    entry = _d._tuned_entry(cfg, tag + "quant", _d._lead_rows(x), K, N,
+                            x.dtype, leaf=leaf,
+                            container=PACKED_CONTAINER_INT2)
+    if _d._pick_backend(cfg, entry, _d.quant_kernel_eligible(K, N), leaf=leaf,
+                        predicate=f"quant_kernel_eligible(K={K}, N={N})"):
+        if K % 4 == 0:  # in-kernel crumb decode: a quarter of the HBM bytes
+            return _d._quant_apply_pallas(wp, p["w_s"], x, cfg, compute_dtype,
+                                          bias, activation, entry,
+                                          packed=PACKED_CONTAINER_INT2)
+        return _d._quant_apply_pallas(unpack_codes(wp, K, axis=-2, bits=2),
+                                      p["w_s"], x, cfg, compute_dtype, bias,
+                                      activation, entry)
+    y = _d._quant_apply_jnp(unpack_codes(wp, K, axis=-2, bits=2), p["w_s"],
+                            x, compute_dtype)
+    return _d._epilogue(y, bias, activation, compute_dtype)
+
+
+# ------------------------------------------------------------------ payload
+
+
+def _matches(payload):
+    return isinstance(payload, PackedTensor) and payload.per_byte == 4 \
+        and payload.axis % len(payload.shape) == 0
+
+
+def _from_payload(payload):
+    if not _matches(payload):
+        return None
+    K, N = payload.shape
+    return {"w_q2": payload.data, "w_s": payload.scales.reshape(N)}, None
+
+
+def _payload_dense(payload):
+    K, N = payload.shape
+    codes = payload.unpack().astype(jnp.float32)
+    return codes * payload.scales.reshape(N).astype(jnp.float32)[None, :]
+
+
+# --------------------------------------------------------------- fused conv
+
+
+def _conv_fused(cp, x, *, cfg, bias, activation, out_dtype, leaf, pool, M):
+    # identical machinery to the int4x2 conv entry (it reads the payload's
+    # own per_byte/container); lazy import — see module docstring
+    from .quant import _conv_fused as _quant_conv_fused
+
+    return _quant_conv_fused(cp, x, cfg=cfg, bias=bias, activation=activation,
+                             out_dtype=out_dtype, leaf=leaf, pool=pool, M=M)
+
+
+# --------------------------------------------------------------- decompress
+
+
+def _decompress(leaf, *, pattern, shape, dtype):
+    # unpack (exact), then the w_q path.  The logical K comes from the
+    # report's (K, N) shape — the container alone cannot recover it.
+    from .quant import _decompress as _quant_decompress
+
+    assert shape is not None, "int2 quant leaf without a report shape"
+    w_q = unpack_codes(leaf["w_q2"], shape[0], axis=-2, bits=2)
+    leaf = {**{k: v for k, v in leaf.items() if k != "w_q2"}, "w_q": w_q}
+    return _quant_decompress(leaf, pattern=pattern, shape=shape, dtype=dtype)
+
+
+# ----------------------------------------------------------------- autotune
+
+
+def _tune_prepare(leaves, pattern, K):
+    """int2x4 container -> unpacked codes for the measurement runner."""
+    del pattern
+    leaf = {**{k: v for k, v in leaves.items() if k != "w_q2"},
+            "w_q": unpack_codes(leaves["w_q2"], K, axis=-2, bits=2)}
+    return leaf, PACKED_CONTAINER_INT2
+
+
+# --------------------------------------------------------------------- init
+
+
+def _validate(p, pattern):
+    del pattern
+    w, s = p.get("w_q2"), p.get("w_s")
+    if w is not None and s is not None and s.shape[-1] != w.shape[-1]:
+        raise ValueError(
+            f"int2 payload: scale leaf 'w_s' has {s.shape[-1]} channels "
+            f"but container 'w_q2' has N={w.shape[-1]} output columns "
+            f"(shapes {tuple(s.shape)} vs {tuple(w.shape)}) — stale "
+            "scales from a different compile would dequantise wrong")
+
+
+def _sample(rng):
+    qt = quantize(rng.normal(size=(16, 8)).astype(np.float32), 2, axis=1)
+    return {"w_q2": pack_codes(jnp.asarray(qt.values), axis=0, bits=2),
+            "w_s": jnp.asarray(qt.scales).reshape(8).astype(jnp.float32)}, \
+        None
+
+
+FAMILY = _reg.register(_reg.PayloadFamily(
+    name="int2",
+    key_leaf="w_q2",
+    leaf_names=("w_q2", "w_s"),
+    apply=_apply_int2,
+    kind="quant",
+    container=PACKED_CONTAINER_INT2,
+    matches=_matches,
+    from_payload=_from_payload,
+    conv_fused=_conv_fused,
+    decompress=_decompress,
+    payload_dense=_payload_dense,
+    payload_kn=lambda payload: tuple(map(int, payload.shape)),
+    tune_prepare=_tune_prepare,
+    leaf_ndim={"w_q2": 2, "w_s": 1},
+    container_leaves=("w_q2",),
+    sample=_sample,
+    validate=_validate,
+))

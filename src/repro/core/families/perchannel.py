@@ -168,6 +168,17 @@ def _init_perchannel_int8(key, K, N, *, dtype, pattern):
             "w_pcs": jnp.full((K,), 1.0 / (127 * np.sqrt(K)), jnp.float32)}
 
 
+def _validate(p, pattern):
+    del pattern
+    w, s = p.get("w_pc"), p.get("w_pcs")
+    if w is not None and s is not None and s.shape[-1] != w.shape[-2]:
+        raise ValueError(
+            f"perchannel payload: scale leaf 'w_pcs' has {s.shape[-1]} "
+            f"channels but code leaf 'w_pc' has K={w.shape[-2]} input "
+            f"rows (shapes {tuple(s.shape)} vs {tuple(w.shape)}) — "
+            "per-INPUT-channel scales must match the K axis")
+
+
 def _sample(rng):
     pcq = quantize_per_channel(
         rng.normal(size=(16, 8)).astype(np.float32), 8)
@@ -188,6 +199,7 @@ FAMILY = _reg.register(_reg.PayloadFamily(
     shard_tails={"w_pc": "replicate", "w_pcs": "replicate"},
     init_modes={"perchannel_int8": _init_perchannel_int8},
     sample=_sample,
+    validate=_validate,
 ))
 
 POLICY = _reg.register_policy(_reg.PolicyCompiler(

@@ -29,6 +29,7 @@ from ..quant import (
     PACKED_CONTAINER,
     PackedTensor,
     QuantizedTensor,
+    pack_codes,
     pack_int4,
     pack_quantized,
     quantize,
@@ -86,7 +87,9 @@ def _apply_quant_packed(p, x, *, pattern, cfg, bias, activation,
 
 
 def _matches_packed(payload):
-    return isinstance(payload, PackedTensor) \
+    # int4x2 only: four-per-byte (int2x4) K-axis containers belong to the
+    # ``int2`` family, which registers ahead of this module
+    return isinstance(payload, PackedTensor) and payload.per_byte == 2 \
         and payload.axis % len(payload.shape) == 0
 
 
@@ -139,7 +142,7 @@ def _conv_fused(cp, x, *, cfg, bias, activation, out_dtype, leaf, pool, M):
     payload = cp.payload
     kh, kw = cp.kernel[:2]
     K, N = cp.K, cp.N
-    container = PACKED_CONTAINER if isinstance(payload, PackedTensor) \
+    container = payload.container if isinstance(payload, PackedTensor) \
         else None
     entry = _d._tuned_entry(cfg, "fusedconv_quant", M, K, N, x.dtype,
                             leaf=leaf, container=container)
@@ -149,8 +152,9 @@ def _conv_fused(cp, x, *, cfg, bias, activation, out_dtype, leaf, pool, M):
         return None
     packed_kernel = False
     if isinstance(payload, PackedTensor):
-        if payload.axis % len(payload.shape) == 0 and K % 2 == 0:
-            w_q, packed_kernel = payload.data, True
+        if payload.axis % len(payload.shape) == 0 \
+                and K % payload.per_byte == 0:
+            w_q, packed_kernel = payload.data, payload.container
         else:
             w_q = payload.unpack()
         scales = payload.scales.reshape(N)
@@ -244,11 +248,18 @@ def _compile_stack(stack, masks, *, pattern, bits, rules):
 
     8-bit: ``{"w_q", "w_s"}`` int8 containers.  <=4-bit: the codes are
     bit-packed two per byte along K into a ``{"w_qp", "w_s"}`` uint8
-    container.  Returns (leaves, code_bytes, container_bytes, None)."""
+    container; <=2-bit codes go four per byte into the ``int2`` family's
+    ``{"w_q2", "w_s"}`` container when K divides by 4 (else they ride the
+    int4x2 container — exact either way).  Returns (leaves, code_bytes,
+    container_bytes, None)."""
     del pattern, rules
     masked = stack if masks is None else stack * masks
     w_q, w_s = _quantize_stack(masked, bits)
     code_bytes = int(w_q.size + w_s.size * 4)
+    if bits <= 2 and stack.shape[1] % 4 == 0:
+        w_q2 = pack_codes(w_q, axis=1, bits=2)
+        leaves = {"w_q2": w_q2, "w_s": w_s}
+        return leaves, code_bytes, int(w_q2.size + w_s.size * 4), None
     if bits <= 4:
         w_qp = pack_int4(w_q, axis=1)
         leaves = {"w_qp": w_qp, "w_s": w_s}
@@ -289,6 +300,28 @@ def _sample(rng):
         None
 
 
+def _validate_scales(name: str, key_leaf: str):
+    """Scale-vector lint shared by the quant-shaped families: the
+    per-output-channel scales must match the code leaf's N axis (the
+    last axis in both unstacked and stacked forms — w_qp/w_q2 containers
+    always pack along K, so N survives packing)."""
+
+    def validate(p, pattern):
+        del pattern
+        w, s = p.get(key_leaf), p.get("w_s")
+        if w is None or s is None:
+            return
+        if s.shape[-1] != w.shape[-1]:
+            raise ValueError(
+                f"{name} payload: scale leaf 'w_s' has {s.shape[-1]} "
+                f"channels but code leaf {key_leaf!r} has N="
+                f"{w.shape[-1]} output columns (shapes {tuple(s.shape)} "
+                f"vs {tuple(w.shape)}) — stale scales from a different "
+                "compile would dequantise silently wrong")
+
+    return validate
+
+
 def _sample_packed(rng):
     qt = quantize(rng.normal(size=(16, 8)).astype(np.float32), 4, axis=1)
     return {"w_qp": pack_int4(jnp.asarray(qt.values), axis=0),
@@ -313,6 +346,7 @@ PACKED_FAMILY = _reg.register(_reg.PayloadFamily(
     leaf_ndim={"w_qp": 2, "w_s": 1},
     container_leaves=("w_qp",),
     sample=_sample_packed,
+    validate=_validate_scales("quant_packed", "w_qp"),
 ))
 
 FAMILY = _reg.register(_reg.PayloadFamily(
@@ -332,6 +366,7 @@ FAMILY = _reg.register(_reg.PayloadFamily(
     leaf_ndim={"w_q": 2, "w_s": 1},
     init_modes={"int8": _init_int8},
     sample=_sample,
+    validate=_validate_scales("quant", "w_q"),
 ))
 
 POLICY = _reg.register_policy(_reg.PolicyCompiler(

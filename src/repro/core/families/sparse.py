@@ -20,8 +20,8 @@ import numpy as np
 
 from .. import dispatch as _d
 from .. import payload_registry as _reg
-from ..quant import PACKED_CONTAINER, PackedTensor, pack_int4, quantize, \
-    unpack_int4
+from ..quant import PACKED_CONTAINER, PackedTensor, container_tag, \
+    pack_codes, pack_int4, quantize, unpack_codes, unpack_int4
 from ..sparsity import CompressedLinear, compress, decompress
 from ._util import he_init
 
@@ -57,23 +57,39 @@ def _apply_sparse(p, x, *, pattern, cfg, bias, activation, compute_dtype,
     return _d._epilogue(y, bias, activation, compute_dtype)
 
 
+def _container_per_byte(rows: int, bk: int):
+    """Infer the sub-byte container width from the packed bk-axis rows:
+    ``ceil(bk/2)`` rows -> int4x2 (2 codes/byte), ``ceil(bk/4)`` rows ->
+    int2x4 (4 codes/byte).  The int4x2 form is checked first, so the
+    (tiny-bk) case where both row counts coincide resolves to the
+    historical container.  Returns None when neither matches."""
+    if rows == (bk + 1) // 2:
+        return 2
+    if rows == -(-bk // 4):
+        return 4
+    return None
+
+
 def _apply_sparse_packed(p, x, *, pattern, cfg, bias, activation,
                          compute_dtype, leaf, tag):
-    # bit-packed int4 sparse container: uint8 (P, ceil(bk/2), bn)
+    # bit-packed sparse container: uint8 (P, ceil(bk/2), bn) int4x2 or
+    # (P, ceil(bk/4), bn) int2x4
     if pattern is None:
         raise ValueError(_NEED_PATTERN)
     wp = p["w_blkp"]
     bk, bn = pattern.block
-    if wp.shape[-2] != (bk + 1) // 2 or wp.shape[-1] != bn:
+    per_byte = _container_per_byte(int(wp.shape[-2]), bk)
+    if per_byte is None or wp.shape[-1] != bn:
         raise ValueError(
             f"packed sparse container block {tuple(wp.shape[-2:])} does not "
             f"match the pattern block {(bk, bn)} (expected "
-            f"({(bk + 1) // 2}, {bn})) — w_blkp leaves are packed two codes "
-            "per byte along bk")
+            f"({(bk + 1) // 2}, {bn}) for int4x2 or ({-(-bk // 4)}, {bn}) "
+            "for int2x4) — w_blkp leaves are packed along bk")
+    width = 8 // per_byte
     K, N = pattern.shape
     entry = _d._tuned_entry(cfg, tag + "sparse", _d._lead_rows(x), K, N,
                             x.dtype, pattern, leaf=leaf,
-                            container=PACKED_CONTAINER)
+                            container=container_tag(per_byte))
     use_k = _d._pick_backend(
         cfg, entry, _d.sparse_kernel_eligible(pattern, wp.dtype),
         leaf=leaf,
@@ -84,14 +100,14 @@ def _apply_sparse_packed(p, x, *, pattern, cfg, bias, activation,
         cl = CompressedLinear(
             pattern=pattern,
             blocks=PackedTensor(data=wp, shape=(int(wp.shape[0]), bk, bn),
-                                axis=1, bits=4),
-            scales=p.get("w_s"), bits=4)
+                                axis=1, bits=width, per_byte=per_byte),
+            scales=p.get("w_s"), bits=width)
         return _d.sparse_linear(x, cl, bm=_d._effective_bm(bm, x.dtype),
                                 bias=bias, activation=activation,
                                 out_dtype=compute_dtype,
                                 interpret=cfg.run_interpret, use_kernel=True)
-    y = _d._sparse_apply_jnp(unpack_int4(wp, bk, axis=-2), p.get("w_s"), x,
-                             pattern, compute_dtype)
+    y = _d._sparse_apply_jnp(unpack_codes(wp, bk, axis=-2, bits=width),
+                             p.get("w_s"), x, pattern, compute_dtype)
     return _d._epilogue(y, bias, activation, compute_dtype)
 
 
@@ -146,7 +162,7 @@ def _conv_fused(cp, x, *, cfg, bias, activation, out_dtype, leaf, pool, M):
     K, N = cp.K, cp.N
     pat = payload.pattern
     eligible = _d.sparse_kernel_eligible(pat, None)
-    container = PACKED_CONTAINER if payload.packed else None
+    container = payload.blocks.container if payload.packed else None
     entry = _d._tuned_entry(cfg, "fusedconv_sparse", M, K, N, x.dtype, pat,
                             leaf=leaf, container=container)
     if not _d._pick_backend(
@@ -154,8 +170,8 @@ def _conv_fused(cp, x, *, cfg, bias, activation, out_dtype, leaf, pool, M):
             predicate=f"sparse_kernel_eligible(block={pat.block})"):
         return None
     if payload.packed and payload.blocks.axis % 3 == 1 \
-            and pat.block[0] % 2 == 0:
-        blocks, packed_kernel = payload.blocks.data, True
+            and pat.block[0] % payload.blocks.per_byte == 0:
+        blocks, packed_kernel = payload.blocks.data, payload.blocks.container
     else:
         blocks = payload.block_values() if payload.packed else payload.blocks
         packed_kernel = False
@@ -191,9 +207,20 @@ def _decompress(leaf, *, pattern, shape, dtype):
     return out
 
 
+def _unpack_blkp(wp, bk):
+    """Container-agnostic bk-axis unpack for a raw ``w_blkp`` buffer."""
+    per_byte = _container_per_byte(int(wp.shape[-2]), bk)
+    if per_byte is None:
+        raise ValueError(
+            f"w_blkp container rows {int(wp.shape[-2])} match neither the "
+            f"int4x2 ({(bk + 1) // 2}) nor int2x4 ({-(-bk // 4)}) form for "
+            f"pattern bk={bk}")
+    return unpack_codes(wp, bk, axis=-2, bits=8 // per_byte)
+
+
 def _decompress_packed(leaf, *, pattern, shape, dtype):
     assert pattern is not None, "compiled sparse leaf without a pattern"
-    blk = unpack_int4(leaf["w_blkp"], pattern.block[0], axis=-2)
+    blk = _unpack_blkp(leaf["w_blkp"], pattern.block[0])
     leaf = {**{k: v for k, v in leaf.items() if k != "w_blkp"},
             "w_blk": blk}
     return _decompress(leaf, pattern=pattern, shape=shape, dtype=dtype)
@@ -205,10 +232,12 @@ def _decompress_packed(leaf, *, pattern, shape, dtype):
 def _tune_prepare(leaves, pattern, K):
     """Packed container -> unpacked block codes for the runner."""
     del K
+    wp = leaves["w_blkp"]
+    bk = pattern.block[0]
+    per_byte = _container_per_byte(int(wp.shape[-2]), bk) or 2
     leaf = {**{k: v for k, v in leaves.items() if k != "w_blkp"},
-            "w_blk": unpack_int4(leaves["w_blkp"], pattern.block[0],
-                                 axis=-2)}
-    return leaf, PACKED_CONTAINER
+            "w_blk": _unpack_blkp(wp, bk)}
+    return leaf, container_tag(per_byte)
 
 
 def _tune_runner(cand, x, leaf, pattern, interpret):
@@ -262,8 +291,13 @@ def _compile_stack(stack, masks, *, pattern, bits, rules):
     blk = jnp.asarray(np.stack(blk_list))
     cont_bytes = total_bytes
     if rules.quantize_sparse and bits <= 4:
-        # bit-pack the int4 block codes two per byte along bk
-        w_blkp = pack_int4(blk, axis=2)
+        # bit-pack the sub-byte block codes along bk: four per byte for
+        # <=2-bit codes when bk divides by 4 (int2x4), else two per byte
+        # (int4x2 — 2-bit codes fit a nibble exactly, so this stays exact)
+        if bits <= 2 and block[0] % 4 == 0:
+            w_blkp = pack_codes(blk, axis=2, bits=2)
+        else:
+            w_blkp = pack_int4(blk, axis=2)
         leaves = {"w_blkp": w_blkp}
         cont_bytes += int(w_blkp.size) - int(blk.size)
     else:
@@ -310,6 +344,25 @@ def _init_sparse_int8(key, K, N, *, dtype, pattern):
     return {"w_blk": jax.random.randint(key, (P, bk, bn), -127, 128,
                                         dtype=jnp.int8),
             "w_s": jnp.full((N,), 1.0 / (127 * np.sqrt(K)), jnp.float32)}
+
+
+def _validate_blocks(name, key_leaf):
+    """P-axis lint shared by the block-compacted families: the compacted
+    block leaf must hold exactly the pattern's present blocks."""
+
+    def validate(p, pattern):
+        w = p.get(key_leaf)
+        if w is None or pattern is None:
+            return
+        P = pattern.n_blocks_present
+        if w.shape[-3] != P:
+            raise ValueError(
+                f"{name} payload: block leaf {key_leaf!r} holds "
+                f"{w.shape[-3]} blocks (shape {tuple(w.shape)}) but the "
+                f"pattern has {P} present blocks — a truncated or "
+                "mismatched block axis would scatter the wrong weights")
+
+    return validate
 
 
 def _sample_pattern(rng):
@@ -359,6 +412,7 @@ PACKED_FAMILY = _reg.register(_reg.PayloadFamily(
     legacy_tp=("model", None, None),
     container_leaves=("w_blkp",),
     sample=_sample_packed,
+    validate=_validate_blocks("sparse_packed", "w_blkp"),
 ))
 
 FAMILY = _reg.register(_reg.PayloadFamily(
@@ -377,10 +431,14 @@ FAMILY = _reg.register(_reg.PayloadFamily(
     tune_runner=_tune_runner,
     leaf_kn=_leaf_kn,
     leaf_ndim={"w_blk": 3, "w_s": 1},
+    # float path stores f32/bf16 blocks; quantize_sparse stores int8
+    # codes with w_s scales — both are this family's legitimate forms
+    leaf_dtype_kinds={"w_blk": "fi"},
     shard_tails={"w_blk": "pattern"},
     legacy_tp=("model", None, None),
     init_modes={"sparse": _init_sparse, "sparse_int8": _init_sparse_int8},
     sample=_sample,
+    validate=_validate_blocks("sparse", "w_blk"),
 ))
 
 POLICY = _reg.register_policy(_reg.PolicyCompiler(

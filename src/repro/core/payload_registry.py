@@ -48,6 +48,7 @@ __all__ = [
     "all_families",
     "get",
     "family_for_leaves",
+    "validate_leaves",
     "family_for_leaf_name",
     "family_of_payload",
     "unwrap_payload",
@@ -120,6 +121,13 @@ class PayloadFamily:
     * ``sample(rng)`` — ``(leaves, pattern)`` exemplar used to
       parametrise checkpoint round-trip / sharding-spec tests over the
       whole registry.
+    * ``validate(leaves, pattern)`` — family-specific structural lint
+      (cross-leaf shape consistency: stale scale vectors, truncated
+      block axes); raise ``ValueError`` prefixed with the family name.
+      :func:`validate_leaves` runs the generic ndim/dtype-kind checks
+      first and then this hook — dispatch calls it on every leaf dict
+      so a corrupted checkpoint fails loudly at the first forward, not
+      as silently-wrong numerics.
     * ``needs_pattern`` — the family's leaves are meaningless without
       the static pattern side-table.
     * ``code_leaf`` — the leaf holding the quantised codes (bit-width
@@ -150,6 +158,14 @@ class PayloadFamily:
     init_modes: Mapping[str, Callable] = dataclasses.field(
         default_factory=dict)
     sample: Optional[Callable] = None
+    validate: Optional[Callable] = None
+    # per-leaf allowed dtype *kinds* ("fi" = float or signed-int) for
+    # leaves whose storage dtype legitimately varies (sparse blocks are
+    # f32/bf16 on the float path, int8 when quantize_sparse folds scales
+    # in).  Leaves not named here are pinned to their sample exemplar's
+    # kind by validate_leaves.
+    leaf_dtype_kinds: Mapping[str, str] = dataclasses.field(
+        default_factory=dict)
 
     def __post_init__(self):
         if self.key_leaf not in self.leaf_names:
@@ -235,6 +251,78 @@ def family_for_leaves(p: Mapping[str, Any]) -> Optional[PayloadFamily]:
         if fam.key_leaf in p:
             return fam
     return None
+
+
+_DTYPE_KINDS: Dict[str, Dict[str, str]] = {}
+
+
+def _sample_dtype_kinds(fam: PayloadFamily) -> Dict[str, str]:
+    """Per-leaf dtype *kinds* ('f'/'i'/'u') from the family's exemplar —
+    invariant per family (an int8 code leaf is never legitimately float;
+    a uint8 container is never legitimately signed), so they double as a
+    corruption lint without per-family dtype tables."""
+    kinds = _DTYPE_KINDS.get(fam.name)
+    if kinds is None:
+        if fam.sample is None:
+            kinds = {}
+        else:
+            import numpy as np
+
+            leaves, _ = fam.sample(np.random.default_rng(0))
+            kinds = {k: np.dtype(v.dtype).kind for k, v in leaves.items()}
+        _DTYPE_KINDS[fam.name] = kinds
+    return kinds
+
+
+_KIND_DESC = {"f": "float", "i": "signed-integer (codes)",
+              "u": "unsigned-integer (bit-packed container)"}
+
+
+def validate_leaves(p: Mapping[str, Any],
+                    pattern: Any = None) -> Optional[PayloadFamily]:
+    """Structural lint of a compressed leaf dict before execution.
+
+    Checks, in order: per-leaf ndim against the family's ``leaf_ndim``
+    declaration (one extra leading axis allowed for stacked leaves),
+    per-leaf dtype *kind* against the family's sample exemplar (a float
+    cast of an int8 code leaf or a sign change of a uint8 container is
+    always corruption), then the family's own ``validate`` hook
+    (cross-leaf shape consistency: stale scale vectors, truncated block
+    axes vs the pattern).  Raises ``ValueError`` naming the family and
+    leaf; returns the matched family (None when no weight leaf is
+    present).  Cheap (shape/dtype metadata only — works on tracers), so
+    dispatch runs it on every leaf dict at trace time.
+    """
+    import numpy as np
+
+    fam = family_for_leaves(p)
+    if fam is None:
+        return None
+    kinds = _sample_dtype_kinds(fam)
+    for k, v in p.items():
+        if k not in fam.leaf_names or not hasattr(v, "dtype"):
+            continue
+        nd = fam.leaf_ndim.get(k)
+        if nd is not None and v.ndim not in (nd, nd + 1):
+            raise ValueError(
+                f"{fam.name} payload: leaf {k!r} has ndim {v.ndim} "
+                f"(shape {tuple(v.shape)}), expected {nd} (or {nd + 1} "
+                "stacked) — this leaf does not belong to the family's "
+                "declared geometry")
+        want = fam.leaf_dtype_kinds.get(k) or kinds.get(k)
+        # ml_dtypes customs (bfloat16, fp8) report kind 'V' — they are
+        # float storage, not corruption
+        got = np.dtype(v.dtype).kind
+        got = "f" if got == "V" else got
+        if want is not None and got not in want:
+            desc = " or ".join(_KIND_DESC.get(w, w) for w in want)
+            raise ValueError(
+                f"{fam.name} payload: leaf {k!r} has dtype {v.dtype}, "
+                f"expected a {desc} leaf — a cast (checkpoint widening "
+                "/ tree_map dtype drift) corrupted the stored format")
+    if fam.validate is not None:
+        fam.validate(p, pattern)
+    return fam
 
 
 def family_for_leaf_name(name: str) -> Optional[PayloadFamily]:

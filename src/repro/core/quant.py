@@ -22,22 +22,47 @@ import numpy as np
 
 __all__ = [
     "PACKED_CONTAINER",
+    "PACKED_CONTAINER_INT2",
     "PackedTensor",
     "QuantizedTensor",
+    "codes_per_byte",
+    "container_tag",
     "quantize",
     "dequantize",
     "fake_quant",
+    "pack_codes",
     "pack_int4",
     "pack_quantized",
     "pick_pack_axis",
     "qmax",
+    "unpack_codes",
     "unpack_int4",
 ]
 
-# Container-dtype tag for packed int4 payloads (two codes per uint8 byte).
-# Autotune cache keys carry it so tuned entries never cross packed and
-# unpacked containers — on real hardware they have different HBM traffic.
+# Container-dtype tags for bit-packed payloads (two 4-bit codes or four
+# 2-bit codes per uint8 byte).  Autotune cache keys carry the tag so tuned
+# entries never cross packed and unpacked containers — on real hardware
+# they have different HBM traffic.
 PACKED_CONTAINER = "int4x2"
+PACKED_CONTAINER_INT2 = "int2x4"
+
+
+def codes_per_byte(bits: int) -> int:
+    """Codes a uint8 byte holds at ``bits`` code width (1 for int8)."""
+    if bits <= 2:
+        return 4
+    if bits <= 4:
+        return 2
+    return 1
+
+
+def container_tag(per_byte: int) -> str:
+    """Autotune container tag for a packing density (codes per byte)."""
+    if per_byte == 4:
+        return PACKED_CONTAINER_INT2
+    if per_byte == 2:
+        return PACKED_CONTAINER
+    raise ValueError(f"no packed container holds {per_byte} codes/byte")
 
 
 def qmax(bits: int) -> int:
@@ -73,28 +98,78 @@ def dequantize(qt: QuantizedTensor) -> jnp.ndarray:
     return qt.values.astype(jnp.float32) * qt.scales.reshape(shape)
 
 
-# ------------------------------------------------------- int4 bit-packing
+# ------------------------------------------- sub-byte code bit-packing
+
+
+def pack_codes(values: jnp.ndarray, axis: int = 0, bits: int = 4) -> jnp.ndarray:
+    """Pack sub-byte codes ``codes_per_byte(bits)``-per-byte along ``axis``.
+
+    The j-th code of each byte occupies bit range ``[j*w, (j+1)*w)`` where
+    ``w = 8 // codes_per_byte(bits)`` — for 4-bit codes this is exactly the
+    historical low-nibble/high-nibble layout, so ``pack_codes(v, ax, 4)``
+    is byte-identical to the original ``pack_int4``.  An axis that is not
+    a multiple of the code count is zero-padded (the container then holds
+    ``ceil(n / per_byte)`` bytes; :func:`unpack_codes` slices the pad back
+    off).  Pure jnp — usable on host arrays, under jit, and inside Pallas
+    kernel bodies.
+    """
+    per_byte = codes_per_byte(bits)
+    if per_byte == 1:
+        raise ValueError(f"pack_codes needs <=4-bit codes, got bits={bits}")
+    width = 8 // per_byte
+    v = jnp.asarray(values)
+    axis = axis % v.ndim
+    rem = v.shape[axis] % per_byte
+    if rem:
+        pad = [(0, 0)] * v.ndim
+        pad[axis] = (0, per_byte - rem)
+        v = jnp.pad(v, pad)
+    mask = jnp.uint8((1 << width) - 1)
+    fields = jnp.bitwise_and(v.astype(jnp.uint8), mask)
+    out = jax.lax.slice_in_dim(fields, 0, None, stride=per_byte, axis=axis)
+    for j in range(1, per_byte):
+        part = jax.lax.slice_in_dim(fields, j, None, stride=per_byte, axis=axis)
+        out = jnp.bitwise_or(out, jnp.left_shift(part, jnp.uint8(j * width)))
+    return out
+
+
+def unpack_codes(packed: jnp.ndarray, length: int, axis: int = 0,
+                 bits: int = 4) -> jnp.ndarray:
+    """Exact inverse of :func:`pack_codes`: uint8 container -> int8 codes.
+
+    ``length`` is the logical (pre-padding) size of ``axis``.  Fields are
+    sign-extended via ``(c ^ s) - s`` with ``s = 2**(w-1)``, so the full
+    signed code range round-trips bit-exactly.
+    """
+    per_byte = codes_per_byte(bits)
+    if per_byte == 1:
+        raise ValueError(f"unpack_codes needs <=4-bit codes, got bits={bits}")
+    width = 8 // per_byte
+    p = jnp.asarray(packed)
+    axis = axis % p.ndim
+    mask = jnp.uint8((1 << width) - 1)
+    parts = [jnp.bitwise_and(jnp.right_shift(p, jnp.uint8(j * width)), mask)
+             for j in range(per_byte)]
+    both = jnp.stack(parts, axis=axis + 1)         # (..., n/pb, pb, ...)
+    shape = list(p.shape)
+    shape[axis] *= per_byte
+    both = both.reshape(shape)                     # interleave low-field first
+    sign = jnp.uint8(1 << (width - 1))
+    codes = jnp.bitwise_xor(both, sign).astype(jnp.int8) - jnp.int8(1 << (width - 1))
+    if int(length) != shape[axis]:
+        codes = jax.lax.slice_in_dim(codes, 0, int(length), axis=axis)
+    return codes
 
 
 def pack_int4(values: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
     """Pack int4 codes (int8 storage, range [-8, 7]) two-per-byte.
 
     Adjacent pairs along ``axis`` share one uint8: the even index is the
-    low nibble, the odd index the high nibble.  An odd-length axis is
-    zero-padded by one code (the container then holds ``ceil(n/2)`` bytes;
-    :func:`unpack_int4` slices the pad back off).  Pure jnp — usable on
-    host arrays, under jit, and inside Pallas kernel bodies.
+    low nibble, the odd index the high nibble.  Thin wrapper over
+    :func:`pack_codes` at ``bits=4`` — byte-identical to the historical
+    int4-only implementation (pinned by a test).
     """
-    v = jnp.asarray(values)
-    axis = axis % v.ndim
-    if v.shape[axis] % 2:
-        pad = [(0, 0)] * v.ndim
-        pad[axis] = (0, 1)
-        v = jnp.pad(v, pad)
-    nib = jnp.bitwise_and(v.astype(jnp.uint8), jnp.uint8(0x0F))
-    lo = jax.lax.slice_in_dim(nib, 0, None, stride=2, axis=axis)
-    hi = jax.lax.slice_in_dim(nib, 1, None, stride=2, axis=axis)
-    return jnp.bitwise_or(lo, jnp.left_shift(hi, jnp.uint8(4)))
+    return pack_codes(values, axis=axis, bits=4)
 
 
 def unpack_int4(packed: jnp.ndarray, length: int, axis: int = 0) -> jnp.ndarray:
@@ -104,42 +179,36 @@ def unpack_int4(packed: jnp.ndarray, length: int, axis: int = 0) -> jnp.ndarray:
     sign-extended via ``(n ^ 8) - 8``, so the full int4 range [-8, 7]
     round-trips bit-exactly.
     """
-    p = jnp.asarray(packed)
-    axis = axis % p.ndim
-    lo = jnp.bitwise_and(p, jnp.uint8(0x0F))
-    hi = jnp.right_shift(p, jnp.uint8(4))
-    both = jnp.stack([lo, hi], axis=axis + 1)      # (..., n/2, 2, ...)
-    shape = list(p.shape)
-    shape[axis] *= 2
-    both = both.reshape(shape)                     # interleave: lo even, hi odd
-    codes = jnp.bitwise_xor(both, jnp.uint8(8)).astype(jnp.int8) - jnp.int8(8)
-    if int(length) != shape[axis]:
-        codes = jax.lax.slice_in_dim(codes, 0, int(length), axis=axis)
-    return codes
+    return unpack_codes(packed, length, axis=axis, bits=4)
 
 
-def pick_pack_axis(shape: Tuple[int, ...], preferred: int = 0) -> int:
-    """Packing axis choice: ``preferred`` when its length is even, else the
-    first even-length axis (exact halving, no pad byte per row), else
-    ``preferred`` with one pad code."""
+def pick_pack_axis(shape: Tuple[int, ...], preferred: int = 0,
+                   per_byte: int = 2) -> int:
+    """Packing axis choice: ``preferred`` when its length divides evenly
+    into bytes (``per_byte`` codes each), else the first such axis (exact
+    division, no pad byte per row), else ``preferred`` with pad codes."""
     preferred = preferred % len(shape)
-    if shape[preferred] % 2 == 0:
+    if shape[preferred] % per_byte == 0:
         return preferred
     for i, n in enumerate(shape):
-        if n % 2 == 0:
+        if n % per_byte == 0:
             return i
     return preferred
 
 
 @dataclasses.dataclass
 class PackedTensor:
-    """Bit-packed int4 storage container — a first-class payload family.
+    """Bit-packed sub-byte storage container — a first-class payload family.
 
-    ``data`` is the uint8 buffer (two codes per byte along ``axis``);
-    ``shape`` is the logical int4-code shape the buffer unpacks to.  For a
-    quantised-linear payload, ``scales`` carries the per-output-channel
-    dequant scales (shape ``(N,)`` for a logical ``(K, N)`` weight) — the
-    packed analogue of :class:`QuantizedTensor`.  Inside a
+    ``data`` is the uint8 buffer (``per_byte`` codes per byte along
+    ``axis``: 2 for the int4x2 container, 4 for int2x4); ``shape`` is the
+    logical code shape the buffer unpacks to.  ``per_byte`` is explicit
+    rather than derived from ``bits`` because 2-bit codes may legitimately
+    ride the historical int4x2 container (e.g. sparse blocks whose bk axis
+    is not a multiple of 4).  For a quantised-linear payload, ``scales``
+    carries the per-output-channel dequant scales (shape ``(N,)`` for a
+    logical ``(K, N)`` weight) — the packed analogue of
+    :class:`QuantizedTensor`.  Inside a
     :class:`repro.core.sparsity.CompressedLinear`, ``scales`` stays None
     (the CompressedLinear holds them, exactly as on the int8 path).
 
@@ -148,21 +217,37 @@ class PackedTensor:
     """
 
     data: jnp.ndarray                     # uint8 container
-    shape: Tuple[int, ...]                # logical int4-code shape
+    shape: Tuple[int, ...]                # logical code shape
     axis: int = 0                         # packed axis
     scales: Optional[jnp.ndarray] = None  # (N,) f32 per-out-channel
     bits: int = 4
+    per_byte: int = 2                     # codes per byte (2=int4x2, 4=int2x4)
 
     def __post_init__(self):
         self.shape = tuple(int(s) for s in self.shape)
+        if self.per_byte not in (2, 4):
+            raise ValueError(
+                f"PackedTensor per_byte must be 2 (int4x2) or 4 (int2x4), "
+                f"got {self.per_byte}")
         expect = list(self.shape)
         ax = self.axis % len(expect)
-        expect[ax] = (expect[ax] + 1) // 2
+        expect[ax] = -(-expect[ax] // self.per_byte)
         if tuple(self.data.shape) != tuple(expect):
             raise ValueError(
                 f"PackedTensor container shape {tuple(self.data.shape)} does "
                 f"not match logical shape {self.shape} packed along axis "
-                f"{self.axis} (expected {tuple(expect)})")
+                f"{self.axis} at {self.per_byte} codes/byte "
+                f"(expected {tuple(expect)})")
+
+    @property
+    def container(self) -> str:
+        """Autotune container tag ("int4x2" / "int2x4")."""
+        return container_tag(self.per_byte)
+
+    @property
+    def code_width(self) -> int:
+        """Bit width of one packed field (4 for int4x2, 2 for int2x4)."""
+        return 8 // self.per_byte
 
     @property
     def container_bytes(self) -> int:
@@ -174,8 +259,8 @@ class PackedTensor:
 
     def unpack(self) -> jnp.ndarray:
         """Logical int8 codes (exact round trip)."""
-        return unpack_int4(self.data, self.shape[self.axis % len(self.shape)],
-                           axis=self.axis)
+        return unpack_codes(self.data, self.shape[self.axis % len(self.shape)],
+                            axis=self.axis, bits=self.code_width)
 
     def dequantize(self) -> jnp.ndarray:
         """f32 weight: codes x per-output-channel scales (last axis)."""
@@ -193,15 +278,15 @@ class PackedTensor:
 
 
 def _pt_flatten(pt: PackedTensor):
-    return (pt.data, pt.scales), (pt.shape, pt.axis, pt.bits)
+    return (pt.data, pt.scales), (pt.shape, pt.axis, pt.bits, pt.per_byte)
 
 
 def _pt_unflatten(aux, children):
-    shape, axis, bits = aux
+    shape, axis, bits, per_byte = aux
     data, scales = children
     pt = object.__new__(PackedTensor)  # skip shape check: leaves may be
     pt.data, pt.scales = data, scales  # tracers/None during tree transforms
-    pt.shape, pt.axis, pt.bits = shape, axis, bits
+    pt.shape, pt.axis, pt.bits, pt.per_byte = shape, axis, bits, per_byte
     return pt
 
 
@@ -209,19 +294,24 @@ jax.tree_util.register_pytree_node(PackedTensor, _pt_flatten, _pt_unflatten)
 
 
 def pack_quantized(qt: QuantizedTensor, preferred_axis: int = 0) -> PackedTensor:
-    """Pack a 4-bit :class:`QuantizedTensor` into its bit-packed container.
+    """Pack a sub-byte :class:`QuantizedTensor` into its bit-packed container.
 
-    The packing axis follows :func:`pick_pack_axis` (prefer an even-length
-    axis so the container is exactly half the int8 bytes).  Scales must be
-    per-*last*-axis (out-channel), which is how every 4-bit leaf in this
-    repo is quantised.
+    <=2-bit codes go four-per-byte (int2x4), 3/4-bit codes two-per-byte
+    (int4x2).  The packing axis follows :func:`pick_pack_axis` (prefer an
+    axis whose length divides into whole bytes).  Scales must be
+    per-*last*-axis (out-channel), which is how every sub-byte leaf in
+    this repo is quantised.
     """
     if qt.bits > 4:
         raise ValueError(f"pack_quantized needs <=4-bit codes, got {qt.bits}")
-    ax = pick_pack_axis(qt.values.shape, preferred_axis)
+    per_byte = codes_per_byte(qt.bits)
+    width = 8 // per_byte
+    ax = pick_pack_axis(qt.values.shape, preferred_axis, per_byte=per_byte)
     return PackedTensor(
-        data=pack_int4(qt.values, axis=ax), shape=tuple(qt.values.shape),
-        axis=ax, scales=qt.scales.reshape(qt.values.shape[-1]), bits=qt.bits)
+        data=pack_codes(qt.values, axis=ax, bits=width),
+        shape=tuple(qt.values.shape), axis=ax,
+        scales=qt.scales.reshape(qt.values.shape[-1]), bits=qt.bits,
+        per_byte=per_byte)
 
 
 def fake_quant(w: jnp.ndarray, bits: int = 8, axis: int = -1) -> jnp.ndarray:

@@ -24,7 +24,7 @@ from typing import Optional, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
-from .quant import PackedTensor, pack_int4, pick_pack_axis
+from .quant import PackedTensor, pack_codes
 
 __all__ = [
     "BlockSparsePattern",
@@ -232,20 +232,29 @@ def compress(
                     f"pack=True needs <=4-bit codes, got quant_bits="
                     f"{quant_bits} — int8 containers already hold 8-bit "
                     "codes exactly")
+            # <=2-bit codes go four per byte (int2x4) when the bk axis
+            # divides by 4 — quarter the container bytes; otherwise the
+            # historical two-per-byte int4x2 layout (2-bit codes fit a
+            # nibble exactly, so the fallback stays bit-exact).
+            per_byte = 4 if (quant_bits <= 2 and codes.shape[1] % 4 == 0) \
+                else 2
             # prefer the bk axis (axis 1 of (P, bk, bn)) — the kernel
-            # prologue unpacks along it; bn when bk is odd (exact
-            # halving, trace-time unpack); both odd: pad one nibble row
-            # per block along bk.  Never the P axis — a byte must not
-            # pair codes from two different blocks.
-            if codes.shape[1] % 2 == 0:
+            # prologue unpacks along it; bn when bk does not divide
+            # (exact division, trace-time unpack); neither: pad codes
+            # along bk.  Never the P axis — a byte must not pair codes
+            # from two different blocks.
+            if codes.shape[1] % per_byte == 0:
                 ax = 1
-            elif codes.shape[2] % 2 == 0:
+            elif codes.shape[2] % per_byte == 0:
                 ax = 2
             else:
                 ax = 1
+            width = 8 // per_byte
             blocks = PackedTensor(
-                data=jnp.asarray(np.asarray(pack_int4(codes, axis=ax))),
-                shape=codes.shape, axis=ax, bits=quant_bits)
+                data=jnp.asarray(np.asarray(
+                    pack_codes(codes, axis=ax, bits=width))),
+                shape=codes.shape, axis=ax, bits=quant_bits,
+                per_byte=per_byte)
         else:
             blocks = jnp.asarray(codes)
         return CompressedLinear(

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .sparse_matmul.kernel import ACTIVATIONS, _check_activation, _pad_rows
+from .sparse_matmul.kernel import (ACTIVATIONS, _check_activation,
+                                   _pad_rows, apply_activation)
 
 __all__ = ["fc_stack_matmul", "fc_stack_eligible"]
 
@@ -48,7 +49,7 @@ def _stack_kernel(*refs, n_layers: int, activations):
         h = jnp.dot(h, w, preferred_element_type=jnp.float32) + b[None, :]
         act = activations[i]
         if act is not None:
-            h = ACTIVATIONS[act](h)
+            h = apply_activation(h, act)
     o_ref[...] = h.astype(o_ref.dtype)
 
 

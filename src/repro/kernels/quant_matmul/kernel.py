@@ -28,16 +28,19 @@ from ..sparse_matmul.kernel import (
     ACTIVATIONS,
     _check_activation,
     _check_pool,
+    _decode_rows,
     _im2col_tile,
+    _packed_ratio,
     _pool_tile,
     _unpack_int4_rows,
+    apply_activation,
 )
 
 __all__ = ["quant_matmul", "quant_conv"]
 
 
 def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
-            activation: Optional[str], packed: bool = False):
+            activation, packed=False):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -47,9 +50,10 @@ def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
     x = x_ref[...].astype(jnp.float32)
     w = w_ref[...]
     if packed:
-        # bit-packed int4 container: (bk/2, bn) uint8 tile decoded to
-        # (bk, bn) int8 codes in-register — HBM->VMEM at half the bytes
-        w = _unpack_int4_rows(w)
+        # bit-packed sub-byte container: (bk/ratio, bn) uint8 tile decoded
+        # to (bk, bn) int8 codes in-register — HBM->VMEM at a fraction of
+        # the bytes
+        w = _decode_rows(w, packed)
     w = w.astype(jnp.float32)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -57,19 +61,18 @@ def _kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, *, n_k: int,
     def _emit():
         scale = s_ref[0].astype(jnp.float32)  # (bn,) per-out-channel
         out = acc_ref[...] * scale[None, :] + b_ref[0].astype(jnp.float32)[None, :]
-        if activation is not None:
-            out = ACTIVATIONS[activation](out)
+        out = apply_activation(out, activation)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
 def _kernel_packed_db(x_ref, w_hbm, s_ref, b_ref, o_ref, acc_ref, w_buf,
                       w_sems, *, n_n: int, n_k: int, w_bk: int, bn: int,
-                      activation: Optional[str]):
+                      activation, packed=True):
     """Packed-container (m, n, k) step with a double-buffered prologue.
 
-    The uint8 (K/2, N) container stays in HBM; each step's (w_bk, bn)
+    The uint8 (K/ratio, N) container stays in HBM; each step's (w_bk, bn)
     tile is streamed into a two-slot VMEM buffer by hand, with the next
-    (n, k) step's DMA started before this step's wait — the int4 nibble
+    (n, k) step's DMA started before this step's wait — the sub-byte
     decode overlaps the next tile's copy.  Steps are linearised as
     ``n * n_k + k`` (the grid's own iteration order), so the prefetch
     crosses n-boundaries too.
@@ -103,15 +106,14 @@ def _kernel_packed_db(x_ref, w_hbm, s_ref, b_ref, o_ref, acc_ref, w_buf,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...].astype(jnp.float32)
-    w = _unpack_int4_rows(w_buf[slot]).astype(jnp.float32)
+    w = _decode_rows(w_buf[slot], packed).astype(jnp.float32)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
     def _emit():
         scale = s_ref[0].astype(jnp.float32)
         out = acc_ref[...] * scale[None, :] + b_ref[0].astype(jnp.float32)[None, :]
-        if activation is not None:
-            out = ACTIVATIONS[activation](out)
+        out = apply_activation(out, activation)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -131,26 +133,29 @@ def quant_matmul(
     bk: int = 128,
     interpret: bool = False,
     out_dtype=jnp.float32,
-    activation: Optional[str] = None,
-    packed: bool = False,
+    activation=None,
+    packed=False,
 ) -> jnp.ndarray:
     """y = act(x @ dequant(W) + b) in one launch (epilogue fused at emit).
 
-    ``packed=True`` takes the bit-packed int4 container: ``w_q`` is uint8
-    ``(K/2, N)`` with two codes per byte along K (K and bk must be even);
+    ``packed`` takes a bit-packed sub-byte container: ``w_q`` is uint8
+    ``(K/ratio, N)`` with ratio codes per byte along K (K and bk must
+    divide by the ratio) — ratio 2 for ``True``/"int4x2", 4 for "int2x4";
     the kernel decodes in-register, so numerics are bitwise identical to
-    the int8 container — only the weight bytes streamed from HBM halve.
+    the int8 container — only the weight bytes streamed from HBM shrink.
     """
     _check_activation(activation)
     M, K = x.shape
+    ratio = _packed_ratio(packed)
     if packed:
         if w_q.dtype != jnp.uint8:
             raise ValueError(
-                f"packed=True needs a uint8 int4x2 container, got {w_q.dtype}")
-        if K % 2 or bk % 2:
+                f"packed={packed!r} needs a uint8 container, got {w_q.dtype}")
+        if K % ratio or bk % ratio:
             raise ValueError(
-                f"packed quant_matmul needs even K and bk, got K={K} bk={bk}")
-        K2, N = w_q.shape[0] * 2, w_q.shape[1]
+                f"packed={packed!r} quant_matmul needs K and bk divisible "
+                f"by {ratio}, got K={K} bk={bk}")
+        K2, N = w_q.shape[0] * ratio, w_q.shape[1]
     else:
         K2, N = w_q.shape
     assert K == K2 and scales.shape == (N,)
@@ -158,12 +163,13 @@ def quant_matmul(
     if bias is None:
         bias = jnp.zeros((N,), jnp.float32)
     n_k = K // bk
-    w_bk = bk // 2 if packed else bk
+    w_bk = bk // ratio
     if packed:
         # hand-driven two-slot double buffer: the next tile's HBM->VMEM
-        # DMA overlaps this tile's nibble decode + MXU pass
+        # DMA overlaps this tile's sub-byte decode + MXU pass
         kernel = functools.partial(_kernel_packed_db, n_n=N // bn, n_k=n_k,
-                                   w_bk=w_bk, bn=bn, activation=activation)
+                                   w_bk=w_bk, bn=bn, activation=activation,
+                                   packed=packed)
         w_spec = pl.BlockSpec(memory_space=pltpu.ANY)
         scratch = [pltpu.VMEM((bm, bn), jnp.float32),
                    pltpu.VMEM((2, w_bk, bn), jnp.uint8),
@@ -191,7 +197,7 @@ def quant_matmul(
 
 
 def _conv_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, patch_ref, *,
-                 n_k: int, activation: Optional[str], packed: bool,
+                 n_k: int, activation, packed,
                  conv, strides, dilation, pool):
     """Fused-conv (m, n, k) step: m is the batch index; the (Ho*Wo, K)
     patch tile is built in VMEM at the image's first step and each k step
@@ -212,7 +218,7 @@ def _conv_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, patch_ref, *,
     xt = patch_ref[:, pl.ds(k * bk, bk)].astype(jnp.float32)
     w = w_ref[...]
     if packed:
-        w = _unpack_int4_rows(w)
+        w = _decode_rows(w, packed)
     acc_ref[...] += jnp.dot(xt, w.astype(jnp.float32),
                             preferred_element_type=jnp.float32)
 
@@ -220,8 +226,7 @@ def _conv_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, acc_ref, patch_ref, *,
     def _emit():
         scale = s_ref[0].astype(jnp.float32)
         out = acc_ref[...] * scale[None, :] + b_ref[0].astype(jnp.float32)[None, :]
-        if activation is not None:
-            out = ACTIVATIONS[activation](out)
+        out = apply_activation(out, activation)
         t = out.reshape(Ho, Wo, out.shape[-1])
         if pool is not None:
             t = _pool_tile(t, pool)
@@ -247,8 +252,8 @@ def quant_conv(
     dilation: Tuple[int, int] = (1, 1),
     interpret: bool = False,
     out_dtype=jnp.float32,
-    activation: Optional[str] = None,
-    packed: bool = False,
+    activation=None,
+    packed=False,
     pool=None,
 ) -> jnp.ndarray:
     """Fused-im2col quantised conv: pool(act(conv(x, dequant(W)) + b)).
@@ -279,13 +284,16 @@ def quant_conv(
             f"conv kernel {tuple(kernel_hw)} does not fit the {H}x{W} input")
     _check_pool(pool, Ho, Wo)
     K = cin * kh * kw
+    ratio = _packed_ratio(packed)
     if packed:
         if w_q.dtype != jnp.uint8:
             raise ValueError(
-                f"packed=True needs a uint8 int4x2 container, got {w_q.dtype}")
-        if K % 2:
-            raise ValueError(f"packed quant_conv needs even K, got K={K}")
-        K2, N = w_q.shape[0] * 2, w_q.shape[1]
+                f"packed={packed!r} needs a uint8 container, got {w_q.dtype}")
+        if K % ratio:
+            raise ValueError(
+                f"packed={packed!r} quant_conv needs K divisible by "
+                f"{ratio}, got K={K}")
+        K2, N = w_q.shape[0] * ratio, w_q.shape[1]
     else:
         K2, N = w_q.shape
     if K != K2:
@@ -293,12 +301,12 @@ def quant_conv(
             f"im2col K={K} (cin*kh*kw) != weight rows {K2}")
     if bn is None or N % bn:
         bn = 128 if N % 128 == 0 else N
-    if bk is None or K % bk or (packed and bk % 2):
+    if bk is None or K % bk or (packed and bk % ratio):
         bk = 128 if K % 128 == 0 else K
     if bias is None:
         bias = jnp.zeros((N,), jnp.float32)
     n_k = K // bk
-    w_bk = bk // 2 if packed else bk
+    w_bk = bk // ratio
     Hp, Wp = (Ho // pool[1], Wo // pool[1]) if pool is not None else (Ho, Wo)
     return pl.pallas_call(
         functools.partial(_conv_kernel, n_k=n_k, activation=activation,

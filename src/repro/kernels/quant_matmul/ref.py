@@ -5,7 +5,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from ..sparse_matmul.kernel import ACTIVATIONS
+from ..sparse_matmul.kernel import ACTIVATIONS, apply_activation
 
 
 def quant_matmul_ref(x, w_q, scales, bias=None,
@@ -17,5 +17,5 @@ def quant_matmul_ref(x, w_q, scales, bias=None,
     if bias is not None:
         y = y + bias.astype(jnp.float32)[None, :]
     if activation is not None:
-        y = ACTIVATIONS[activation](y)
+        y = apply_activation(y, activation)
     return y.astype(out_dtype)

@@ -58,8 +58,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["ACTIVATIONS", "POOL_MODES", "block_sparse_matmul",
-           "block_sparse_matmul_decode", "block_sparse_conv"]
+__all__ = ["ACTIVATIONS", "POOL_MODES", "apply_activation",
+           "block_sparse_matmul", "block_sparse_matmul_decode",
+           "block_sparse_conv"]
 
 # Fused epilogue nonlinearities (applied in f32).  The jnp oracle
 # (ref.block_sparse_matmul_ref) and the dispatch fallbacks import THIS
@@ -71,11 +72,33 @@ ACTIVATIONS = {
 }
 
 
-def _check_activation(activation: Optional[str]) -> None:
-    if activation is not None and activation not in ACTIVATIONS:
-        raise ValueError(
-            f"unknown epilogue activation {activation!r} — "
-            f"supported: {sorted(ACTIVATIONS)} or None")
+def apply_activation(v: jnp.ndarray, activation) -> jnp.ndarray:
+    """Apply a fused-epilogue activation: a name from :data:`ACTIVATIONS`,
+    a static threshold-ReLU tuple ``("trelu", tau)`` (zero everything below
+    ``tau`` — the activation-sparsity family's emit step), or None.
+
+    The tuple form stays hashable, so it rides the kernels' static
+    ``activation`` argnames unchanged.  Every emit site (both kernels, the
+    jnp oracles, the dispatch epilogue) routes through this one function,
+    so all paths use bit-identical formulas.
+    """
+    if activation is None:
+        return v
+    if isinstance(activation, tuple):
+        return jnp.where(v > jnp.float32(activation[1]), v, 0.0)
+    return ACTIVATIONS[activation](v)
+
+
+def _check_activation(activation) -> None:
+    if activation is None or activation in ACTIVATIONS:
+        return
+    if (isinstance(activation, tuple) and len(activation) == 2
+            and activation[0] == "trelu"
+            and isinstance(activation[1], (int, float))):
+        return
+    raise ValueError(
+        f"unknown epilogue activation {activation!r} — "
+        f"supported: {sorted(ACTIVATIONS)}, ('trelu', tau) or None")
 
 
 def _unpack_int4_rows(w: jnp.ndarray) -> jnp.ndarray:
@@ -92,6 +115,46 @@ def _unpack_int4_rows(w: jnp.ndarray) -> jnp.ndarray:
     hi = jnp.right_shift(w, jnp.uint8(4))
     both = jnp.stack([lo, hi], axis=1).reshape(w.shape[0] * 2, w.shape[1])
     return jnp.bitwise_xor(both, jnp.uint8(8)).astype(jnp.int8) - jnp.int8(8)
+
+
+def _unpack_int2_rows(w: jnp.ndarray) -> jnp.ndarray:
+    """(bk/4, bn) uint8 container -> (bk, bn) int8 codes, in-register.
+
+    Four int2 codes (crumbs) per byte along the sublane axis, low field
+    first; sign-extension via ``(c ^ 2) - 2`` (exact for [-2, 1]).  The
+    kernel-prologue twin of ``unpack_codes(..., bits=2)`` — pinned
+    bit-exact against it by tests, same import-cycle rationale as
+    :func:`_unpack_int4_rows`.
+    """
+    parts = [jnp.bitwise_and(jnp.right_shift(w, jnp.uint8(2 * j)),
+                             jnp.uint8(0x03)) for j in range(4)]
+    both = jnp.stack(parts, axis=1).reshape(w.shape[0] * 4, w.shape[1])
+    return jnp.bitwise_xor(both, jnp.uint8(2)).astype(jnp.int8) - jnp.int8(2)
+
+
+def _packed_ratio(packed) -> int:
+    """Codes per container byte for a ``packed`` tag.
+
+    ``packed`` is False (int8/float container), True or "int4x2" (two
+    nibbles per byte — True kept for backward compatibility), or "int2x4"
+    (four crumbs per byte).
+    """
+    if packed in (False, None):
+        return 1
+    if packed in (True, "int4x2"):
+        return 2
+    if packed == "int2x4":
+        return 4
+    raise ValueError(
+        f"unknown packed container tag {packed!r} — expected False, True, "
+        f"'int4x2' or 'int2x4'")
+
+
+def _decode_rows(w: jnp.ndarray, packed) -> jnp.ndarray:
+    """Container prologue: uint8 rows -> int8 codes for a packed tag."""
+    if _packed_ratio(packed) == 4:
+        return _unpack_int2_rows(w)
+    return _unpack_int4_rows(w)
 
 
 # Fused pooling modes for the conv entry's emit step.
@@ -146,7 +209,7 @@ def _pool_tile(t: jnp.ndarray, pool: Tuple[str, int]) -> jnp.ndarray:
 
 
 def _kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
-            activation: Optional[str], packed: bool = False):
+            activation, packed=False):
     """meta_ref rows: [row, col, packed_idx, is_first, is_last] per step."""
     p = pl.program_id(1)
     is_first = meta_ref[3, p]
@@ -159,9 +222,10 @@ def _kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
     x = x_ref[...]
     w = w_ref[0]
     if packed:
-        # bit-packed int4 container: weights travelled HBM->VMEM at half
-        # the bytes; decode to int8 codes in-register before the dequant
-        w = _unpack_int4_rows(w)
+        # bit-packed sub-byte container: weights travelled HBM->VMEM at a
+        # half/quarter of the bytes; decode to int8 codes in-register
+        # before the dequant
+        w = _decode_rows(w, packed)
     if w.dtype == jnp.int8:
         # fused dequant: scale is per output channel (bn,)
         w = w.astype(jnp.float32) * scale_ref[0].astype(jnp.float32)[None, :]
@@ -173,18 +237,17 @@ def _kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref, acc_ref, *,
     @pl.when(is_last == 1)
     def _emit():
         out = acc_ref[...] + bias_ref[0].astype(jnp.float32)[None, :]
-        if activation is not None:
-            out = ACTIVATIONS[activation](out)
+        out = apply_activation(out, activation)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
 def _kernel_packed_db(meta_ref, x_ref, w_hbm, scale_ref, bias_ref, o_ref,
-                      acc_ref, w_buf, w_sems, *, activation: Optional[str]):
+                      acc_ref, w_buf, w_sems, *, activation, packed=True):
     """Packed-container schedule step with a double-buffered prologue.
 
-    The (bk/2, bn) uint8 block tiles stay in HBM (``memory_space=ANY``)
+    The (bk/ratio, bn) uint8 block tiles stay in HBM (``memory_space=ANY``)
     and are streamed into a two-slot VMEM buffer by hand: step p starts
-    the DMA for block p+1 *before* waiting on its own, so the int4 nibble
+    the DMA for block p+1 *before* waiting on its own, so the sub-byte
     decode and the MXU pass of block p overlap block p+1's copy.  The
     schedule, dequant and epilogue are identical to :func:`_kernel` —
     only who drives the weight stream changes.
@@ -215,7 +278,7 @@ def _kernel_packed_db(meta_ref, x_ref, w_hbm, scale_ref, bias_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # packed containers are always quantised: decode then fused dequant
-    w = _unpack_int4_rows(w_buf[slot])
+    w = _decode_rows(w_buf[slot], packed)
     w = w.astype(jnp.float32) * scale_ref[0].astype(jnp.float32)[None, :]
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
                             preferred_element_type=jnp.float32)
@@ -223,8 +286,7 @@ def _kernel_packed_db(meta_ref, x_ref, w_hbm, scale_ref, bias_ref, o_ref,
     @pl.when(is_last == 1)
     def _emit():
         out = acc_ref[...] + bias_ref[0].astype(jnp.float32)[None, :]
-        if activation is not None:
-            out = ACTIVATIONS[activation](out)
+        out = apply_activation(out, activation)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -261,8 +323,8 @@ def _call(
     bm: int,
     interpret: bool,
     out_dtype,
-    activation: Optional[str],
-    packed: bool = False,
+    activation,
+    packed=False,
 ):
     M, K = x.shape
     bk, bn = block
@@ -283,12 +345,14 @@ def _call(
         bias = bias.reshape(n_cols, bn).astype(jnp.float32)
 
     grid = (M // bm, P)
-    # packed containers stream (bk/2, bn) uint8 tiles — half the HBM bytes
-    # per block — through a hand-driven two-slot double buffer so the next
-    # block's DMA overlaps this block's nibble decode + MXU pass
-    w_bk = bk // 2 if packed else bk
+    # packed containers stream (bk/ratio, bn) uint8 tiles — half (int4x2)
+    # or a quarter (int2x4) of the HBM bytes per block — through a
+    # hand-driven two-slot double buffer so the next block's DMA overlaps
+    # this block's sub-byte decode + MXU pass
+    w_bk = bk // _packed_ratio(packed)
     if packed:
-        kernel = functools.partial(_kernel_packed_db, activation=activation)
+        kernel = functools.partial(_kernel_packed_db, activation=activation,
+                                   packed=packed)
         w_spec = pl.BlockSpec(memory_space=pltpu.ANY)
         scratch = [pltpu.VMEM((bm, bn), jnp.float32),
                    pltpu.VMEM((2, w_bk, bn), jnp.uint8),
@@ -321,13 +385,11 @@ def _call(
 
 
 def _epilogue_of_zero(N: int, bias: Optional[jnp.ndarray],
-                      activation: Optional[str]) -> jnp.ndarray:
+                      activation) -> jnp.ndarray:
     """What the epilogue emits for an all-pruned output column: act(0 + b)."""
     b = jnp.zeros((N,), jnp.float32) if bias is None \
         else bias.reshape(N).astype(jnp.float32)
-    if activation is not None:
-        b = ACTIVATIONS[activation](b)
-    return b
+    return apply_activation(b, activation)
 
 
 def block_sparse_matmul(
@@ -340,33 +402,36 @@ def block_sparse_matmul(
     n_col_blocks: int,
     scales: Optional[jnp.ndarray] = None,
     bias: Optional[jnp.ndarray] = None,
-    activation: Optional[str] = None,
+    activation=None,
     bm: int = 128,
     out_dtype=jnp.float32,
     interpret: bool = False,
-    packed: bool = False,
+    packed=False,
 ) -> jnp.ndarray:
     """y = act(x @ W + b) for a block-compacted W. See module docstring.
 
     ``bias`` is a per-output-channel (N,) vector (or None); ``activation``
-    is one of :data:`ACTIVATIONS` (or None).  Output columns whose
-    block-column is entirely absent — including the fully-empty pattern —
-    still go through the epilogue: they come back as ``act(b)``.
+    is one of :data:`ACTIVATIONS`, a ``("trelu", tau)`` threshold-ReLU
+    tuple, or None.  Output columns whose block-column is entirely absent
+    — including the fully-empty pattern — still go through the epilogue:
+    they come back as ``act(b)``.
 
-    ``packed=True`` takes a bit-packed int4 container: ``blocks`` is uint8
-    ``(n_present, bk/2, bn)``, two codes per byte along the bk axis (bk
-    must be even).  The prologue decodes in-register, so the schedule,
+    ``packed`` takes a bit-packed sub-byte container: ``blocks`` is uint8
+    ``(n_present, bk/ratio, bn)`` with ratio codes per byte along the bk
+    axis (bk must divide by the ratio) — ratio 2 for ``True``/"int4x2",
+    4 for "int2x4".  The prologue decodes in-register, so the schedule,
     epilogue and numerics are identical to the int8 path — only the
-    HBM->VMEM bytes halve.
+    HBM->VMEM bytes shrink.
     """
     _check_activation(activation)
+    ratio = _packed_ratio(packed)
     bk, bn = int(blocks.shape[1]), int(blocks.shape[2])
     if packed:
         if blocks.dtype != jnp.uint8:
             raise ValueError(
-                f"packed=True needs a uint8 int4x2 container, got "
+                f"packed={packed!r} needs a uint8 container, got "
                 f"{blocks.dtype}")
-        bk *= 2
+        bk *= ratio
     M, K = x.shape
     if K != n_row_blocks * bk:
         raise ValueError(f"K={K} != n_row_blocks*bk={n_row_blocks*bk}")
@@ -411,8 +476,8 @@ def block_sparse_matmul(
 
 
 def _conv_kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
-                 acc_ref, patch_ref, *, activation: Optional[str],
-                 packed: bool, conv: Tuple[int, int, int, int, int],
+                 acc_ref, patch_ref, *, activation,
+                 packed, conv: Tuple[int, int, int, int, int],
                  strides: Tuple[int, int], dilation: Tuple[int, int],
                  pool: Optional[Tuple[str, int]]):
     """Fused-conv schedule step: grid (B, P), one image per m index.
@@ -445,7 +510,7 @@ def _conv_kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
     xt = patch_ref[:, pl.ds(r * bk, bk)]
     w = w_ref[0]
     if packed:
-        w = _unpack_int4_rows(w)
+        w = _decode_rows(w, packed)
     if w.dtype == jnp.int8:
         w = w.astype(jnp.float32) * scale_ref[0].astype(jnp.float32)[None, :]
     acc_ref[...] += jnp.dot(
@@ -456,8 +521,7 @@ def _conv_kernel(meta_ref, x_ref, w_ref, scale_ref, bias_ref, o_ref,
     @pl.when(is_last == 1)
     def _emit():
         out = acc_ref[...] + bias_ref[0].astype(jnp.float32)[None, :]
-        if activation is not None:
-            out = ACTIVATIONS[activation](out)
+        out = apply_activation(out, activation)
         t = out.reshape(Ho, Wo, out.shape[-1])
         if pool is not None:
             t = _pool_tile(t, pool)
@@ -487,8 +551,8 @@ def _conv_call(
     pool: Optional[Tuple[str, int]],
     interpret: bool,
     out_dtype,
-    activation: Optional[str],
-    packed: bool,
+    activation,
+    packed,
 ):
     B, H, W, cin = x.shape
     kh, kw = kernel_hw
@@ -514,7 +578,7 @@ def _conv_call(
         bias = bias.reshape(n_cols, bn).astype(jnp.float32)
 
     Hp, Wp = (Ho // pool[1], Wo // pool[1]) if pool is not None else (Ho, Wo)
-    w_bk = bk // 2 if packed else bk
+    w_bk = bk // _packed_ratio(packed)
     kernel = functools.partial(_conv_kernel, activation=activation,
                                packed=packed, conv=(kh, kw, Ho, Wo, bk),
                                strides=strides, dilation=dilation,
@@ -554,13 +618,13 @@ def block_sparse_conv(
     n_col_blocks: int,
     scales: Optional[jnp.ndarray] = None,
     bias: Optional[jnp.ndarray] = None,
-    activation: Optional[str] = None,
+    activation=None,
     strides: Tuple[int, int] = (1, 1),
     dilation: Tuple[int, int] = (1, 1),
     pool: Optional[Tuple[str, int]] = None,
     out_dtype=jnp.float32,
     interpret: bool = False,
-    packed: bool = False,
+    packed=False,
 ) -> jnp.ndarray:
     """Fused-im2col conv entry: y = pool(act(conv(x, W) + b)) in one launch.
 
@@ -595,13 +659,14 @@ def block_sparse_conv(
         raise ValueError(
             f"conv kernel {kernel_hw} does not fit the {H}x{W} input")
     _check_pool(pool, Ho, Wo)
+    ratio = _packed_ratio(packed)
     bk, bn = int(blocks.shape[1]), int(blocks.shape[2])
     if packed:
         if blocks.dtype != jnp.uint8:
             raise ValueError(
-                f"packed=True needs a uint8 int4x2 container, got "
+                f"packed={packed!r} needs a uint8 container, got "
                 f"{blocks.dtype}")
-        bk *= 2
+        bk *= ratio
     K = n_row_blocks * bk
     if K != cin * kh * kw:
         raise ValueError(
@@ -680,10 +745,10 @@ def block_sparse_matmul_decode(
     n_col_blocks: int,
     scales: Optional[jnp.ndarray] = None,
     bias: Optional[jnp.ndarray] = None,
-    activation: Optional[str] = None,
+    activation=None,
     out_dtype=jnp.float32,
     interpret: bool = False,
-    packed: bool = False,
+    packed=False,
 ) -> jnp.ndarray:
     """Batched-RHS (decode) entry point: same static schedule, thin M.
 

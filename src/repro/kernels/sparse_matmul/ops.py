@@ -34,9 +34,10 @@ def sparse_linear(
     ``use_kernel=False`` falls back to the jnp oracle (CPU prod path).
 
     A bit-packed ``cl`` (``cl.blocks`` a PackedTensor — int4 codes two per
-    byte) rides the kernel's packed prologue when the container is packed
-    along an even bk axis (weights travel HBM->VMEM at half the bytes);
-    any other packing falls back to a trace-time unpack into the identical
+    byte, or int2 codes four per byte) rides the kernel's packed prologue
+    when the container is packed along a bk axis the code count divides
+    (weights travel HBM->VMEM at a half / quarter of the bytes); any
+    other packing falls back to a trace-time unpack into the identical
     int8 path — bitwise-equal numerics either way.
     """
     pat = cl.pattern
@@ -45,8 +46,9 @@ def sparse_linear(
     packed_kernel = False
     if cl.packed:
         bk_ax = cl.blocks.axis % 3
-        if use_kernel and bk_ax == 1 and pat.block[0] % 2 == 0:
-            blocks, packed_kernel = cl.blocks.data, True
+        per_byte = cl.blocks.per_byte
+        if use_kernel and bk_ax == 1 and pat.block[0] % per_byte == 0:
+            blocks, packed_kernel = cl.blocks.data, cl.blocks.container
         else:
             blocks = cl.block_values()  # trace-time unpack, same codes
     if bm is not None:

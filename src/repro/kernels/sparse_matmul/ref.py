@@ -6,7 +6,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import ACTIVATIONS, _check_activation
+from .kernel import ACTIVATIONS, _check_activation, apply_activation
 
 
 def block_sparse_matmul_ref(
@@ -39,5 +39,5 @@ def block_sparse_matmul_ref(
     if bias is not None:
         y = y + bias.reshape(N).astype(jnp.float32)[None, :]
     if activation is not None:
-        y = ACTIVATIONS[activation](y)
+        y = apply_activation(y, activation)
     return y.astype(out_dtype)

@@ -117,8 +117,8 @@ def patch_embed_apply(p, x, *, bias=None, dispatch=None, activation=None,
     if b is not None:
         y = y + b
     if activation is not None:
-        from ..kernels.sparse_matmul.kernel import ACTIVATIONS
-        y = ACTIVATIONS[activation](y)
+        from ..kernels.sparse_matmul.kernel import apply_activation
+        y = apply_activation(y, activation)
     return y
 
 

@@ -1,41 +1,152 @@
 """Optional-hypothesis shim for the property-test modules.
 
 ``hypothesis`` is a dev-only dependency (declared in pyproject.toml /
-requirements-dev.txt).  When it is absent the suite must degrade to
-*skips*, not collection errors — and unit tests living in the same module
-as property tests must keep running.  Import the three names from here
-instead of from hypothesis:
+requirements-dev.txt).  When it is absent the property tests must still
+RUN — a permanently-skipped property is no coverage at all — so this
+module degrades to a small deterministic fuzzer instead of a skip.
+Import the three names from here instead of from hypothesis:
 
     from _hyp import given, settings, st
 
-With hypothesis installed this is a pure re-export.  Without it, ``st``
-returns inert placeholder strategies and ``@given`` replaces the test with
-one that calls ``pytest.importorskip("hypothesis")`` — so every property
-test reports as a skip with a clear reason.
+With hypothesis installed this is a pure re-export.  Without it:
+
+* ``st.integers`` / ``st.floats`` / ``st.sampled_from`` /
+  ``st.booleans`` become draw rules over the same parameter space
+  (positional or keyword ``min_value`` / ``max_value`` bounds, exactly
+  the subset of the hypothesis API the suite uses);
+* ``@given(**strategies)`` replaces the test with a runner that draws a
+  capped number of examples per test — the first draws pin the space's
+  ENDPOINTS (min, then max; first, then last element; False, then True)
+  because bounds are where off-by-ones live, the rest are sampled from
+  a ``numpy`` generator seeded by ``crc32(test name)`` so every run and
+  every machine replays the identical sequence;
+* ``@settings(max_examples=..., deadline=...)`` keeps its stacking
+  position above ``@given`` and caps the example count (never raising
+  it above ``_MAX_EXAMPLES``, which keeps the fallback suite fast).
+
+The fuzzer is NOT hypothesis — no shrinking, no example database — but
+it executes every property at its boundary points plus a deterministic
+random sample, which is the coverage that matters for a CI leg with no
+dev dependencies installed.
 """
-import pytest
+import zlib
+
+import numpy as np
 
 try:
     from hypothesis import given, settings, strategies as st
 
     HAVE_HYPOTHESIS = True
-except ModuleNotFoundError:  # degrade to skips
+except ModuleNotFoundError:  # degrade to the deterministic mini-fuzzer
     HAVE_HYPOTHESIS = False
 
+    _MAX_EXAMPLES = 5  # per test: 2 endpoint draws + 3 seeded random ones
+
+    class _Strategy:
+        """A draw rule: (rng, example_index) -> value."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng, i):
+            return self._draw(rng, i)
+
+    def _bounds(args, kwargs, lo_default, hi_default):
+        lo = args[0] if len(args) > 0 else kwargs.get("min_value",
+                                                      lo_default)
+        hi = args[1] if len(args) > 1 else kwargs.get("max_value",
+                                                      hi_default)
+        return lo, hi
+
     class _Strategies:
-        def __getattr__(self, name):
-            return lambda *args, **kwargs: None
+        @staticmethod
+        def integers(*args, **kwargs):
+            lo, hi = _bounds(args, kwargs, 0, 2 ** 31 - 1)
+
+            def draw(rng, i):
+                if i == 0:
+                    return int(lo)
+                if i == 1:
+                    return int(hi)
+                return int(rng.integers(lo, hi + 1))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def floats(*args, **kwargs):
+            lo, hi = _bounds(args, kwargs, 0.0, 1.0)
+
+            def draw(rng, i):
+                if i == 0:
+                    return float(lo)
+                if i == 1:
+                    return float(hi)
+                return float(rng.uniform(lo, hi))
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            elems = list(seq)
+
+            def draw(rng, i):
+                if i == 0:
+                    return elems[0]
+                if i == 1:
+                    return elems[-1]
+                return elems[int(rng.integers(len(elems)))]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            def draw(rng, i):
+                if i < 2:
+                    return bool(i)
+                return bool(rng.integers(2))
+
+            return _Strategy(draw)
 
     st = _Strategies()
 
-    def given(*_args, **_kwargs):
-        def deco(_fn):
-            def skipped(*a, **k):
-                pytest.importorskip("hypothesis")
-            skipped.__name__ = _fn.__name__
-            skipped.__doc__ = _fn.__doc__
-            return skipped
+    def given(*_args, **strategies):
+        """kwargs-only @given (the form the whole suite uses)."""
+        if _args:
+            raise TypeError("_hyp fallback @given supports keyword "
+                            "strategies only")
+
+        def deco(fn):
+            # NOT functools.wraps: __wrapped__ would make pytest follow
+            # the signature and demand the drawn params as fixtures
+            def runner(*a, **k):
+                n = min(getattr(runner, "_hyp_max_examples",
+                                _MAX_EXAMPLES), _MAX_EXAMPLES)
+                # seeded by the test's own name: stable across runs,
+                # machines and test-collection order
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = {name: s.draw(rng, i)
+                             for name, s in strategies.items()}
+                    try:
+                        fn(*a, **dict(k, **drawn))
+                    except Exception as e:
+                        raise AssertionError(
+                            f"{fn.__qualname__} falsified on example "
+                            f"{i}: {drawn!r}") from e
+
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
         return deco
 
-    def settings(*_args, **_kwargs):
-        return lambda fn: fn
+    def settings(max_examples=None, **_kwargs):
+        def deco(fn):
+            if max_examples is not None:
+                fn._hyp_max_examples = int(max_examples)
+            return fn
+
+        return deco

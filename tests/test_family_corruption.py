@@ -1,0 +1,220 @@
+"""Negative/corruption matrix over the WHOLE payload-family registry.
+
+Every registered family gets the same three corruptions applied to its
+``sample()`` exemplar, and every one must die LOUDLY — a ``ValueError``
+whose message leads with the family's name — at dispatch time, before a
+single flop runs on the corrupted container:
+
+* **wrong dtype** — the kind-flip a checkpoint widening or a stray
+  ``tree_map(astype)`` produces (float cast of int8 codes, int cast of
+  float blocks);
+* **truncated axis** — a container chopped along the axis its
+  cross-leaf/pattern geometry is defined by (missing blocks, missing
+  output columns, a lost leading axis);
+* **stale scale shape** — a secondary leaf (scales / exponents /
+  threshold) from a *different* compile, the classic silently-wrong
+  dequantisation.
+
+A new family is covered by registering — the corruptions below are
+derived from registry metadata (``key_leaf``, ``leaf_ndim``,
+``needs_pattern``, the sample exemplar's dtypes), with a small table of
+which axis each family's geometry watches.
+
+The checkpoint leg rides the same validator: the Checkpointer
+round-trips bytes verbatim (it cannot know the cross-leaf geometry), so
+the test proves a corrupted-then-restored leaf dict is still caught at
+the first dispatch after restore.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch as disp
+from repro.core import payload_registry as pr
+from repro.train.checkpoint import Checkpointer
+
+FAMILIES = pr.all_families()
+IDS = [f.name for f in FAMILIES]
+
+
+def _sampled(fam, seed=0):
+    leaves, pattern = fam.sample(np.random.default_rng(seed))
+    return dict(leaves), pattern
+
+
+def _np(v):
+    return np.asarray(v)
+
+
+def _dispatch(leaves, pattern, K):
+    x = jnp.zeros((2, K), jnp.float32)
+    return disp.linear_dispatch(leaves, x, pattern=pattern, dispatch="jnp")
+
+
+def _leaf_k(fam, leaves, pattern):
+    """A plausible K for the probe activation (irrelevant for the
+    corruption paths — validation fires before any matmul)."""
+    if fam.leaf_kn is not None:
+        return fam.leaf_kn(leaves, pattern)[0]
+    if pattern is not None and hasattr(pattern, "shape"):
+        return pattern.shape[0]
+    return 16
+
+
+# ------------------------------------------------------------ wrong dtype
+
+
+@pytest.mark.parametrize("fam", FAMILIES, ids=IDS)
+def test_wrong_dtype_on_key_leaf_is_family_named_error(fam):
+    """Cast the key leaf to a dtype *kind* outside the family's allowed
+    set (float cast of int codes, unsigned cast of float blocks):
+    dispatch must refuse with the family's name, not run wrong math."""
+    leaves, pattern = _sampled(fam)
+    v = _np(leaves[fam.key_leaf])
+    allowed = fam.leaf_dtype_kinds.get(fam.key_leaf) or v.dtype.kind
+    bad_dtype = next(dt for dt, kind in
+                     ((np.float32, "f"), (np.int8, "i"), (np.uint8, "u"))
+                     if kind not in allowed)
+    leaves[fam.key_leaf] = jnp.asarray(v.astype(bad_dtype))
+    with pytest.raises(ValueError, match=rf"{fam.name} payload"):
+        _dispatch(leaves, pattern, _leaf_k(fam, leaves, pattern))
+
+
+# --------------------------------------------------------- truncated axis
+
+# which corruption proves a chopped container axis for each family:
+#   "pattern"  - drop a present block from the compacted P axis
+#   "n"        - chop the code leaf's last (output-column) axis
+#   "k"        - chop the code leaf's K axis (per-INPUT-channel scales)
+#   "groups"   - chop the group tensor's Ng axis vs a correct w_s
+#   "ndim"     - a lost axis (the only geometry dense declares)
+_TRUNCATION = {
+    "sparse": "pattern", "sparse_packed": "pattern",
+    "actsparse": "pattern",
+    "quant": "n", "quant_packed": "n", "int2": "n", "bfp8": "n",
+    "perchannel": "k",
+    "gsparse": "groups",
+    "dense": "ndim",
+}
+
+
+def _gsparse_with_scales(leaves):
+    w = _np(leaves["w_grp"])
+    s, _, ng = w.shape
+    leaves["w_s"] = jnp.ones((s * ng,), jnp.float32)
+    return leaves
+
+
+@pytest.mark.parametrize("fam", FAMILIES, ids=IDS)
+def test_truncated_axis_is_family_named_error(fam):
+    leaves, pattern = _sampled(fam)
+    mode = _TRUNCATION[fam.name]
+    key = fam.key_leaf
+    v = _np(leaves[key])
+    if mode == "pattern":
+        leaves[key] = jnp.asarray(v[:-1])  # one present block missing
+    elif mode == "n":
+        leaves[key] = jnp.asarray(v[..., :-1])
+    elif mode == "k":
+        leaves[key] = jnp.asarray(v[..., :-1, :])
+    elif mode == "groups":
+        leaves = _gsparse_with_scales(leaves)
+        leaves[key] = jnp.asarray(v[..., :-1])
+    else:  # ndim: dense has no cross-leaf geometry, only its rank
+        leaves[key] = jnp.asarray(v[0])
+    with pytest.raises(ValueError, match=rf"{fam.name} payload"):
+        _dispatch(leaves, pattern, _leaf_k(fam, leaves, pattern))
+
+
+# ------------------------------------------------------ stale scale shape
+
+# the secondary leaf each family cross-checks, or None when the family
+# has no scale-shaped leaf to go stale (dense) or deliberately does not
+# lint it (sparse float w_s is quantize_sparse-optional and its length
+# convention is owned by the compiler, not the leaf dict)
+_STALE_LEAF = {
+    "quant": "w_s", "quant_packed": "w_s", "int2": "w_s",
+    "bfp8": "w_bfpe", "perchannel": "w_pcs", "gsparse": "w_s",
+    "actsparse": "w_atau",
+    "sparse": None, "sparse_packed": None, "dense": None,
+}
+
+
+@pytest.mark.parametrize("fam", FAMILIES, ids=IDS)
+def test_stale_scale_shape_is_family_named_error(fam):
+    name = _STALE_LEAF[fam.name]
+    if name is None:
+        pytest.skip(f"{fam.name}: no scale-shaped leaf to go stale")
+    leaves, pattern = _sampled(fam)
+    if fam.name == "gsparse":
+        leaves = _gsparse_with_scales(leaves)
+    good = _np(leaves[name])
+    if fam.name == "actsparse":
+        # the threshold is rank-0/1 by declaration; a stale *shaped* tau
+        # (e.g. a per-column vector from another format) is an ndim lie
+        bad = np.zeros((3, 3), np.float32)
+    else:
+        bad = np.concatenate([good, good])  # wrong channel count
+    leaves[name] = jnp.asarray(bad)
+    with pytest.raises(ValueError, match=rf"{fam.name} payload"):
+        _dispatch(leaves, pattern, _leaf_k(fam, leaves, pattern))
+
+
+# ------------------------------------------------------- checkpoint leg
+
+
+@pytest.mark.parametrize("fam",
+                         [f for f in FAMILIES
+                          if _STALE_LEAF[f.name] is not None
+                          and f.name != "actsparse"],
+                         ids=[f.name for f in FAMILIES
+                              if _STALE_LEAF[f.name] is not None
+                              and f.name != "actsparse"])
+def test_corruption_survives_checkpoint_but_not_dispatch(fam, tmp_path):
+    """The Checkpointer round-trips leaves verbatim (it cannot know
+    cross-leaf geometry), so a stale-scale checkpoint restores cleanly —
+    and the FIRST dispatch after restore still refuses it by name."""
+    leaves, pattern = _sampled(fam)
+    if fam.name == "gsparse":
+        leaves = _gsparse_with_scales(leaves)
+    name = _STALE_LEAF[fam.name]
+    good = _np(leaves[name])
+    leaves[name] = jnp.asarray(np.concatenate([good, good]))
+    state = {"params": {"layer": dict(leaves)}}
+    ck = Checkpointer(str(tmp_path / fam.name))
+    ck.save(1, state)
+    out, manifest = ck.restore(state)
+    assert manifest["step"] == 1
+    restored = dict(out["params"]["layer"])
+    with pytest.raises(ValueError, match=rf"{fam.name} payload"):
+        _dispatch(restored, pattern, _leaf_k(fam, leaves, pattern))
+
+
+# ----------------------------------------------------- validator contract
+
+
+def test_validate_leaves_passes_every_clean_sample():
+    """The lint must be a no-op on every family's own exemplar — false
+    positives here would brick ordinary forward passes."""
+    for fam in FAMILIES:
+        leaves, pattern = _sampled(fam)
+        assert pr.validate_leaves(leaves, pattern) is fam
+
+
+def test_validate_leaves_allows_stacked_and_custom_float():
+    """One extra leading (layer-stack) axis and ml_dtypes customs
+    (bfloat16 reports dtype kind 'V') are legitimate, not corruption."""
+    fam = pr.get("quant")
+    leaves, _ = _sampled(fam)
+    stacked = {k: jnp.stack([v, v]) for k, v in leaves.items()}
+    assert pr.validate_leaves(stacked, None) is fam
+    dense = pr.get("dense")
+    w16 = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    assert pr.validate_leaves(w16, None) is dense
+
+
+def test_validate_leaves_ignores_non_family_keys():
+    """Bias and other out-of-family keys ride along untouched."""
+    leaves, _ = _sampled(pr.get("quant"))
+    leaves["b"] = jnp.zeros((8,), jnp.float32)
+    assert pr.validate_leaves(leaves, None) is pr.get("quant")

@@ -65,10 +65,14 @@ def test_sample_resolves_to_its_family(fam):
         assert pattern is not None
 
 
+@pytest.mark.parametrize("dispatch", ["jnp", "pallas"])
 @pytest.mark.parametrize("fam", FAMILIES, ids=IDS)
-def test_sample_dispatches_and_matches_decompressed_oracle(fam, monkeypatch):
-    """Every family's sampled leaf must run through linear_dispatch, and
-    (when the family can reconstruct dense) match x @ W_dense."""
+def test_sample_dispatches_and_matches_decompressed_oracle(
+        fam, dispatch, monkeypatch):
+    """Every family's sampled leaf must run through linear_dispatch on
+    BOTH legs — jnp twin and forced-pallas (families without a kernel
+    fall back with a warning, numerics unchanged) — and (when the family
+    can reconstruct dense) match x @ W_dense."""
     monkeypatch.delenv("REPRO_FORCE_DISPATCH", raising=False)
     leaves, pattern = _sampled(fam)
     if fam.leaf_kn is not None:
@@ -79,7 +83,7 @@ def test_sample_dispatches_and_matches_decompressed_oracle(fam, monkeypatch):
         K, N = 16, 8  # the registry-wide sample() exemplar convention
     x = jnp.asarray(np.random.default_rng(1).normal(size=(4, K)),
                     jnp.float32)
-    y = disp.linear_dispatch(leaves, x, pattern=pattern, dispatch="jnp")
+    y = disp.linear_dispatch(leaves, x, pattern=pattern, dispatch=dispatch)
     assert y.shape == (4, N)
     if fam.decompress is None:
         return

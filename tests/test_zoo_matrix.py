@@ -1,0 +1,99 @@
+"""Tier-1 guard for the model-zoo acceptance matrix.
+
+The full sweep lives in ``benchmarks/zoo_matrix.py`` (CI's zoo leg runs
+its ``--check`` mode); this module keeps the cheap invariants in tier-1:
+the grid is as wide as the acceptance bar demands, the committed
+``BENCH_zoo_matrix.json`` covers exactly that grid with honest
+expected_fail cells, and the one contrast the matrix exists to prove —
+naive 2-bit quant collapses while BFP8 at the same sweep coordinate
+does not — is re-evaluated live on the LeNet config.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.core import acceptance as acc
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH = ROOT / "BENCH_zoo_matrix.json"
+
+
+def test_grid_extents_meet_acceptance_bar():
+    """>=4 configs x >=5 policies x >=3 bit-widths, honestly counted."""
+    assert len(acc.ZOO_CONFIGS) >= 4
+    policies = [p for p, _ in acc.POLICY_GRID]
+    assert len(policies) >= 5 and len(set(policies)) == len(policies)
+    bits = {b for _, ws in acc.POLICY_GRID for b in ws}
+    assert len(bits) >= 3
+    specs = acc.cell_specs()
+    assert len(specs) == len(set(specs)) == \
+        len(acc.ZOO_CONFIGS) * sum(len(ws) for _, ws in acc.POLICY_GRID)
+
+
+def test_cell_key_format_pinned():
+    # the committed-JSON key format: a drift orphans every committed cell
+    assert acc.cell_key("lenet", "quant", 4) == "lenet/quant@4"
+
+
+def test_committed_matrix_covers_grid_with_expected_fails():
+    committed = json.loads(BENCH.read_text())
+    assert committed["schema"] == 1
+    cells = committed["cells"]
+    want = {acc.cell_key(*spec) for spec in acc.cell_specs()}
+    assert set(cells) == want, "committed cells drifted from the grid"
+    xf = {k for k, row in cells.items() if row.get("expected_fail")}
+    assert xf, "no honest expected_fail cells committed"
+    for key in xf:
+        assert cells[key]["reason"], f"{key}: expected_fail without reason"
+    # the contrast pair: every config's quant@2 collapses (expected_fail)
+    # while bfp8@2 passes at the same bit-width coordinate
+    for config in acc.ZOO_CONFIGS:
+        q2 = cells[acc.cell_key(config, "quant", 2)]
+        b2 = cells[acc.cell_key(config, "bfp8", 2)]
+        assert q2["expected_fail"] and not b2["expected_fail"]
+        assert b2["dense_top1"] >= acc.DENSE_TOP1_FLOOR[2] > q2["dense_top1"]
+
+
+def test_committed_floors_match_source_constants():
+    committed = json.loads(BENCH.read_text())
+    floors = committed["floors"]
+    assert floors["oracle_top1"] == acc.ORACLE_TOP1_FLOOR
+    assert floors["dense_top1_by_bits"] == \
+        {str(k): v for k, v in acc.DENSE_TOP1_FLOOR.items()}
+
+
+@pytest.fixture(scope="module")
+def lenet_env():
+    return acc._make_env("lenet")
+
+
+def test_lenet_quant2_collapse_vs_bfp8_contrast_live(lenet_env):
+    """Re-prove the matrix's headline contrast on the cheap config:
+    naive quant@2 genuinely fails the dense floor, bfp8@2 genuinely
+    passes it, and both stay bit-faithful to their decompressed oracle."""
+    q2 = lenet_env.evaluate("quant", 2)
+    b2 = lenet_env.evaluate("bfp8", 2)
+    assert q2.expected_fail and q2.reason
+    assert q2.dense_top1 < acc.DENSE_TOP1_FLOOR[2]
+    assert not b2.expected_fail
+    assert b2.dense_top1 >= acc.DENSE_TOP1_FLOOR[2]
+    for cell in (q2, b2):
+        assert cell.oracle_top1 >= acc.ORACLE_TOP1_FLOOR
+        assert cell.oracle_mse <= acc.ORACLE_MSE_CEIL
+        # stored_bits_ratio is a compression FACTOR (dense bytes over
+        # stored bytes): every compressed cell beats dense storage
+        assert cell.stored_bits_ratio > 1.0
+        assert cell.container_bytes > 0
+
+
+def test_lenet_cells_match_committed_rows(lenet_env):
+    """The two live cells agree with their committed rows: container
+    bytes exactly, accuracy within the committed regression tolerance."""
+    committed = json.loads(BENCH.read_text())["cells"]
+    for policy, bits in (("quant", 2), ("bfp8", 2)):
+        live = lenet_env.evaluate(policy, bits)
+        row = committed[acc.cell_key("lenet", policy, bits)]
+        assert live.container_bytes == row["container_bytes"]
+        assert abs(live.stored_bits_ratio - row["stored_bits_ratio"]) < 1e-6
+        assert live.dense_top1 >= row["dense_top1"] - acc.TOP1_REGRESSION_TOL
